@@ -1,0 +1,55 @@
+"""Shared benchmark utilities: timing, graph suite, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.graph import generators, pack_ell
+
+
+def bench(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall-time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6, r
+
+
+_SUITE_CACHE = {}
+
+
+def suite(small: bool = True):
+    """Benchmark graphs mirroring the paper's regimes (reduced scale):
+    power-law social (KR/TW), uniform random (RD), road (ER/RC)."""
+    key = small
+    if key not in _SUITE_CACHE:
+        if small:
+            gs = {
+                "rmat": generators.rmat(12, 8, seed=1),       # 4k nodes power-law
+                "uniform": generators.uniform_random(4096, 32768, seed=3),
+                "road": generators.grid2d(64, seed=5),        # 4k nodes, diam 126
+            }
+        else:
+            gs = {
+                "rmat": generators.rmat(14, 16, seed=1),
+                "uniform": generators.uniform_random(16384, 262144, seed=3),
+                "road": generators.grid2d(160, seed=5),
+            }
+        _SUITE_CACHE[key] = {k: (g, pack_ell(g.inc)) for k, g in gs.items()}
+    return _SUITE_CACHE[key]
+
+
+def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,38 @@
+"""Fig. 8 analogue: filter/direction activation patterns per algorithm x graph.
+
+Paper: BFS/SSSP use ballot in the middle iterations and online at both ends
+on social graphs; road graphs (ER/RC) never leave the online filter; k-core
+activates ballot only in the first iterations; BP/PageRank exactly at iter 0.
+Emits the mode trace (0=push/online, 1=pull/ballot) as the derived column."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core.engine import EngineConfig, run
+
+from benchmarks.common import emit, suite
+
+
+def main(small=True):
+    rows = []
+    for gname, (g, pack) in suite(small).items():
+        n, m = g.n_nodes, g.n_edges
+        cfg = EngineConfig(frontier_cap=n, edge_cap=m)
+        for aname, mk in (
+            ("bfs", lambda: A.bfs(0)),
+            ("sssp", lambda: A.sssp(0)),
+            ("kcore", lambda: A.kcore(k=8)),
+            ("bp", lambda: A.belief_propagation(n_iters=6)),
+        ):
+            _, stats = run(mk(), g, pack, cfg)
+            it = int(stats["iterations"])
+            tr = np.asarray(stats["mode_trace"])[:it]
+            pattern = "".join(str(int(x)) for x in tr[:40])
+            rows.append((f"fig8/{aname}/{gname}", it, pattern))
+    return emit(rows, header=("name", "iterations", "mode_trace"))
+
+
+if __name__ == "__main__":
+    main()

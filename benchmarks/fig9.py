@@ -1,0 +1,41 @@
+"""Fig. 9(a) analogue: the online-filter overflow threshold sweep.
+
+Paper: "a too low or too high threshold limits the performance" (they fix 64
+per thread bin). Our TPU adaptation's equivalent knob is the static push-phase
+edge budget `edge_cap`: too LOW forces early switches to full-graph pull
+passes; too HIGH makes every push iteration pay for an O(edge_cap) expansion
+buffer (cumsum/searchsorted over the whole budget) even when the frontier is
+four edges — the sweep exposes the sweet spot per graph regime.
+`derived` = time / best-time-for-that-(algo,graph).
+"""
+
+from __future__ import annotations
+
+from repro.core import algorithms as A
+from repro.core.engine import EngineConfig, run
+
+from benchmarks.common import bench, emit, suite
+
+
+def main(small=True):
+    rows = []
+    for gname, (g, pack) in suite(small).items():
+        n, m = g.n_nodes, g.n_edges
+        caps = [512, 2048, 8192, 32768, m]
+        caps = sorted({min(c, m) for c in caps})
+        for aname, mk in (("bfs", lambda: A.bfs(0)), ("sssp", lambda: A.sssp(0))):
+            times = {}
+            for cap in caps:
+                cfg = EngineConfig(frontier_cap=n, edge_cap=cap)
+                times[cap], _ = bench(lambda: run(mk(), g, pack, cfg)[0])
+            best = min(times.values())
+            for cap in caps:
+                rows.append((
+                    f"fig9/{aname}/{gname}/edge_cap={cap}",
+                    round(times[cap], 1), round(times[cap] / best, 3),
+                ))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

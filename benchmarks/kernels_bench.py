@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs XLA reference paths.
+On CPU the interpret numbers measure semantics, not TPU perf — the TPU story
+is the dry-run roofline; this bench exists to regression-track shapes and
+verify wrappers dispatch. `derived` = ref_time / kernel_time."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import bench, emit
+
+
+def main(small=True):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    r, w, n, d = 512, 32, 4096, 64
+    nbr = jnp.array(rng.integers(0, n + 1, size=(r, w)), jnp.int32)
+    wgt = jnp.array(rng.random((r, w)), jnp.float32)
+    feats = jnp.array(rng.random((n + 1, d)), jnp.float32)
+    t_ref, _ = bench(lambda: ref.ell_spmm_ref(nbr, wgt, feats))
+    t_k, _ = bench(lambda: ops.ell_spmm(nbr, wgt, feats))
+    rows.append(("kernel/ell_spmm", round(t_k, 1), round(t_ref / t_k, 3)))
+
+    mask = jnp.array(rng.random(1 << 16) < 0.2)
+    t_ref, _ = bench(lambda: ops.frontier_pack(mask, cap=1 << 16, use_xla=True))
+    t_k, _ = bench(lambda: ops.frontier_pack(mask, cap=1 << 16, block=2048))
+    rows.append(("kernel/frontier_pack", round(t_k, 1), round(t_ref / t_k, 3)))
+
+    tab = jnp.array(rng.random((10_000, 16)), jnp.float32)
+    idx = jnp.array(rng.integers(0, 10_000, size=(64, 8)), jnp.int32)
+    t_ref, _ = bench(lambda: ref.embedding_bag_ref(tab, idx))
+    t_k, _ = bench(lambda: ops.embedding_bag(tab, idx))
+    rows.append(("kernel/embedding_bag", round(t_k, 1), round(t_ref / t_k, 3)))
+
+    q = jnp.array(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.array(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.array(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    t_ref, _ = bench(lambda: ref.attention_ref(q, k, v))
+    t_k, _ = bench(lambda: ops.attention(q, k, v, block_q=64, block_kv=64))
+    rows.append(("kernel/flash_attention", round(t_k, 1), round(t_ref / t_k, 3)))
+
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

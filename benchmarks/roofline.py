@@ -1,0 +1,58 @@
+"""Roofline report: reads dryrun_results.jsonl and prints the per-cell
+three-term table (EXPERIMENTS.md §Roofline is generated from this)."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(path="dryrun_results.jsonl"):
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r  # keep latest
+    return list(recs.values())
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main(path="dryrun_results.jsonl", mesh_filter=None):
+    recs = load(path)
+    rows = []
+    hdr = ("cell", "mesh", "status", "compute", "memory", "collective",
+           "dominant", "mflops_ratio", "roofline_frac")
+    print(",".join(hdr))
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        cell = f"{r['arch']}/{r['shape']}"
+        if r["status"] != "OK":
+            print(f"{cell},{r['mesh']},{r['status']},-,-,-,-,-,-")
+            continue
+        rf = r["roofline"]
+        print(",".join(str(x) for x in (
+            cell, r["mesh"], "OK",
+            fmt_s(rf["compute_s"]), fmt_s(rf["memory_s"]),
+            fmt_s(rf["collective_s"]), rf["dominant"],
+            rf["model_flops_ratio"] and round(rf["model_flops_ratio"], 3),
+            rf["roofline_frac"] and round(rf["roofline_frac"], 4),
+        )))
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,49 @@
+"""Benchmark runner: one module per paper table/figure + the roofline report.
+Prints ``name,us_per_call,derived`` CSV blocks per suite.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only table4,fig5,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger graphs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig5, fig8, fig9, fig12, fig13, kernels_bench,
+                            table2, table4)
+    from benchmarks import roofline
+
+    suites = {
+        "table4": lambda: table4.main(small=not args.full),
+        "fig5": lambda: fig5.main(small=not args.full),
+        "fig9": lambda: fig9.main(small=not args.full),
+        "fig12": lambda: fig12.main(small=not args.full),
+        "fig13": lambda: fig13.main(small=not args.full),
+        "fig8": lambda: fig8.main(small=not args.full),
+        "table2": lambda: table2.main(small=not args.full),
+        "kernels": lambda: kernels_bench.main(small=not args.full),
+        "roofline": lambda: roofline.main(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"\n# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — keep the suite running
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+        print(f"# ({name}: {time.time()-t0:.1f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

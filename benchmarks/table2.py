@@ -1,0 +1,61 @@
+"""Table 2 analogue: 'register consumption' of fusion strategies.
+
+GPU registers/thread have no direct TPU meaning; the costs the paper's Table 2
+tracks map to: (a) HLO op count of the compiled step (code size the loop body
+carries), (b) kernel-launch count per run ('none' = one dispatch per
+iteration; fused = 1), (c) peak temp buffer bytes.  `derived` = dispatches."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import algorithms as A
+from repro.core.engine import (
+    EngineConfig, _make_step, init_state, run,
+)
+
+from benchmarks.common import emit, suite
+
+
+def _hlo_ops(lowered) -> int:
+    return lowered.compile().as_text().count("\n")
+
+
+def main(small=True):
+    rows = []
+    g, pack = suite(small)["rmat"]
+    n, m = g.n_nodes, g.n_edges
+    for aname, mk in (("bfs", lambda: A.bfs(0)), ("sssp", lambda: A.sssp(0))):
+        prog = mk()
+        for fusion in ("pushpull", "all", "none"):
+            cfg = EngineConfig(frontier_cap=n, edge_cap=m, fusion=fusion)
+            md, stats = run(prog, g, pack, cfg)
+            iters = int(stats["iterations"])
+            if fusion == "none":
+                dispatches = iters            # one jit call per iteration
+            else:
+                dispatches = 1                 # whole loop in one executable
+            # compile the fused executable to measure code size + temp bytes
+            st0 = init_state(prog, g, cfg)
+            step = _make_step(prog, g, pack, cfg)
+            if fusion == "none":
+                low = jax.jit(step).lower(st0)
+            else:
+                low = jax.jit(
+                    lambda s: jax.lax.while_loop(lambda x: ~x.done, step, s)
+                ).lower(st0)
+            comp = low.compile()
+            mem = comp.memory_analysis()
+            temp = getattr(mem, "temp_size_in_bytes", 0)
+            ops = comp.as_text().count(" = ")
+            rows.append((
+                f"table2/{fusion}/{aname}/hlo_ops", ops, dispatches,
+            ))
+            rows.append((
+                f"table2/{fusion}/{aname}/temp_bytes", temp, dispatches,
+            ))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

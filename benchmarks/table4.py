@@ -1,0 +1,47 @@
+"""Table 4 analogue: runtime of each algorithm x graph on the SIMD-X engine
+vs the atomic-update (Gunrock-style) and batch-filter baselines.
+`derived` column = speedup of the SIMD-X engine over that baseline."""
+
+from __future__ import annotations
+
+from repro.core import algorithms as A
+from repro.core import baselines
+from repro.core.engine import EngineConfig, run
+
+from benchmarks.common import bench, emit, suite
+
+
+def programs():
+    return {
+        "bfs": lambda: A.bfs(0),
+        "sssp": lambda: A.sssp(0),
+        "pagerank": lambda: A.pagerank(max_iters=32),
+        "kcore": lambda: A.kcore(k=8),
+        "bp": lambda: A.belief_propagation(n_iters=8),
+    }
+
+
+def main(small=True):
+    rows = []
+    for gname, (g, pack) in suite(small).items():
+        n, m = g.n_nodes, g.n_edges
+        cfg = EngineConfig(frontier_cap=n, edge_cap=m)
+        for aname, mk in programs().items():
+            t_simdx, _ = bench(lambda: run(mk(), g, pack, cfg)[0])
+            rows.append((f"table4/simdx/{aname}/{gname}", round(t_simdx, 1), 1.0))
+            t_atomic, _ = bench(lambda: baselines.run_atomic(mk(), g, cfg)[0])
+            rows.append((
+                f"table4/atomic/{aname}/{gname}", round(t_atomic, 1),
+                round(t_atomic / t_simdx, 3),
+            ))
+            if aname in ("bfs", "sssp"):
+                t_batch, _ = bench(lambda: baselines.run_batch_filter(mk(), g, cfg)[0])
+                rows.append((
+                    f"table4/batchfilter/{aname}/{gname}", round(t_batch, 1),
+                    round(t_batch / t_simdx, 3),
+                ))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Quickstart: write a graph algorithm in ~10 lines of ACC and run it on the
+SIMD-X engine (the paper's headline: 'tens of lines of code').
+
+Here: single-source widest-path (maximin bottleneck) — an algorithm NOT in
+the paper, defined from scratch with Active/Compute/Combine to show the
+model's expressiveness.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acc import ACCProgram, Combiner
+from repro.core.engine import EngineConfig, run
+from repro.graph import generators, pack_ell
+
+
+def widest_path(src: int) -> ACCProgram:
+    """width[v] = max over paths of the min edge weight along the path."""
+
+    def init(n, deg, source=src):
+        w0 = jnp.zeros((n + 1,), jnp.float32).at[source].set(jnp.inf)
+        return {"width": w0}, jnp.asarray([source])
+
+    # Compute: the width through edge (u -> v) is min(width[u], w_uv)
+    def compute(sender, w, receiver):
+        return jnp.minimum(sender["width"], w)
+
+    # Combine: keep the MAX candidate width per destination
+    def active(new, old, it):
+        return new["width"] > old["width"]
+
+    return ACCProgram(
+        name="widest_path",
+        combiner=Combiner("max", "aggregation"),
+        init=init, compute=compute, active=active, primary="width",
+    )
+
+
+def main():
+    g = generators.rmat(11, 8, seed=7)           # 2048-node power-law graph
+    pack = pack_ell(g.inc)
+    cfg = EngineConfig(frontier_cap=g.n_nodes, edge_cap=g.n_edges)
+    md, stats = run(widest_path(0), g, pack, cfg)
+
+    width = np.asarray(md["width"][: g.n_nodes])
+    reached = np.isfinite(width) & (width > 0)
+    print(f"graph: {g.n_nodes} vertices / {g.n_edges} edges")
+    print(f"iterations: {int(stats['iterations'])} "
+          f"(push {int(stats['push_iters'])}, pull {int(stats['pull_iters'])}, "
+          f"{int(stats['switches'])} JIT filter switches)")
+    print(f"reachable: {int(reached.sum())} vertices; "
+          f"median bottleneck width {np.median(width[reached]):.0f}")
+
+    # sanity: verify against a numpy maximin Dijkstra
+    rp, ci, w = (np.asarray(g.out.row_ptr), np.asarray(g.out.col_idx),
+                 np.asarray(g.out.weights))
+    import heapq
+
+    exp = np.zeros(g.n_nodes)
+    exp[0] = np.inf
+    h = [(-np.inf, 0)]
+    while h:
+        negw, v = heapq.heappop(h)
+        if -negw < exp[v]:
+            continue
+        for e in range(rp[v], rp[v + 1]):
+            u, cand = ci[e], min(exp[v], w[e])
+            if cand > exp[u]:
+                exp[u] = cand
+                heapq.heappush(h, (-cand, u))
+    ok = np.allclose(np.where(np.isinf(width), np.inf, width),
+                     np.where(np.isinf(exp), np.inf, exp))
+    print("matches numpy maximin-dijkstra:", ok)
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

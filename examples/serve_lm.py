@@ -1,0 +1,11 @@
+"""Batched LM serving with continuous batching (prefill + decode slots).
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 6 --slots 3
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    raise SystemExit(serve_main(sys.argv[1:]))

@@ -1,0 +1,3 @@
+"""repro: SIMD-X (ACC graph processing) reproduced as a multi-pod JAX/TPU framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,145 @@
+"""Checkpointing: atomic, async, keep-N, elastic restore.
+
+Format: one directory per step containing `arrays.npz` (leaf arrays keyed by
+flattened path) + `manifest.json` (step, keys, shapes, dtypes).  Writes go to
+`<dir>/tmp.<step>` then `os.replace` -> crash-safe.  `restore` can re-shard
+onto a *different* mesh (elastic scaling): leaves are loaded on host and
+`jax.device_put` with the new shardings.
+
+The data-iterator state (a small dict) rides along in the manifest so resumed
+jobs continue the stream deterministically.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree, step: int, extra: Optional[dict] = None):
+    """Atomic checkpoint write."""
+    parent = os.path.dirname(path) or "."
+    os.makedirs(parent, exist_ok=True)
+    tmp = os.path.join(parent, f".tmp.{os.path.basename(path)}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": list(arrays.keys()),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+
+
+def restore(path: str, target_tree, shardings=None):
+    """Load into the structure of `target_tree`; optionally device_put with
+    per-leaf `shardings` (same structure) — this is the elastic-restore path:
+    a checkpoint written on one mesh reshardes onto another."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    out = []
+    for p, leaf in leaves_p:
+        key = "/".join(_path_str(x) for x in p)
+        arr = arrays[key]
+        out.append(arr.astype(np.asarray(leaf).dtype).reshape(np.asarray(leaf).shape))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings
+        )
+    return tree
+
+
+def manifest(path: str) -> dict:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)
+
+
+class CheckpointManager:
+    """keep-N rotation + async save + latest-step discovery."""
+
+    def __init__(self, directory: str, keep_n: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dirs(self) -> list[tuple[int, str]]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m:
+                out.append((int(m.group(1)), os.path.join(self.dir, d)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        dirs = self._step_dirs()
+        return dirs[-1][0] if dirs else None
+
+    def path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step}")
+
+    def save(self, step: int, tree, extra: Optional[dict] = None, block: bool = False):
+        # snapshot to host NOW (donated buffers may be reused by next step)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _do():
+            save(self.path(step), host_tree, step, extra)
+            self._gc()
+
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, target_tree, shardings=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        p = self.path(step)
+        return restore(p, target_tree, shardings), manifest(p)
+
+    def _gc(self):
+        dirs = self._step_dirs()
+        for _, d in dirs[: -self.keep_n]:
+            shutil.rmtree(d, ignore_errors=True)

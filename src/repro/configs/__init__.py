@@ -1,0 +1,6 @@
+"""Assigned-architecture configs. Import side effect: registry population."""
+
+from repro.configs.registry import ArchSpec, cells, get, names
+from repro.configs import lm_archs, gnn_archs  # noqa: F401  (register archs)
+
+__all__ = ["ArchSpec", "cells", "get", "names"]

@@ -1,0 +1,77 @@
+"""Architecture registry: assigned archs x their shape grids (40 cells).
+
+Every assigned architecture is a selectable config (`--arch <id>`); each
+carries its own input-shape set so every (arch x shape) cell is well-defined
+for the dry-run, plus a `reduced()` config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+#: LM shape grid (seq_len, global_batch, kind)
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    # long-context decode: 1 new token vs a 512k cache. All five assigned LM
+    # archs are pure full-attention (GQA) -> per the brief this cell is
+    # SKIPped; decode itself is linear-cost, so a bonus lowering is provided
+    # behind allow_bonus (DESIGN.md §4).
+    "long_500k": dict(seq=524288, batch=1, kind="decode", skip_full_attn=True),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, kind="full"),
+    "minibatch_lg": dict(
+        n_nodes=232965, n_edges=114615892, batch_nodes=1024,
+        fanout=(15, 10), d_feat=602, kind="sampled",
+    ),
+    "ogb_products": dict(n_nodes=2449029, n_edges=61859140, d_feat=100, kind="full"),
+    "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, kind="batched"),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="infer"),
+    "serve_bulk": dict(batch=262144, kind="infer"),
+    "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str                     # 'lm' | 'gnn' | 'dimenet' | 'recsys'
+    make_config: Callable[[], Any]  # full assigned config
+    make_reduced: Callable[[], Any]  # CPU smoke-test config
+    shapes: dict
+    notes: str = ""
+
+
+_REGISTRY: dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec):
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) dry-run cells."""
+    out = []
+    for n in names():
+        for s in _REGISTRY[n].shapes:
+            out.append((n, s))
+    return out

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: the ACC model + SIMD-X engine in JAX.
+
+  acc.py        -- Active/Compute/Combine programming model (paper Sec. 3)
+  frontier.py   -- JIT task management: online/ballot filters (paper Sec. 4)
+  engine.py     -- push-pull fused BSP engine (paper Sec. 5)
+  algorithms.py -- BFS/SSSP/WCC/PageRank/k-core/BP in ACC (paper Sec. 6)
+  baselines.py  -- atomic-update + single-filter + batch-filter baselines
+"""
+
+from repro.core.acc import ACCProgram, Combiner, MIN_AGG, MIN_VOTE, SUM_AGG, MAX_VOTE
+from repro.core.engine import EngineConfig, EngineState, run, init_state
+from repro.core import algorithms, baselines, frontier
+
+__all__ = [
+    "ACCProgram",
+    "Combiner",
+    "MIN_AGG",
+    "MIN_VOTE",
+    "SUM_AGG",
+    "MAX_VOTE",
+    "EngineConfig",
+    "EngineState",
+    "run",
+    "init_state",
+    "algorithms",
+    "baselines",
+    "frontier",
+]

@@ -1,0 +1,131 @@
+"""The ACC (Active-Compute-Combine) programming model — paper Sec. 3.
+
+A user program supplies three *data-parallel* functions plus an init:
+
+    Active  : (M_new, M_old, it) -> (n+1,) bool   which vertices enter the
+              next frontier (vectorized form of `active(M_v, v)`),
+    Compute : (sender_meta, w, receiver_meta) -> update    per-edge message
+              (vectorized over gathered edge endpoints; direction-agnostic so
+              the same function serves push and pull),
+    Combine : a commutative + associative monoid (min/max/sum/or) applied per
+              receiving vertex — realized as a keyed segment reduction, which
+              is the TPU-native *atomic-free* combine.
+
+plus an `apply` merging the combined update into vertex metadata (defaults to
+the monoid itself; PageRank/k-core override it).
+
+Vertex metadata `M` is a dict of (n+1,) arrays: slot `n` is the scratch slot
+that absorbs sentinel-padded edges and always holds the combiner identity.
+
+Combiner *kind* follows the paper: `vote` (idempotent — BFS/WCC; duplicates in
+the frontier are harmless) vs `aggregation` (sum-like — SSSP-sum/PR/k-core/BP;
+the engine dedupes online-filter output before re-expansion).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Meta = Dict[str, jnp.ndarray]
+
+_BIG = float(jnp.finfo(jnp.float32).max / 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class Combiner:
+    """⊕: commutative, associative, with identity."""
+
+    name: str                      # 'min' | 'max' | 'sum'
+    kind: str                      # 'vote' | 'aggregation'  (paper Sec. 3.2)
+
+    @property
+    def idempotent(self) -> bool:
+        return self.name in ("min", "max")
+
+    def identity(self, dtype=jnp.float32):
+        if self.name == "min":
+            return jnp.asarray(_BIG, dtype)
+        if self.name == "max":
+            return jnp.asarray(-_BIG, dtype)
+        if self.name == "sum":
+            return jnp.asarray(0, dtype)
+        raise ValueError(self.name)
+
+    def segment(self, vals: jnp.ndarray, ids: jnp.ndarray, num: int) -> jnp.ndarray:
+        if self.name == "min":
+            return jax.ops.segment_min(vals, ids, num_segments=num)
+        if self.name == "max":
+            return jax.ops.segment_max(vals, ids, num_segments=num)
+        if self.name == "sum":
+            return jax.ops.segment_sum(vals, ids, num_segments=num)
+        raise ValueError(self.name)
+
+    def pair(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+        if self.name == "min":
+            return jnp.minimum(a, b)
+        if self.name == "max":
+            return jnp.maximum(a, b)
+        if self.name == "sum":
+            return a + b
+        raise ValueError(self.name)
+
+    def reduce_axis(self, vals: jnp.ndarray, axis: int) -> jnp.ndarray:
+        if self.name == "min":
+            return jnp.min(vals, axis=axis)
+        if self.name == "max":
+            return jnp.max(vals, axis=axis)
+        if self.name == "sum":
+            return jnp.sum(vals, axis=axis)
+        raise ValueError(self.name)
+
+
+MIN_VOTE = Combiner("min", "vote")
+MIN_AGG = Combiner("min", "aggregation")
+SUM_AGG = Combiner("sum", "aggregation")
+MAX_VOTE = Combiner("max", "vote")
+
+
+@dataclasses.dataclass(frozen=True)
+class ACCProgram:
+    """A graph algorithm expressed in the ACC model (paper Fig. 4a)."""
+
+    name: str
+    combiner: Combiner
+    #: init(graph_nnodes, degrees, **kw) -> (M0, frontier0_ids int32 array)
+    init: Callable[..., tuple[Meta, jnp.ndarray]]
+    #: per-edge message; sender/receiver are dicts of gathered metadata
+    compute: Callable[[Meta, jnp.ndarray, Meta], jnp.ndarray]
+    #: which vertices are active next iteration (paper's Active)
+    active: Callable[[Meta, Meta, jnp.ndarray], jnp.ndarray]
+    #: merge combined updates into metadata; default = monoid on primary field
+    apply: Optional[Callable[[Meta, jnp.ndarray, jnp.ndarray], Meta]] = None
+    #: the field gathered for Compute and compared by the default apply
+    primary: str = "val"
+    #: 'both' | 'push' | 'pull' — modes the algorithm supports
+    modes: str = "both"
+    #: fixed iteration budget (None = run to empty frontier)
+    fixed_iters: Optional[int] = None
+
+    def default_apply(self, m: Meta, seg: jnp.ndarray, it: jnp.ndarray) -> Meta:
+        del it
+        out = dict(m)
+        out[self.primary] = self.combiner.pair(m[self.primary], seg)
+        return out
+
+    def run_apply(self, m: Meta, seg: jnp.ndarray, it: jnp.ndarray) -> Meta:
+        f = self.apply if self.apply is not None else self.default_apply
+        new = f(m, seg, it)
+        # keep the scratch slot at identity so sentinel gathers stay inert
+        out = {}
+        for k, v in new.items():
+            out[k] = v.at[-1].set(m[k][-1])
+        return out
+
+
+def gather_meta(m: Meta, idx: jnp.ndarray, fields: Optional[tuple] = None) -> Meta:
+    keys = fields if fields is not None else tuple(m.keys())
+    return {k: m[k][idx] for k in keys}

@@ -1,0 +1,353 @@
+"""Graph algorithms expressed in the ACC model (paper Sec. 3.3 + Sec. 6).
+
+Each program is "tens of lines" — the paper's ease-of-programming claim; the
+LOC counts are reported by benchmarks/loc.py.
+
+  BFS   — vote(min) over levels; push at frontier edges, pull in the middle.
+  SSSP  — aggregation(min) over relaxed distances (BSP relax of the whole
+          frontier, the delta-step-flavored variant the paper runs).
+  WCC   — vote(min) label propagation.
+  PageRank — aggregation(sum) of contributions; pull phase first, then
+          delta-push once most vertices are stable (paper Sec. 6), realized as
+          residual (Maiter-style delta) propagation.
+  k-Core — aggregation(sum) of deletions; includes the paper's optimization
+          "stop subtracting once the destination's degree goes below k".
+  BP    — damped sum-product style belief refresh; all-active aggregation
+          workload with a fixed iteration budget (paper uses BP as the dense
+          always-active extreme that activates the ballot filter at iter 0).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.acc import (
+    ACCProgram,
+    MIN_AGG,
+    MIN_VOTE,
+    SUM_AGG,
+    Combiner,
+    Meta,
+)
+
+# python float (not a jnp constant) so ACC compute closures stay
+# pallas-capturable
+BIG = float(jnp.finfo(jnp.float32).max / 4)
+
+
+# ---------------------------------------------------------------------------
+# BFS
+# ---------------------------------------------------------------------------
+
+
+def bfs(src: int) -> ACCProgram:
+    def init(n, deg, source=src):
+        dist = jnp.full((n + 1,), BIG, jnp.float32).at[source].set(0.0)
+        return {"dist": dist}, jnp.asarray([source])
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del receiver
+        return jnp.where(sender["dist"] < BIG, sender["dist"] + 1.0, BIG)
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return new["dist"] < old["dist"]
+
+    return ACCProgram(
+        name="bfs", combiner=MIN_VOTE, init=init, compute=compute,
+        active=active, primary="dist",
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSSP (positive weights; BSP frontier relaxation)
+# ---------------------------------------------------------------------------
+
+
+def sssp(src: int) -> ACCProgram:
+    def init(n, deg, source=src):
+        dist = jnp.full((n + 1,), BIG, jnp.float32).at[source].set(0.0)
+        return {"dist": dist}, jnp.asarray([source])
+
+    def compute(sender: Meta, w, receiver: Meta):
+        # paper Fig. 4a: new_dist = metadata[src] + w; Combine picks the min
+        del receiver
+        return jnp.where(sender["dist"] < BIG, sender["dist"] + w, BIG)
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return new["dist"] < old["dist"]
+
+    return ACCProgram(
+        name="sssp", combiner=MIN_AGG, init=init, compute=compute,
+        active=active, primary="dist",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Weakly connected components (label propagation)
+# ---------------------------------------------------------------------------
+
+
+def wcc() -> ACCProgram:
+    def init(n, deg):
+        comp = jnp.arange(n + 1, dtype=jnp.float32).at[n].set(BIG)
+        return {"comp": comp}, jnp.arange(n)
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["comp"]
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return new["comp"] < old["comp"]
+
+    return ACCProgram(
+        name="wcc", combiner=MIN_VOTE, init=init, compute=compute,
+        active=active, primary="comp",
+    )
+
+
+# ---------------------------------------------------------------------------
+# PageRank (pull first, delta-push when mostly stable — paper Sec. 6)
+# ---------------------------------------------------------------------------
+
+
+def pagerank(damping: float = 0.85, tol: float = 1e-4, max_iters: int = 64) -> ACCProgram:
+    def init(n, deg):
+        # primary = outgoing contribution rank/deg so Compute touches one field
+        rank = jnp.full((n + 1,), 1.0 / n, jnp.float32)
+        safe = jnp.maximum(deg, 1).astype(jnp.float32)
+        contrib = (rank[:-1] / safe)
+        contrib = jnp.concatenate([contrib, jnp.zeros((1,), jnp.float32)])
+        rank = rank.at[n].set(0.0)
+        degf = jnp.concatenate([safe, jnp.ones((1,), jnp.float32)])
+        return (
+            {"contrib": contrib, "rank": rank, "deg": degf},
+            jnp.arange(n),
+        )
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["contrib"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        n = m["rank"].shape[0] - 1
+        new_rank = (1.0 - damping) / n + damping * seg
+        return {
+            "rank": new_rank,
+            "contrib": new_rank / m["deg"],
+            "deg": m["deg"],
+        }
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return jnp.abs(new["rank"] - old["rank"]) > tol
+
+    return ACCProgram(
+        name="pagerank", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="contrib", modes="pull",
+        fixed_iters=max_iters,
+    )
+
+
+def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 128) -> ACCProgram:
+    """Delta/residual PageRank: the push phase the paper switches to "at the
+    end ... because the majority of the vertices are stable".  Metadata keeps
+    (rank, resid); active vertices push damped residual to neighbors."""
+
+    # absolute threshold scales with 1/n so convergence depth is
+    # size-independent (residual mass starts at 1/n per vertex); n is
+    # recovered statically from array shapes.
+    def _tol_abs(arr):
+        return tol / (arr.shape[0] - 1)
+
+    def init(n, deg):
+        rank = jnp.zeros((n + 1,), jnp.float32)
+        resid = jnp.full((n + 1,), 1.0 / n, jnp.float32).at[n].set(0.0)
+        safe = jnp.maximum(deg, 1).astype(jnp.float32)
+        degf = jnp.concatenate([safe, jnp.ones((1,), jnp.float32)])
+        send = jnp.where(resid > _tol_abs(resid), damping * resid / degf, 0.0)
+        return (
+            {"rank": rank, "resid": resid, "send": send, "deg": degf},
+            jnp.arange(n),
+        )
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["send"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        ta = _tol_abs(m["resid"])
+        # active vertices absorbed their residual into rank and pushed it;
+        # inactive keep theirs (their `send` was zero, see below).
+        act = m["resid"] > ta
+        rank = m["rank"] + jnp.where(act, m["resid"], 0.0)
+        resid = jnp.where(act, 0.0, m["resid"]) + seg
+        # zero send for sub-threshold vertices so pull-mode gathers stay
+        # consistent with the push-mode frontier semantics
+        send = jnp.where(resid > ta, damping * resid / m["deg"], 0.0)
+        return {"rank": rank, "resid": resid, "send": send, "deg": m["deg"]}
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return new["resid"] > _tol_abs(new["resid"])
+
+    return ACCProgram(
+        name="pagerank_delta", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="send", fixed_iters=max_iters,
+    )
+
+
+# ---------------------------------------------------------------------------
+# k-Core
+# ---------------------------------------------------------------------------
+
+
+def kcore(k: int = 16, max_iters: int = 512) -> ACCProgram:
+    """Iteratively delete vertices with degree < k. Frontier = vertices deleted
+    this iteration; each pushes a unit decrement to its still-alive neighbors.
+    `dead_now` is the primary so Compute reads one field."""
+
+    def init(n, deg, kk=k):
+        degf = jnp.concatenate(
+            [deg.astype(jnp.float32), jnp.zeros((1,), jnp.float32)]
+        )
+        dead_now = (degf < kk).at[-1].set(False)
+        alive = ~dead_now
+        degf = jnp.where(dead_now, 0.0, degf)
+        ids = jnp.nonzero(dead_now, size=n, fill_value=n)[0]
+        return (
+            {
+                "dead_now": dead_now.astype(jnp.float32),
+                "alive": alive.astype(jnp.float32),
+                "deg": degf,
+            },
+            ids,
+        )
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["dead_now"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        alive = m["alive"] > 0
+        # paper's k-core trick: stop decrementing once already below k / dead
+        deg = jnp.where(alive, jnp.maximum(m["deg"] - seg, 0.0), 0.0)
+        dead_now = alive & (deg < k) & (seg > 0)
+        return {
+            "dead_now": dead_now.astype(jnp.float32),
+            "alive": (alive & ~dead_now).astype(jnp.float32),
+            "deg": jnp.where(dead_now, 0.0, deg),
+        }
+
+    def active(new: Meta, old: Meta, it):
+        del it, old
+        return new["dead_now"] > 0
+
+    return ACCProgram(
+        name="kcore", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="dead_now", fixed_iters=max_iters,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Belief propagation (damped, log-domain influence aggregation)
+# ---------------------------------------------------------------------------
+
+
+def belief_propagation(n_iters: int = 16, damping: float = 0.5) -> ACCProgram:
+    """All-active aggregation workload (paper Sec. 6): every vertex refreshes
+    its belief from a weighted sum of neighbor beliefs each iteration, for a
+    fixed budget. Stresses the ballot filter at iteration 0 (paper Fig. 8)."""
+
+    def init(n, deg, priors=None):
+        if priors is None:
+            # deterministic pseudo-priors in (0,1)
+            x = jnp.arange(n, dtype=jnp.float32)
+            priors = 0.5 + 0.4 * jnp.sin(x * 12.9898)
+        b = jnp.concatenate([priors.astype(jnp.float32), jnp.zeros((1,), jnp.float32)])
+        return {"belief": b, "prior": b}, jnp.arange(n)
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del receiver
+        return sender["belief"] * w
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        new_b = (1 - damping) * m["prior"] + damping * jnp.tanh(seg * 0.01)
+        return {"belief": new_b, "prior": m["prior"]}
+
+    def active(new: Meta, old: Meta, it):
+        return jnp.full(new["belief"].shape, it + 1 < n_iters)
+
+    return ACCProgram(
+        name="bp", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="belief", modes="pull",
+        fixed_iters=n_iters,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Maximal independent set (Luby) — beyond the paper's suite; exercises the
+# vote/max combiner with multi-round set semantics
+# ---------------------------------------------------------------------------
+
+
+def mis(seed: int = 0, max_iters: int = 128) -> ACCProgram:
+    """Luby's algorithm in ACC: every undecided vertex holds a fixed random
+    priority; each round it learns the max priority among undecided
+    neighbours (Compute sends priority, Combine = max). A vertex whose own
+    priority beats every neighbour joins the set; neighbours of members are
+    excluded. state: 0 undecided, 1 in-set, 2 excluded."""
+
+    def init(n, deg, s=seed):
+        x = jnp.arange(n, dtype=jnp.float32)
+        pri = 0.5 + 0.49 * jnp.sin((x + 1.23 * s) * 12.9898) \
+            + x / (1e3 * n)  # tie-break: unique priorities
+        pri = jnp.concatenate([pri, jnp.full((1,), -BIG, jnp.float32)])
+        state = jnp.zeros((n + 1,), jnp.float32)
+        # primary 'sig' = what a vertex broadcasts: its priority while
+        # undecided, +BIG once in-set (to exclude neighbours), -BIG when out
+        return {"sig": pri, "pri": pri, "state": state}, jnp.arange(n)
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["sig"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        undecided = m["state"] == 0
+        nbr_max = seg                             # max over neighbours
+        excluded = undecided & (nbr_max >= BIG / 2)      # a neighbour joined
+        winner = undecided & ~excluded & (m["pri"] > nbr_max)
+        state = jnp.where(winner, 1.0, jnp.where(excluded, 2.0, m["state"]))
+        sig = jnp.where(state == 1.0, BIG,
+                        jnp.where(state == 2.0, -BIG, m["pri"]))
+        return {"sig": sig, "pri": m["pri"], "state": state}
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        # keep iterating while anything is still undecided or just changed
+        return (new["state"] == 0) | (new["state"] != old["state"])
+
+    return ACCProgram(
+        name="mis", combiner=Combiner("max", "vote"), init=init,
+        compute=compute, active=active, apply=apply, primary="sig",
+        modes="pull", fixed_iters=max_iters,
+    )
+
+
+ALL = {
+    "bfs": bfs,
+    "sssp": sssp,
+    "wcc": wcc,
+    "pagerank": pagerank,
+    "pagerank_delta": pagerank_delta,
+    "kcore": kcore,
+    "bp": belief_propagation,
+    "mis": mis,
+}

@@ -1,0 +1,174 @@
+"""Baseline engines the paper compares against (for Fig. 5 / Fig. 12 repro).
+
+  * atomic_engine  — Gunrock-style: Compute writes straight to vertex state
+    with conflicting scatter-min/add (`.at[].min/.add`), i.e. the
+    atomic-update model; frontier from a dense scan each iteration.
+  * ballot_only / online_only — single-filter ablations of the JIT manager
+    (ballot_only forces a full metadata scan every iteration; online_only
+    forces push-style compaction and *fails* (reports overflow) when the
+    frontier exceeds capacity — exactly the failure mode in paper Fig. 12
+    where "online filter alone cannot work for many graphs").
+  * batch_engine — batch-filter style: materializes the full active-edge
+    buffer sized O(2|E|) every iteration (memory cost is the point).
+
+All share the ACC programs; only filtering/update strategy differs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as F
+from repro.core.acc import ACCProgram, gather_meta
+from repro.core.engine import (
+    EngineConfig,
+    EngineState,
+    PUSH,
+    PULL,
+    _policy,
+    _pull_step,
+    _push_step,
+    expand_frontier,
+    init_state,
+)
+from repro.graph.csr import Graph
+from repro.graph.packing import EllPack
+
+
+def run_filter_ablation(
+    program: ACCProgram,
+    g: Graph,
+    pack: EllPack,
+    cfg: EngineConfig,
+    which: str,
+    **init_kw,
+):
+    """Force a single filter: 'online' => always push+online filter,
+    'ballot' => always pull+ballot filter (full scan per iteration)."""
+    st0 = init_state(program, g, cfg, **init_kw)
+    forced = PUSH if which == "online" else PULL
+    st0 = st0._replace(mode=forced)
+
+    @functools.partial(jax.jit, static_argnums=(0,))
+    def go(_tag, st):
+        def body(s):
+            if which == "online":
+                s = _push_step(program, g.out, cfg, s)
+            else:
+                s = _pull_step(program, pack, cfg, s, g.out, None)
+            s = _policy(program, cfg, g.n_edges, s)
+            return s._replace(mode=forced)
+
+        def cond(s):
+            halt = s.done
+            if which == "online":
+                halt = halt | s.overflow  # online alone dies on overflow
+            return ~halt
+
+        return jax.lax.while_loop(cond, body, st)
+
+    final = go(which, st0)
+    stats = {
+        "iterations": final.it,
+        "failed_overflow": final.overflow if which == "online" else jnp.asarray(False),
+        "final_count": final.count,
+    }
+    return final.m, stats
+
+
+def run_atomic(program: ACCProgram, g: Graph, cfg: EngineConfig, **init_kw):
+    """Gunrock-style atomic-update engine: scatter-combine straight into
+    vertex metadata (no edge->vertex reduction stage), dense rescan filter."""
+    st0 = init_state(program, g, cfg, **init_kw)
+    comb = program.combiner
+    n = g.n_nodes
+
+    def scatter_combine(vals, dst, base):
+        upd = base
+        if comb.name == "min":
+            upd = upd.at[dst].min(vals, mode="drop")
+        elif comb.name == "max":
+            upd = upd.at[dst].max(vals, mode="drop")
+        elif comb.name == "sum":
+            upd = upd.at[dst].add(vals, mode="drop")
+        return upd
+
+    @jax.jit
+    def go(st):
+        def body(s):
+            src, dst, w, valid_e, _ = expand_frontier(g.out, s.frontier, s.count, cfg.edge_cap)
+            sender = gather_meta(s.m, src)
+            receiver = gather_meta(s.m, dst)
+            upd = program.compute(sender, w, receiver)
+            upd = jnp.where(valid_e, upd, comb.identity(upd.dtype))
+            # "atomic" path: conflicting scatter into a combine buffer seeded
+            # with identity, then the same apply as the ACC engine
+            seg = jnp.full((n + 1,), comb.identity(upd.dtype))
+            seg = scatter_combine(upd, dst, seg)
+            m_new = program.run_apply(s.m, seg, s.it)
+            changed_v = program.active(m_new, s.m, s.it).at[-1].set(False)
+            ids, count, ovf = F.ballot_filter(changed_v, cfg.frontier_cap, n)
+            it = s.it + 1
+            max_it = program.fixed_iters if program.fixed_iters is not None else cfg.max_iters
+            return s._replace(
+                m=m_new, frontier=ids, count=count, overflow=ovf, it=it,
+                done=(count == 0) | (it >= max_it),
+            )
+
+        return jax.lax.while_loop(lambda s: ~s.done, body, st)
+
+    final = go(st0)
+    return final.m, {"iterations": final.it, "final_count": final.count}
+
+
+def run_batch_filter(program: ACCProgram, g: Graph, cfg: EngineConfig, **init_kw):
+    """Batch-filter engine (paper Fig. 6a): builds the FULL active edge list
+    (buffer sized n_edges — the O(2|E|) cost the paper criticizes; for
+    undirected graphs our CSR already stores both directions), then updates
+    and emits an unsorted redundant frontier from the edge buffer."""
+    big_cfg = EngineConfig(
+        frontier_cap=cfg.frontier_cap,
+        edge_cap=g.n_edges,            # always the full edge buffer
+        fusion=cfg.fusion,
+        alpha=cfg.alpha,
+        max_iters=cfg.max_iters,
+        trace_len=cfg.trace_len,
+    )
+    st0 = init_state(program, g, big_cfg, **init_kw)
+    comb = program.combiner
+    n = g.n_nodes
+
+    @jax.jit
+    def go(st):
+        def body(s):
+            src, dst, w, valid_e, _ = expand_frontier(
+                g.out, s.frontier, s.count, big_cfg.edge_cap
+            )
+            sender = gather_meta(s.m, src)
+            receiver = gather_meta(s.m, dst)
+            upd = program.compute(sender, w, receiver)
+            upd = jnp.where(valid_e, upd, comb.identity(upd.dtype))
+            seg = comb.segment(upd, dst, n + 1)
+            m_new = program.run_apply(s.m, seg, s.it)
+            new_d = gather_meta(m_new, dst)
+            old_d = gather_meta(s.m, dst)
+            changed_e = program.active(new_d, old_d, s.it) & valid_e
+            # always dedupe here: batch filter has no pull fallback, so the
+            # static frontier buffer must never overflow from redundancy
+            changed_e = F.dedupe_winners(changed_e, dst, n)
+            ids, count, ovf = F.online_filter(changed_e, dst, big_cfg.frontier_cap, n)
+            it = s.it + 1
+            max_it = program.fixed_iters if program.fixed_iters is not None else big_cfg.max_iters
+            return s._replace(
+                m=m_new, frontier=ids, count=count, overflow=ovf, it=it,
+                done=(count == 0) | (it >= max_it),
+            )
+
+        return jax.lax.while_loop(lambda s: ~s.done, body, st)
+
+    final = go(st0)
+    return final.m, {"iterations": final.it, "final_count": final.count}

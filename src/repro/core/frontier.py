@@ -1,0 +1,130 @@
+"""Just-in-time task management — paper Sec. 4, adapted to TPU.
+
+Three filters build the next-iteration active list:
+
+  * online_filter  — O(frontier-edges): compacts the *changed destinations*
+    straight out of the push step's edge buffer.  Output may be unsorted /
+    duplicated (paper: "the vertices in the active list may become redundant,
+    and out of order") and OVERFLOWS when more than `cap` destinations change
+    — exactly the paper's thread-bin overflow, hoisted from per-thread bins of
+    64 entries to one static-shape device buffer.
+
+  * ballot_filter  — O(|V|): full scan of the changed-mask with a prefix-sum
+    stream compaction.  The mask+cumsum+scatter is the TPU analogue of
+    `__ballot()` + warp scan; output is **sorted and unique** by construction
+    (the property the paper's ballot filter is designed for: coalesced access
+    next iteration).
+
+  * batch_filter   — the Gunrock-style baseline the paper argues against:
+    materializes the full active-edge list first (O(2|E|) memory), then
+    filters.  Kept for the Fig. 12 comparison.
+
+`dedupe_winners` implements exact-once frontier entries for non-idempotent
+(aggregation) combiners via a winner-takes-dst scatter-max — the replacement
+for the paper's "first thread of the warp applies the update" rule.
+
+All functions are shape-static and jit/while_loop safe.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_mask(mask: jnp.ndarray, cap: int, fill: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Stream-compact indices of True lanes of `mask` (any length) into a
+    (cap,) buffer. Returns (ids, count, overflow). Sorted & unique when `mask`
+    is a dense per-vertex mask (ballot), sorted-by-edge-order when it is an
+    edge mask (online)."""
+    mask = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask) - 1                      # inclusive scan -> rank
+    count = pos[-1] + 1 if mask.shape[0] > 0 else jnp.int32(0)
+    count = jnp.asarray(count, jnp.int32)
+    overflow = count > cap
+    ids_src = jnp.arange(mask.shape[0], dtype=jnp.int32)
+    tgt = jnp.where((mask > 0) & (pos < cap), pos, cap)
+    buf = jnp.full((cap + 1,), fill, dtype=jnp.int32)
+    buf = buf.at[tgt].set(ids_src, mode="drop")
+    return buf[:cap], jnp.minimum(count, cap), overflow
+
+
+def compact_values(
+    flags: jnp.ndarray, values: jnp.ndarray, cap: int, fill: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Compact `values[flags]` into a (cap,) buffer (order-preserving)."""
+    f = flags.astype(jnp.int32)
+    pos = jnp.cumsum(f) - 1
+    count = jnp.asarray(pos[-1] + 1, jnp.int32)
+    overflow = count > cap
+    tgt = jnp.where((f > 0) & (pos < cap), pos, cap)
+    buf = jnp.full((cap + 1,), fill, dtype=jnp.int32)
+    buf = buf.at[tgt].set(values.astype(jnp.int32), mode="drop")
+    return buf[:cap], jnp.minimum(count, cap), overflow
+
+
+def online_filter(
+    changed_e: jnp.ndarray, dst_e: jnp.ndarray, cap: int, n_nodes: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper's online filter: record activated destinations during compute.
+
+    changed_e: (E,) bool — this edge newly-activated its destination.
+    dst_e:     (E,) int32 destination ids (sentinel n for invalid lanes).
+    Cost O(E) in the *edge budget*, independent of |V|.
+    """
+    return compact_values(changed_e, dst_e, cap, fill=n_nodes)
+
+
+def ballot_filter(
+    changed_v: jnp.ndarray, cap: int, n_nodes: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Paper's ballot filter: full metadata scan -> sorted unique active list.
+
+    changed_v: (n+1,) bool dense mask (scratch lane must be False).
+    """
+    return compact_mask(changed_v[:n_nodes], cap, fill=n_nodes)
+
+
+def dedupe_winners(
+    changed_e: jnp.ndarray, dst_e: jnp.ndarray, n_nodes: int
+) -> jnp.ndarray:
+    """Keep exactly one True lane per destination: the highest edge index wins
+    (scatter-max tournament). O(E) scatter + O(V) memset; replaces the paper's
+    'lane 0 of the warp enqueues' rule for aggregation combiners."""
+    e = jnp.arange(changed_e.shape[0], dtype=jnp.int32) + 1
+    ticket = jnp.where(changed_e, e, 0)
+    winner = jnp.zeros((n_nodes + 1,), jnp.int32).at[dst_e].max(ticket, mode="drop")
+    return changed_e & (winner[dst_e] == ticket)
+
+
+def batch_filter(
+    upd_e: jnp.ndarray,
+    dst_e: jnp.ndarray,
+    old_vals: jnp.ndarray,
+    cap: int,
+    n_nodes: int,
+    better,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Gunrock-style batch filter baseline (paper Fig. 6a): inspect the
+    *materialized* active-edge list post-update and emit every improving edge's
+    destination — unsorted, redundant. `better(upd, old) -> bool`."""
+    changed_e = better(upd_e, old_vals[dst_e])
+    return compact_values(changed_e, dst_e, cap, fill=n_nodes)
+
+
+def frontier_degree_histogram(
+    ids: jnp.ndarray, count: jnp.ndarray, degrees: jnp.ndarray, bounds=(4, 32, 256)
+) -> jnp.ndarray:
+    """Small/med/large/huge classification of the current frontier (paper
+    step II) — returned in engine stats so benchmarks can report the binning."""
+    valid = jnp.arange(ids.shape[0]) < count
+    deg = jnp.where(valid, degrees[jnp.minimum(ids, degrees.shape[0] - 1)], -1)
+    lo = 0
+    outs = []
+    for hi in bounds:
+        outs.append(jnp.sum((deg > lo) & (deg <= hi)))
+        lo = hi
+    outs.append(jnp.sum(deg > bounds[-1]))
+    return jnp.stack(outs).astype(jnp.int32)

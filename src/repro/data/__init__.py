@@ -1,0 +1,1 @@
+from repro.data.pipelines import TokenStream, ClickStream, gnn_dataset

@@ -1,0 +1,243 @@
+"""GPipe-style pipeline parallelism over the 'data' mesh axis (stage axis).
+
+Motivation (EXPERIMENTS.md §Perf, llama3-405b x train_4k): ZeRO-3 + 16-way
+gradient accumulation re-gathers every layer's fsdp shard per microbatch —
+~70 TB of all-gather wire per device per step, 1742 s of ICI time.  Pipeline
+parallelism stores each layer exactly once (stage-local), so inter-stage
+traffic is only microbatch activations: (tokens x d_model) bytes per boundary
+per micro — three orders of magnitude less — and per-layer weight gradients
+become STAGE-LOCAL (no gradient all-reduce at all for layer params).
+
+Design (single `jax.shard_map`, manual over 'data', auto over 'model'):
+  * the [L, ...] layer stacks are padded to n_stages x layers_per_stage with
+    IDENTITY layers (zero out-projections -> residual passthrough) and
+    sharded over 'data' on the stack dim -> each device holds its stage slab;
+  * TP ('model') stays GSPMD-auto inside the shard_map (embeddings, head,
+    per-layer matmuls keep their jit-level shardings);
+  * forward = fill-drain schedule: M micros, S stages, M+S-1 lockstep ticks,
+    activation handoff via `ppermute`; stage inputs stashed (bf16,
+    seq-sharded over 'model' so the stash is 2.1 GB not 34 GB for the
+    llama3-405b cell);
+  * backward = reversed fill-drain; per tick one `jax.vjp` of the stage slab
+    (recompute-from-stash = activation remat); the LM head's loss/grad runs
+    masked on the last stage only;
+  * loss / embed / head grads psum over stages; layer grads stay local.
+
+Dense LMs only (the MoE archs don't need PP at their sizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import transformer as tfm
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeConfig:
+    n_stages: int
+    n_micro: int
+    layers_per_stage: int
+
+
+def plan(cfg: tfm.TransformerConfig, n_stages: int, n_micro: int) -> PipeConfig:
+    lps = -(-cfg.n_layers // n_stages)
+    return PipeConfig(n_stages=n_stages, n_micro=n_micro, layers_per_stage=lps)
+
+
+def padded_layers(cfg: tfm.TransformerConfig, pc: PipeConfig) -> int:
+    return pc.n_stages * pc.layers_per_stage
+
+
+def pad_layer_stack(layers: dict, cfg: tfm.TransformerConfig, pc: PipeConfig) -> dict:
+    """Pad [L, ...] stacks with identity layers (zero wo/w2, unit norms)."""
+    pad = padded_layers(cfg, pc) - cfg.n_layers
+    if pad == 0:
+        return dict(layers)
+
+    def pad_one(name, x):
+        if name in ("attn_norm", "mlp_norm"):
+            fill = jnp.ones((pad,) + x.shape[1:], x.dtype)
+        else:
+            fill = jnp.zeros((pad,) + x.shape[1:], x.dtype)
+        return jnp.concatenate([x, fill], axis=0)
+
+    return {k: pad_one(k, v) for k, v in layers.items()}
+
+
+def param_logical_axes_pp(cfg: tfm.TransformerConfig) -> dict:
+    """PP layout: layer stacks sharded over 'data' (stage axis) on the stack
+    dim + TP on the usual dims; embed/head replicated across stages."""
+    return {
+        "embed": ("vocab", None),
+        "final_norm": (None,),
+        "lm_head": (None, "vocab"),
+        "layers": {
+            "attn_norm": ("fsdp", None),
+            "mlp_norm": ("fsdp", None),
+            "wq": ("fsdp", None, "heads"),
+            "wk": ("fsdp", None, None),
+            "wv": ("fsdp", None, None),
+            "wo": ("fsdp", "heads", None),
+            "w1": ("fsdp", None, "ff"),
+            "w3": ("fsdp", None, "ff"),
+            "w2": ("fsdp", "ff", None),
+        },
+    }
+
+
+def _stage_fn(cfg, slab, x, positions):
+    def body(h, lp):
+        h, _, _ = tfm._layer(cfg, h, lp, positions)
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, slab)
+    return x
+
+
+def _head_loss_micro(cfg, y, head, fnorm, lbls):
+    x = L.rms_norm(y, fnorm)
+    logits = x @ head
+    logits = jax.lax.with_sharding_constraint(logits, P(None, None, "model"))
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(lp, lbls[..., None], axis=-1)[..., 0]
+    return -jnp.mean(gold)
+
+
+def pipeline_loss_and_grads(
+    params: dict,
+    tokens: jnp.ndarray,    # (M, mb, seq)
+    labels: jnp.ndarray,
+    cfg: tfm.TransformerConfig,
+    pc: PipeConfig,
+    mesh: Mesh,
+    stage_axis: str = "data",
+):
+    """Returns (loss, grads) — grads shaped like the (padded) params."""
+    assert cfg.moe is None, "pipeline path supports dense LMs"
+    s_count, m_count = pc.n_stages, pc.n_micro
+    ticks = m_count + s_count - 1
+    dt = jnp.dtype(cfg.dtype)
+    stage_f = functools.partial(_stage_fn, cfg)
+    head_f = functools.partial(_head_loss_micro, cfg)
+    fwd_perm = [(i, (i + 1) % s_count) for i in range(s_count)]
+    bwd_perm = [(i, (i - 1) % s_count) for i in range(s_count)]
+    seq_shard = P(None, None, "model", None)   # stash (M, mb, seq@model, d)
+
+    def per_stage(slab, embed, head, fnorm, toks, lbls):
+        stage = jax.lax.axis_index(stage_axis)
+        m, mb, seq = toks.shape
+        d = cfg.d_model
+        positions = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (mb, seq))
+        is_first = stage == 0
+        is_last = stage == s_count - 1
+
+        # ---------------- forward fill-drain -----------------------------
+        def fwd_tick(carry, t):
+            act, stash = carry
+            mi = t - stage
+            active = (mi >= 0) & (mi < m_count)
+            mi_c = jnp.clip(mi, 0, m_count - 1)
+            x0 = embed[toks[mi_c]].astype(dt)
+            x_in = jnp.where(is_first, x0, act)
+            stash = jnp.where(
+                active,
+                jax.lax.dynamic_update_index_in_dim(
+                    stash, x_in.astype(jnp.bfloat16), mi_c, 0),
+                stash,
+            )
+            stash = jax.lax.with_sharding_constraint(stash, seq_shard)
+            y = stage_f(slab, x_in, positions)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            act_next = jax.lax.ppermute(y, stage_axis, fwd_perm)
+            return (act_next, stash), None
+
+        act0 = jnp.zeros((mb, seq, d), dt)
+        stash0 = jnp.zeros((m_count, mb, seq, d), jnp.bfloat16)
+        (act, stash), _ = jax.lax.scan(
+            fwd_tick, (act0, stash0), jnp.arange(ticks, dtype=jnp.int32))
+
+        # ---------------- backward reversed fill-drain -------------------
+        g_slab0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), slab)
+        # keep the big vocab-dim grad buffers TP-sharded ('model' is auto here)
+        g_embed0 = jax.lax.with_sharding_constraint(
+            jnp.zeros(embed.shape, jnp.float32), P("model", None))
+        g_head0 = jax.lax.with_sharding_constraint(
+            jnp.zeros(head.shape, jnp.float32), P(None, "model"))
+        g_fnorm0 = jnp.zeros(fnorm.shape, jnp.float32)
+
+        def bwd_tick(carry, t):
+            dacc, g_slab, g_embed, g_head, g_fnorm, loss_sum = carry
+            # reversed fill-drain: the LAST stage drains micro M-1 first; a
+            # stage consumes dx one tick after its successor produced it:
+            # tick_b(s, mi) = (M-1-mi) + (S-1-s)
+            mi = (m_count - 1) - t + (s_count - 1 - stage)
+            active = (mi >= 0) & (mi < m_count)
+            mi_c = jnp.clip(mi, 0, m_count - 1)
+            x_in = stash[mi_c].astype(dt)
+
+            y, vjp_stage = jax.vjp(lambda sl, x: stage_f(sl, x, positions),
+                                   slab, x_in)
+            loss_mi, head_vjp = jax.vjp(
+                lambda yy, hh, fn: head_f(yy, hh, fn, lbls[mi_c]),
+                y, head, fnorm)
+            dy_head, g_h_mi, g_f_mi = head_vjp(jnp.float32(1.0))
+            dy = jnp.where(is_last, dy_head.astype(dt), dacc)
+            dy = jnp.where(active, dy, jnp.zeros_like(dy))
+            g_slab_mi, dx = vjp_stage(dy)
+            gate = active.astype(jnp.float32)
+            g_slab = jax.tree.map(
+                lambda a, b: a + gate * b.astype(jnp.float32), g_slab, g_slab_mi)
+            lastg = (active & is_last).astype(jnp.float32)
+            g_head = g_head + lastg * g_h_mi.astype(jnp.float32)
+            g_fnorm = g_fnorm + lastg * g_f_mi.astype(jnp.float32)
+            loss_sum = loss_sum + lastg * loss_mi
+            # embedding grad on stage 0
+            ids = toks[mi_c].reshape(-1)
+            dx_flat = (dx * (active & is_first).astype(dx.dtype)).reshape(-1, d)
+            g_embed = g_embed.at[ids].add(dx_flat.astype(jnp.float32))
+            dx_send = jnp.where(active, dx, jnp.zeros_like(dx))
+            dacc_next = jax.lax.ppermute(dx_send, stage_axis, bwd_perm)
+            return (dacc_next, g_slab, g_embed, g_head, g_fnorm, loss_sum), None
+
+        carry0 = (jnp.zeros((mb, seq, d), dt), g_slab0, g_embed0, g_head0,
+                  g_fnorm0, jnp.float32(0.0))
+        (dacc, g_slab, g_embed, g_head, g_fnorm, loss_sum), _ = jax.lax.scan(
+            bwd_tick, carry0, jnp.arange(ticks, dtype=jnp.int32))
+
+        loss = jax.lax.psum(loss_sum, stage_axis) / m_count
+        g_embed = jax.lax.psum(g_embed, stage_axis)
+        g_head = jax.lax.psum(g_head, stage_axis)
+        g_fnorm = jax.lax.psum(g_fnorm, stage_axis)
+        g_slab = jax.tree.map(lambda g: g / m_count, g_slab)
+        return loss, g_slab, g_embed / m_count, g_head / m_count, g_fnorm / m_count
+
+    slab_specs = jax.tree.map(lambda _: P(stage_axis), params["layers"])
+    fn = shard_map(
+        per_stage,
+        mesh=mesh,
+        in_specs=(slab_specs, P(), P(), P(), P(), P()),
+        out_specs=(P(), slab_specs, P(), P(), P()),
+        axis_names={stage_axis},
+        check_vma=False,
+    )
+    loss, g_layers, g_embed, g_head, g_fnorm = fn(
+        params["layers"], params["embed"], params["lm_head"],
+        params["final_norm"], tokens, labels,
+    )
+    return loss, {
+        "layers": g_layers,
+        "embed": g_embed.astype(jnp.float32),
+        "lm_head": g_head,
+        "final_norm": g_fnorm,
+    }

@@ -1,0 +1,117 @@
+"""Logical-axis sharding rules for the production meshes.
+
+Models annotate tensors with *logical* axes ('batch', 'heads', 'ff', 'vocab',
+'experts', 'kv_seq', 'fsdp', ...); this module maps them onto whatever mesh
+is active — (data, model) single-pod or (pod, data, model) multi-pod — so the
+same model code lowers for every mesh (DESIGN.md §5).
+
+The mapping collapses gracefully: logical axes bound to mesh axes that do not
+exist on the current mesh are left unsharded.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: logical axis -> preferred mesh axes (in order; multi-axis entries shard
+#: over the product of those axes)
+RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),      # pure DP across pods (DCN-friendly)
+    "fsdp": ("data",),             # ZeRO-3 parameter/optimizer sharding
+    "heads": ("model",),           # TP over attention heads
+    "kv_heads": ("model",),
+    "ff": ("model",),              # TP over FFN hidden
+    "vocab": ("model",),           # TP over embedding/logits vocab
+    "experts": ("model",),         # EP over MoE experts
+    # split-KV decode (flash-decoding style); takes 'data' too when the batch
+    # doesn't occupy it (batch=1 long-context decode)
+    "kv_seq": ("data", "model"),
+    "edges": ("pod", "data", "model"),   # GNN edge partition: whole mesh
+    "table_rows": ("model",),      # recsys embedding-table row sharding
+    "candidates": ("model",),      # retrieval candidate sharding
+    "nodes": ("data",),            # GNN node-feature sharding
+}
+
+_ACTIVE: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh):
+    """Enter a mesh: with_sharding_constraint picks up bare PartitionSpecs."""
+    _ACTIVE.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def _auto_axes() -> Optional[set]:
+    """Mesh axes that with_sharding_constraint may mention here: inside a
+    shard_map, axes the map is Manual over must be dropped from specs."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is None or am.empty:
+            return None
+        from jax.sharding import AxisType
+
+        return {
+            n for n, t in zip(am.axis_names, am.axis_types)
+            if t != AxisType.Manual
+        }
+    except Exception:  # noqa: BLE001 — older tracing contexts
+        return None
+
+
+def spec(*logical: Optional[str]) -> P:
+    """PartitionSpec for a tensor whose dims carry these logical names
+    (None = replicated dim). Unknown logical names shard nothing."""
+    mesh = current_mesh()
+    axes = set(mesh.axis_names) if mesh is not None else set()
+    auto = _auto_axes()
+    if auto is not None:
+        axes &= auto
+    entries = []
+    used: set[str] = set()
+    for name in logical:
+        if name is None:
+            entries.append(None)
+            continue
+        cand = tuple(a for a in RULES.get(name, ()) if a in axes and a not in used)
+        used.update(cand)
+        if len(cand) == 0:
+            entries.append(None)
+        elif len(cand) == 1:
+            entries.append(cand[0])
+        else:
+            entries.append(cand)
+    return P(*entries)
+
+
+def constrain(x, *logical: Optional[str]):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    if current_mesh() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical))
+
+
+def named(mesh: Mesh, *logical: Optional[str]) -> NamedSharding:
+    with activate(mesh):
+        return NamedSharding(mesh, spec(*logical))
+
+
+def tree_named(mesh: Mesh, logical_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda ax: named(mesh, *ax),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple),
+    )

@@ -1,0 +1,19 @@
+"""Graph substrate: CSR structure, generators, ELL packing, partitioning, sampling."""
+
+from repro.graph.csr import CSR, Graph, from_edges, to_undirected
+from repro.graph.packing import EllSlice, EllPack, pack_ell, DEFAULT_BUCKETS
+from repro.graph import generators, partition, sampler
+
+__all__ = [
+    "CSR",
+    "Graph",
+    "from_edges",
+    "to_undirected",
+    "EllSlice",
+    "EllPack",
+    "pack_ell",
+    "DEFAULT_BUCKETS",
+    "generators",
+    "partition",
+    "sampler",
+]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots + pure-jnp oracles.
+
+  ell_spmv.py        -- degree-bucketed ELL gather->Compute->Combine (ACC pull
+                        hot path + GNN SpMM)                     [paper Sec. 3/4]
+  frontier_pack.py   -- ballot-filter stream compaction          [paper Sec. 4]
+  segment_reduce.py  -- sorted-segment combine
+  embedding_bag.py   -- recsys multi-hot gather+reduce (scalar prefetch)
+  flash_attention.py -- fused causal GQA attention (LM hot path)
+  tuning.py          -- Eq.1-style compile-time VMEM block calculator
+  ops.py             -- public wrappers (interpret on CPU, native on TPU)
+  ref.py             -- pure-jnp oracles for all of the above
+"""
+
+from repro.kernels import ops, ref, tuning

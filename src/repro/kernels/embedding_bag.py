@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: EmbeddingBag (multi-hot gather + reduce) for recsys.
+
+JAX has no native EmbeddingBag; the taxonomy brief marks this as part of the
+system.  The TPU-native formulation uses **scalar prefetch**: the (B, K) index
+matrix is prefetched to SMEM, and the table BlockSpec's index_map *selects
+which table row to DMA* for each (b, k) grid step — the canonical Mosaic
+pattern for data-dependent gathers (no in-kernel pointer chasing; the DMA
+engine does the indirection).  The output row is revisited K times and
+accumulated in VMEM.
+
+Grid = (B, K); table block = (1, D); out block = (1, D).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_row_ref, out_ref, *, mode: str, k_total: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = table_row_ref[...]
+    out_ref[...] += row
+
+    if mode == "mean":
+        @pl.when(k == k_total - 1)
+        def _final():
+            out_ref[...] = out_ref[...] / k_total
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(
+    table: jnp.ndarray,
+    idx: jnp.ndarray,
+    *,
+    mode: str = "sum",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """table (V, D), idx (B, K) int32 -> (B, D) sum/mean-reduced embeddings."""
+    v, d = table.shape
+    b, k = idx.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, k),
+        in_specs=[
+            # DMA exactly the table row named by the prefetched index
+            pl.BlockSpec((1, d), lambda bi, ki, idx_pref: (idx_pref[bi, ki], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda bi, ki, idx_pref: (bi, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, mode=mode, k_total=k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)

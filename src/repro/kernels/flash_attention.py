@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: fused causal GQA attention (flash-attention schedule).
+
+The LM hot path for the assigned dense/MoE transformer archs.  Online-softmax
+over KV tiles with running (max, sumexp) carried in VMEM scratch; KV tiles are
+the innermost grid axis so the output tile is revisited and rescaled in place
+(FlashAttention-2 schedule).  Causal masking is block-skipped: fully-masked KV
+tiles write nothing (Mosaic still schedules the step, but the mask math is
+skipped), matching the standard TPU flash kernels.
+
+Block sizes come from tuning.attn_block_sizes (VMEM budget, MXU-aligned).
+GQA is handled by the index map: query-head h reads KV-head h // group.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tuning
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, kv_offset: int, bkv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # (bq, d)
+    k = k_ref[0, 0]                                   # (bkv, d)
+    bq = q.shape[0]
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) + kv_offset
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    def _visit():
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                      # (bq, bkv)
+        if causal:
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bkv)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    if causal:
+        # visit only KV tiles that intersect the causal triangle
+        first_q = qi * bq + kv_offset
+        pl.when(ki * bkv <= first_q + bq - 1)(_visit)
+    else:
+        _visit()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    block_q: int | None = None,
+    block_kv: int | None = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q (B, Hq, Sq, D); k, v (B, Hkv, Skv, D); GQA via Hq % Hkv == 0.
+
+    For decode (Sq < Skv) the causal mask is offset so query i attends to
+    positions <= Skv - Sq + i (KV-cache layout).
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    bq0, bk0 = tuning.attn_block_sizes(sq, skv, d)
+    bq = block_q or bq0
+    bkv = block_kv or bk0
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (sq, bq, skv, bkv)
+    scale = 1.0 / (d ** 0.5)
+    kv_offset = skv - sq  # decode alignment
+
+    grid = (b, hq, sq // bq, skv // bkv)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, kv_offset=kv_offset, bkv=bkv
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+            # group-major GQA: q head h reads kv head h % hkv
+            pl.BlockSpec((1, 1, bkv, d), lambda bi, h, qi, ki, hk=hkv: (bi, h % hk, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bi, h, qi, ki, hk=hkv: (bi, h % hk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, h, qi, ki: (bi, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sumexp
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,129 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the semantic ground truth the kernels/tests sweep against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# ELL combine (scalar metadata): the ACC pull hot path
+# ---------------------------------------------------------------------------
+
+
+def ell_combine_ref(nbr, wgt, vals, compute_fn, combine: str):
+    """partial[r] = combine_j compute(vals[nbr[r,j]], wgt[r,j]); sentinel slots
+    (nbr == len(vals)-1) contribute the combine identity."""
+    n_sent = vals.shape[0] - 1
+    v = vals[jnp.minimum(nbr, n_sent)]
+    upd = compute_fn(v, wgt)
+    if combine == "min":
+        ident = jnp.asarray(jnp.finfo(vals.dtype).max / 4, vals.dtype)
+        upd = jnp.where(nbr == n_sent, ident, upd)
+        return jnp.min(upd, axis=1)
+    if combine == "max":
+        ident = jnp.asarray(-jnp.finfo(vals.dtype).max / 4, vals.dtype)
+        upd = jnp.where(nbr == n_sent, ident, upd)
+        return jnp.max(upd, axis=1)
+    if combine == "sum":
+        upd = jnp.where(nbr == n_sent, 0.0, upd)
+        return jnp.sum(upd, axis=1)
+    raise ValueError(combine)
+
+
+# ---------------------------------------------------------------------------
+# ELL SpMM (feature matrices): GNN aggregation
+# ---------------------------------------------------------------------------
+
+
+def ell_spmm_ref(nbr, wgt, feats):
+    """out[r] = sum_j wgt[r,j] * feats[nbr[r,j]]; feats has a zero scratch row
+    at index n so sentinel slots are inert."""
+    n_sent = feats.shape[0] - 1
+    f = feats[jnp.minimum(nbr, n_sent)]          # (R, W, D)
+    w = jnp.where(nbr == n_sent, 0.0, wgt)
+    return jnp.einsum("rw,rwd->rd", w, f)
+
+
+# ---------------------------------------------------------------------------
+# frontier compaction (ballot filter)
+# ---------------------------------------------------------------------------
+
+
+def frontier_pack_ref(mask, block: int):
+    """Per-block compaction: ids[b, i] = i-th set lane of block b (global id),
+    counts[b] = popcount(block b). Sentinel = len(mask)."""
+    n = mask.shape[0]
+    nb = n // block
+    m = mask.reshape(nb, block)
+    pos = jnp.cumsum(m.astype(jnp.int32), axis=1) - 1
+    ids_local = jnp.broadcast_to(jnp.arange(block, dtype=jnp.int32), (nb, block))
+    gids = ids_local + (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+    out = jnp.full((nb, block + 1), n, jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(nb)[:, None], (nb, block))
+    tgt = jnp.where(m, pos, block)
+    out = out.at[rows, tgt].set(gids, mode="drop")
+    counts = m.sum(axis=1).astype(jnp.int32)
+    return out[:, :block], counts
+
+
+# ---------------------------------------------------------------------------
+# segment reduce (sorted segments)
+# ---------------------------------------------------------------------------
+
+
+def segment_reduce_ref(vals, seg_ids, num_segments: int, combine: str = "sum"):
+    if combine == "sum":
+        return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+    if combine == "max":
+        return jax.ops.segment_max(vals, seg_ids, num_segments=num_segments)
+    if combine == "min":
+        return jax.ops.segment_min(vals, seg_ids, num_segments=num_segments)
+    raise ValueError(combine)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag (recsys)
+# ---------------------------------------------------------------------------
+
+
+def embedding_bag_ref(table, idx, mode: str = "sum"):
+    """out[b] = reduce_k table[idx[b, k]] — torch.nn.EmbeddingBag semantics."""
+    g = table[idx]                          # (B, K, D)
+    if mode == "sum":
+        return g.sum(axis=1)
+    if mode == "mean":
+        return g.mean(axis=1)
+    if mode == "max":
+        return g.max(axis=1)
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# attention (causal, GQA)
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, Hq, Sq, D), k/v: (B, Hkv, Skv, D); Hq % Hkv == 0 (GQA)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    # GROUP-MAJOR head layout: q head h uses kv head (h % hkv). This makes a
+    # TP 'model' shard of q heads see every kv head, so kv projections can be
+    # replicated when n_kv < TP degree (DESIGN.md §5).
+    kk = jnp.tile(k, (1, group, 1, 1))
+    vv = jnp.tile(v, (1, group, 1, 1))
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) * scale
+    if causal:
+        # decode layout: query i attends to kv positions <= skv - sq + i
+        qpos = jnp.arange(sq)[:, None] + (skv - sq)
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos <= qpos
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: tiled segment reduction over (pre-sorted) segment ids.
+
+Used for: virtual-row merge after the huge-bucket ELL pass, GNN edge->node
+aggregation at molecule scale, and as the combine stage of the EmbeddingBag
+op.  The output (num_segments, D) block stays resident in VMEM and is
+accumulated across edge tiles (`@pl.when(first tile)` zero-init), so it suits
+the regimes where num_segments x D fits VMEM (batched molecules, sampled
+blocks); larger regimes use the XLA `segment_sum` path in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_kernel(vals_ref, ids_ref, out_ref, *, num_segments: int, combine: str):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        if combine == "sum":
+            out_ref[...] = jnp.zeros_like(out_ref)
+        elif combine == "min":
+            out_ref[...] = jnp.full_like(out_ref, jnp.finfo(out_ref.dtype).max / 4)
+        else:
+            out_ref[...] = jnp.full_like(out_ref, -jnp.finfo(out_ref.dtype).max / 4)
+
+    vals = vals_ref[...]                    # (TE, D)
+    ids = ids_ref[...]                      # (TE,)
+    if combine == "sum":
+        part = jax.ops.segment_sum(vals, ids, num_segments=num_segments)
+        out_ref[...] += part
+    elif combine == "min":
+        part = jax.ops.segment_min(vals, ids, num_segments=num_segments)
+        out_ref[...] = jnp.minimum(out_ref[...], part)
+    else:
+        part = jax.ops.segment_max(vals, ids, num_segments=num_segments)
+        out_ref[...] = jnp.maximum(out_ref[...], part)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "combine", "tile_edges", "interpret")
+)
+def segment_reduce(
+    vals: jnp.ndarray,
+    seg_ids: jnp.ndarray,
+    *,
+    num_segments: int,
+    combine: str = "sum",
+    tile_edges: int = 2048,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """vals (E, D), seg_ids (E,) -> (num_segments, D). Out-of-range ids drop."""
+    e, d = vals.shape
+    te = min(tile_edges, e)
+    assert e % te == 0, (e, te)
+    return pl.pallas_call(
+        functools.partial(_seg_kernel, num_segments=num_segments, combine=combine),
+        grid=(e // te,),
+        in_specs=[
+            pl.BlockSpec((te, d), lambda i: (i, 0)),
+            pl.BlockSpec((te,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), vals.dtype),
+        interpret=interpret,
+    )(vals, seg_ids)

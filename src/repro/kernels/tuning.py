@@ -1,0 +1,80 @@
+"""Compile-time resource accounting for Pallas block shapes.
+
+This is the TPU analogue of the paper's deadlock-free barrier equation (Eq. 1):
+the paper sizes resident CTAs from *compile-time* register counts; we size
+Pallas tiles from a *compile-time* VMEM budget so a kernel's working set is
+guaranteed resident (the Mosaic equivalent of "never oversubscribe").
+
+TPU v5e constants (the dry-run target):
+  VMEM            ~128 MiB/core usable, we budget far less per kernel
+  MXU tile        128 x 128 (bf16), VPU lanes 8 x 128
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # conservative per-kernel budget
+SUBLANE = 8
+LANE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuSpec:
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip (v5e)
+    hbm_bw: float = 819e9               # bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per link
+    hbm_bytes: int = 16 * 1024**3       # 16 GiB
+    vmem_budget: int = VMEM_BUDGET_BYTES
+
+
+V5E = TpuSpec()
+
+
+def round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def round_down(x: int, to: int) -> int:
+    return max(to, (x // to) * to)
+
+
+def ell_tile_rows(width: int, n_vals: int, itemsize: int = 4,
+                  budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Rows per tile for the ELL combine kernel: nbr + wgt tiles of
+    (rows, width) plus the resident metadata block of n_vals elements.
+    Mirrors Eq. 1: tile_rows = floor((budget - resident) / per_row_bytes)."""
+    resident = n_vals * itemsize
+    per_row = width * itemsize * 3  # nbr(int32) + wgt(f32) + gathered vals(f32)
+    avail = max(budget - resident, per_row * SUBLANE)
+    rows = avail // per_row
+    return max(SUBLANE, round_down(min(rows, 1024), SUBLANE))
+
+
+def spmm_tile_rows(width: int, d_feat: int, n_vals: int, itemsize: int = 4,
+                   budget: int = VMEM_BUDGET_BYTES) -> int:
+    """Rows per tile for the feature-matrix ELL SpMM: the (n, d) feature block
+    is resident; per tile we hold nbr/wgt (rows, width) + acc (rows, d)."""
+    resident = n_vals * d_feat * itemsize
+    per_row = (2 * width + d_feat) * itemsize
+    avail = max(budget - resident, per_row * SUBLANE)
+    rows = avail // per_row
+    return max(SUBLANE, round_down(min(rows, 512), SUBLANE))
+
+
+def attn_block_sizes(seq_q: int, seq_kv: int, d_head: int,
+                     budget: int = VMEM_BUDGET_BYTES) -> tuple[int, int]:
+    """(block_q, block_kv) for flash attention; MXU-aligned (multiples of 128
+    where the sequence allows) and sized so q/k/v/o tiles + the (bq, bk) score
+    tile fit the budget."""
+    bq = min(seq_q, 128 if seq_q >= 128 else round_up(seq_q, SUBLANE))
+    bk = min(seq_kv, 128 if seq_kv >= 128 else round_up(seq_kv, SUBLANE))
+    # shrink bk until footprint fits
+    def fits(bq, bk):
+        tiles = (bq * d_head * 3 + bk * d_head * 2 + bq * bk) * 4
+        return tiles <= budget
+    while not fits(bq, bk) and bk > SUBLANE:
+        bk //= 2
+    while not fits(bq, bk) and bq > SUBLANE:
+        bq //= 2
+    return bq, bk

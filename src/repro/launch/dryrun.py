@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                      .lower(*input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits 16 GiB/chip
+        print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+plus collective-bytes extraction from the compiled HLO text (all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute operand sizes)
+-> three-term roofline (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out dryrun_results.jsonl
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.distributed import sharding as sh
+from repro.kernels.tuning import V5E
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# bytes-on-wire factor per collective (ring algorithms, per-device)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,          # result bytes ~ wire bytes
+    "reduce-scatter": 1.0,      # operand bytes ~ wire bytes
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_shape_bytes(s: str) -> int:
+    """bytes of an HLO type string like 'f32[128,1024]' or a tuple thereof."""
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """computation name -> its op lines. HLO text: computations start at col 0
+    ('%name (...) -> ... {' or 'ENTRY %name ...{'), ops are indented."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+                continue
+        if cur is not None and line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line.strip())
+    return comps
+
+
+def _collective_kind(op: str):
+    for k in _WIRE_FACTOR:
+        if op == k or op.startswith(k + "-start") or op.startswith(k + "."):
+            return k
+    return None
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-, %]+)")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware collective accounting.
+
+    XLA cost analysis counts a `while` body once; collectives inside a scan
+    over L layers really fire L times.  We split the HLO into computations,
+    read each while's trip count from the s32 constant in its condition
+    (jax scans lower to `iter < constant(T)`), and multiply each collective's
+    bytes by the product of its enclosing loops' trip counts.
+    """
+    comps = _split_computations(hlo_text)
+
+    # map computation -> (child_comp, trip_count) for while bodies/conds
+    trip_of_body: dict[str, int] = {}
+    children: dict[str, list[str]] = {c: [] for c in comps}
+    for cname, lines in comps.items():
+        if cname == "__entry__":
+            continue
+        for ls in lines:
+            wm = _WHILE_RE.search(ls)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                for cl in comps.get(cond, []):
+                    for c in _CONST_RE.findall(cl):
+                        trip = max(trip, int(c))
+                trip_of_body[body] = trip
+                children[cname].append(body)
+            else:
+                cm = _CALL_RE.search(ls)
+                if cm:
+                    for callee in re.split(r"[,\s]+", cm.group(1)):
+                        callee = callee.strip().lstrip("%")
+                        if callee in comps:
+                            children[cname].append(callee)
+
+    # propagate multipliers from the entry computation
+    entry = None
+    for cname in comps:
+        if cname != "__entry__" and comps[cname] is comps.get("__entry__"):
+            entry = cname
+    if entry is None:  # fallback: computation with a ROOT tuple & most lines
+        entry = max((c for c in comps if c != "__entry__"),
+                    key=lambda c: len(comps[c]), default=None)
+    mult: dict[str, int] = {}
+
+    def visit(c, m):
+        if c in mult and mult[c] >= m:
+            return
+        mult[c] = max(mult.get(c, 0), m)
+        for ch in children.get(c, []):
+            visit(ch, m * trip_of_body.get(ch, 1))
+
+    if entry:
+        visit(entry, 1)
+    for c in comps:
+        mult.setdefault(c, 1)
+
+    out = {k: 0.0 for k in _WIRE_FACTOR}
+    counts = {k: 0 for k in _WIRE_FACTOR}
+    wire = 0.0
+    for cname, lines in comps.items():
+        if cname == "__entry__":
+            continue
+        m = mult.get(cname, 1)
+        for ls in lines:
+            om = re.search(r"=\s+((?:\([^)]*\))|(?:\S+))\s+([\w-]+)", ls)
+            if not om:
+                continue
+            kind = _collective_kind(om.group(2))
+            if kind is None:
+                continue
+            b = _parse_shape_bytes(om.group(1)) * m
+            out[kind] += b
+            counts[kind] += 1
+            wire += b * _WIRE_FACTOR[kind]
+    return {"bytes": out, "counts": counts, "wire_bytes": wire}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, allow_bonus: bool = False,
+             variant: str = "") -> dict:
+    spec = configs.get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "chips": chips,
+    }
+    if variant:
+        rec["variant"] = variant
+    t0 = time.time()
+    try:
+        with sh.activate(mesh):
+            built = build(spec, shape, mesh, variant=variant)
+            rec["note"] = built.note
+            rec["kind"] = built.kind
+            rec["model_flops"] = built.model_flops
+            if built.skip and not allow_bonus:
+                rec["status"] = "SKIP"
+                rec["skip_reason"] = built.skip_reason
+                return rec
+            if built.skip:
+                rec["bonus"] = True
+            jitted = jax.jit(
+                built.fn,
+                in_shardings=built.in_shardings,
+                out_shardings=built.out_shardings,
+                donate_argnums=built.donate_argnums,
+            )
+            lowered = jitted.lower(*built.abstract_inputs)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            coll = collective_bytes(compiled.as_text())
+        rec.update(
+            status="OK",
+            compile_s=round(time.time() - t0, 1),
+            memory=dict(
+                argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                output_bytes=getattr(mem, "output_size_in_bytes", None),
+                temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+                code_bytes=getattr(mem, "generated_code_size_in_bytes", None),
+                alias_bytes=getattr(mem, "alias_size_in_bytes", None),
+            ),
+            flops=cost.get("flops"),
+            bytes_accessed=cost.get("bytes accessed"),
+            collectives=coll,
+            analytic=built.analytic,
+        )
+        rec["roofline"] = roofline_terms(rec)
+    except Exception as e:  # noqa: BLE001 - report, don't crash the sweep
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three-term roofline. The HLO program is the per-device SPMD program so
+    flops/bytes are per-chip — but XLA counts scan bodies once, so for
+    scan-based programs (LM family) the compute/memory terms come from the
+    calibrated analytic model (launch/analytic.py); collectives are always the
+    trip-count-corrected HLO measurement; raw HLO values stay in the record."""
+    chips = rec["chips"]
+    ana = rec.get("analytic") or {}
+    if ana:
+        flops = ana["flops_global"] / chips
+        b = ana["bytes_per_device"]
+    else:
+        flops = rec.get("flops") or 0.0
+        b = rec.get("bytes_accessed") or 0.0
+    wire = rec.get("collectives", {}).get("wire_bytes", 0.0)
+    compute_s = flops / V5E.peak_flops
+    memory_s = b / V5E.hbm_bw
+    coll_s = wire / V5E.ici_bw
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = rec.get("model_flops") or 0.0
+    useful = mf / (flops * chips) if flops else None
+    bound = max(compute_s, memory_s, coll_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom,
+        "model_flops_ratio": useful,
+        # fraction of roofline: ideal time (model flops at peak) / bound time
+        "roofline_frac": (mf / chips / V5E.peak_flops) / bound if bound and mf else None,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--allow-bonus", action="store_true",
+                    help="also lower the long_500k decode bonus cells")
+    ap.add_argument("--variant", default="",
+                    help="step variant (e.g. 'pp' pipeline-parallel train)")
+    args = ap.parse_args(argv)
+
+    cells = configs.cells()
+    if args.arch != "all":
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    with open(args.out, "a") as f:
+        for arch, shape in cells:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, allow_bonus=args.allow_bonus,
+                               variant=args.variant)
+                f.write(json.dumps(rec) + "\n")
+                f.flush()
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} frac={r['roofline_frac'] and round(r['roofline_frac'],3)}"
+                             f" compile={rec['compile_s']}s")
+                elif status == "FAIL":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status}] {arch} x {shape} x {rec['mesh']}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

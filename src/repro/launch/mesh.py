@@ -1,0 +1,40 @@
+"""Production mesh construction (multi-pod dry-run contract).
+
+`make_production_mesh` is a FUNCTION (not module-level state) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
+            "launch/dryrun.py which forces 512 host devices"
+        )
+    return jax.make_mesh(
+        shape, axes, devices=devs[:need],
+        axis_types=(AxisType.Auto,) * len(axes),
+    )
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (uses however many devices exist)."""
+    devs = jax.devices()
+    need = data * model
+    assert len(devs) >= need, (len(devs), need)
+    return jax.make_mesh(
+        (data, model), ("data", "model"), devices=devs[:need],
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,695 @@
+"""Step builders: (arch x shape x mesh) -> jittable step + abstract inputs.
+
+This is the glue the multi-pod dry-run lowers: for every cell it produces
+  * a `step` function (train_step or serve_step per the shape's kind),
+  * `input_specs()` — ShapeDtypeStruct stand-ins for every input (params and
+    optimizer state included: nothing is materialized for the big archs),
+  * in/out shardings resolved from the logical-axis rules on the given mesh.
+
+Families: LM train (grad-accumulation scan + ZeRO/TP), LM prefill/decode
+(static KV cache, seq-sharded over 'model'), GNN full-graph (edge-sharded),
+GNN sampled (on-device fanout sampler), DimeNet (triplet inputs), recsys
+(row-sharded embedding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ArchSpec
+from repro.distributed import sharding as sh
+from repro.models import deepfm as dfm
+from repro.models import dimenet as dmn
+from repro.models import gnn as gnn_m
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    name: str
+    kind: str                        # 'train' | 'prefill' | 'decode' | 'infer' | 'retrieval'
+    fn: Callable                     # the step function
+    abstract_inputs: tuple           # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    model_flops: float = 0.0         # 6·N·D (dense) / 6·N_active·D (MoE) etc.
+    note: str = ""
+    skip: bool = False
+    skip_reason: str = ""
+    #: analytic (flops_global, bytes_per_device) for scan-based programs where
+    #: HLO cost analysis undercounts loop bodies (see launch/analytic.py)
+    analytic: Optional[dict] = None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, *logical):
+    return sh.named(mesh, *logical)
+
+
+def _tree_shardings(mesh, tree_of_logical):
+    return jax.tree.map(
+        lambda ax: _named(mesh, *ax), tree_of_logical,
+        is_leaf=lambda v: isinstance(v, tuple),
+    )
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+# ===========================================================================
+# LM family
+# ===========================================================================
+
+
+def _lm_opt_cfg(cfg: tfm.TransformerConfig) -> adamw.AdamWConfig:
+    big = cfg.param_count() > 2e10
+    return adamw.AdamWConfig(
+        moment_dtype="bfloat16" if big else "float32",
+        total_steps=100_000,
+    )
+
+
+def _lm_abstract_params(cfg):
+    return _abstract(lambda: tfm.init_params(jax.random.key(0), cfg))
+
+
+def _dp_total(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n
+
+
+def build_lm_train(spec: ArchSpec, shape: dict, mesh: Mesh,
+                   zero_stage: int = 3) -> BuiltStep:
+    """zero_stage=3: params+grads+moments fsdp-sharded over 'data' (required
+    for >20B archs). zero_stage=1 (§Perf hillclimb for <=10B archs): params
+    TP-sharded only — kills the per-microbatch fsdp weight all-gathers; only
+    optimizer states stay data-sharded."""
+    cfg = spec.make_config()
+    batch, seq = shape["batch"], shape["seq"]
+    dp = _dp_total(mesh)
+    accum = max(1, min(16, batch // dp))
+    micro = batch // accum
+    opt_cfg = _lm_opt_cfg(cfg)
+
+    p_shape = _lm_abstract_params(cfg)
+    o_shape = _abstract(lambda: adamw.init(p_shape_concrete_free(p_shape), opt_cfg))
+    logical = tfm.param_logical_axes(cfg)
+    moment_logical = logical
+    if zero_stage == 1:
+        logical = jax.tree.map(
+            lambda ax: tuple(None if a == "fsdp" else a for a in ax),
+            logical, is_leaf=lambda v: isinstance(v, tuple))
+    p_shard = _tree_shardings(mesh, logical)
+    m_shard = _tree_shardings(mesh, moment_logical)
+    o_shard = {
+        "step": _named(mesh),
+        "m": m_shard,
+        "v": m_shard,
+    }
+    tok_shard = _named(mesh, "batch", None)
+
+    def train_step(params, opt_state, tokens, labels):
+        t = tokens.reshape(accum, micro, seq)
+        l = labels.reshape(accum, micro, seq)
+
+        def micro_body(gsum, tl):
+            tt, ll = tl
+            loss, g = jax.value_and_grad(tfm.loss_fn)(params, tt, ll, cfg)
+            g = jax.tree.map(lambda a, b: a + b, gsum, g)
+            return g, loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, losses = jax.lax.scan(micro_body, g0, (t, l))
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        new_p, new_o, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = jnp.mean(losses)
+        return new_p, new_o, metrics
+
+    inputs = (
+        p_shape,
+        o_shape,
+        _sds((batch, seq), jnp.int32),
+        _sds((batch, seq), jnp.int32),
+    )
+    from repro.launch.analytic import lm_cell
+
+    tp = mesh.shape.get("model", 1)
+    ana = lm_cell(cfg, "train", batch, seq, dp, tp, accum=accum,
+                  moment_bytes=2 if opt_cfg.moment_dtype == "bfloat16" else 4)
+    return BuiltStep(
+        name=f"{spec.name}:train",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(p_shard, o_shard, tok_shard, tok_shard),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+        model_flops=(6.0 * cfg.active_param_count() * batch * seq
+                     + 6.0 * batch * cfg.n_layers * cfg.n_heads * cfg.dh * seq ** 2),
+        note=f"accum={accum} micro={micro} moments={opt_cfg.moment_dtype}",
+        analytic={"flops_global": ana.flops_global,
+                  "bytes_per_device": ana.bytes_per_device, **ana.detail},
+    )
+
+
+def build_lm_serve(spec: ArchSpec, shape: dict, mesh: Mesh, kind: str,
+                   variant: str = "") -> BuiltStep:
+    cfg = spec.make_config()
+    batch, seq = shape["batch"], shape["seq"]
+    dp = _dp_total(mesh)
+    # batch=1 long-context decode can't occupy the data axis; the kv_seq rule
+    # then claims ('data','model') so the cache still shards over all chips
+    batch_ax = "batch" if batch % dp == 0 else None
+    p_shape = _lm_abstract_params(cfg)
+    p_shard = _tree_shardings(mesh, tfm.param_logical_axes(cfg))
+    cache_shape = _abstract(lambda: tfm.init_cache(cfg, batch, seq))
+    cache_shard = _tree_shardings(
+        mesh,
+        {
+            "k": (None, batch_ax, None, "kv_seq", None),
+            "v": (None, batch_ax, None, "kv_seq", None),
+            "len": (),
+        },
+    )
+
+    attn_override = None
+    if kind == "decode" and variant == "splitkv":
+        from repro.nn.decode_attn import decode_attention_splitkv
+
+        def attn_override(q, k, v, vl, _mesh=mesh):
+            return decode_attention_splitkv(q, k, v, vl, _mesh)
+
+    if kind == "prefill":
+        tokens = _sds((batch, seq), jnp.int32)
+
+        def serve_step(params, cache, toks):
+            return tfm.decode_step(params, cache, toks, cfg)
+
+        model_flops = (2.0 * cfg.active_param_count() * batch * seq
+                       + 2.0 * batch * cfg.n_layers * cfg.n_heads * cfg.dh * seq ** 2)
+    else:  # decode: one token against a seq-long cache
+        tokens = _sds((batch, 1), jnp.int32)
+
+        def serve_step(params, cache, toks):
+            # cache considered full: len = seq - 1
+            cache = dict(cache, len=jnp.asarray(seq - 1, jnp.int32))
+            return tfm.decode_step(params, cache, toks, cfg,
+                                   attn_override=attn_override)
+
+        model_flops = (2.0 * cfg.active_param_count() * batch
+                       + 4.0 * batch * cfg.n_layers * cfg.n_heads * cfg.dh * seq)
+
+    from repro.launch.analytic import lm_cell
+
+    tp = mesh.shape.get("model", 1)
+    ana = lm_cell(cfg, kind, batch, seq, dp, tp)
+    inputs = (p_shape, cache_shape, tokens)
+    return BuiltStep(
+        name=f"{spec.name}:{kind}",
+        kind=kind,
+        fn=serve_step,
+        abstract_inputs=inputs,
+        in_shardings=(p_shard, cache_shard, _named(mesh, batch_ax, None)),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(1,),
+        model_flops=model_flops,
+        analytic={"flops_global": ana.flops_global,
+                  "bytes_per_device": ana.bytes_per_device, **ana.detail},
+        skip=bool(shape.get("skip_full_attn", False)),
+        skip_reason=(
+            "long_500k requires sub-quadratic attention; all assigned LM archs "
+            "are pure full-attention (GQA) per their published configs -> SKIP "
+            "per brief. Bonus decode-only lowering available (decode vs 512k "
+            "cache is linear-cost)." if shape.get("skip_full_attn") else ""
+        ),
+    )
+
+
+def p_shape_concrete_free(tree):
+    """adamw.init only reads .shape/.size/.dtype — eval_shape-compatible."""
+    return tree
+
+
+def build_lm_train_pp(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    """Pipeline-parallel train step (§Perf hillclimb variant): stages over
+    'data', MANUAL TP over 'model', GPipe fill-drain, stage-local layer
+    grads. Eliminates the ZeRO-3 per-microbatch weight re-gather AND all
+    GSPMD layout guessing (see distributed/pipeline_tp.py)."""
+    from repro.distributed import pipeline as pp
+    from repro.distributed import pipeline_tp as pptp
+
+    cfg = dataclasses.replace(spec.make_config(), tp_constrain=False)
+    assert cfg.moe is None, "PP variant targets the dense archs"
+    batch, seq = shape["batch"], shape["seq"]
+    n_stages = mesh.shape["data"]
+    pod_dp = mesh.shape.get("pod", 1)
+    # more micros -> smaller fill-drain bubble: (S-1)/(M+S-1)
+    n_micro = 32
+    mb = batch // (n_micro * pod_dp)
+    assert mb >= 1, (batch, n_micro, pod_dp)
+    pc = pp.plan(cfg, n_stages, n_micro)
+
+    def padded_params():
+        p = tfm.init_params(jax.random.key(0), cfg)
+        return dict(p, layers=pp.pad_layer_stack(p["layers"], cfg, pc))
+
+    p_shape = _abstract(padded_params)
+    logical = pp.param_logical_axes_pp(cfg)
+    p_shard = _tree_shardings(mesh, logical)
+    opt_cfg = adamw.AdamWConfig(moment_dtype="int8", total_steps=100_000)
+    o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+
+    # int8 moment shardings: the flattened (n_blocks, 256) moment arrays for
+    # layer params shard over the WHOLE mesh (data x model) — single-axis
+    # sharding leaves 50 GB/device of moments for llama3-405b; embed/head
+    # moments shard over 'model'
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+
+    def moment_shard(path_logical):
+        first = next((a for a in path_logical if a is not None), None)
+        if first == "fsdp":
+            axes = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+            s = NamedSharding(mesh, PS(axes))
+        elif first == "vocab":
+            s = NamedSharding(mesh, PS("model"))
+        else:
+            s = NamedSharding(mesh, PS())
+        return {"q": s, "s": s}
+
+    m_shard = jax.tree.map(moment_shard, logical,
+                           is_leaf=lambda v: isinstance(v, tuple))
+    o_shard = {"step": _named(mesh), "m": m_shard, "v": m_shard}
+    tok_shard = _named(mesh, None, "batch", None)  # (M, mb@pod, seq)
+
+    def train_step(params, opt_state, tokens, labels):
+        t = tokens.reshape(n_micro, batch // n_micro, seq)
+        l = labels.reshape(n_micro, batch // n_micro, seq)
+        loss, grads = pptp.pipeline_tp_loss_and_grads(
+            params, t, l, cfg, pc, mesh)
+        new_p, new_o, metrics = adamw.update(grads, opt_state, params, opt_cfg)
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    inputs = (
+        p_shape, o_shape,
+        _sds((batch, seq), jnp.int32), _sds((batch, seq), jnp.int32),
+    )
+    from repro.launch.analytic import lm_cell
+
+    tp = mesh.shape.get("model", 1)
+    ana = lm_cell(cfg, "train", batch, seq, accum=n_micro, dp=n_stages * pod_dp,
+                  tp=tp, moment_bytes=1)
+    return BuiltStep(
+        name=f"{spec.name}:train-pp",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(p_shard, o_shard, _named(mesh, "batch", None),
+                      _named(mesh, "batch", None)),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1),
+        model_flops=(6.0 * cfg.active_param_count() * batch * seq
+                     + 6.0 * batch * cfg.n_layers * cfg.n_heads * cfg.dh * seq ** 2),
+        note=f"PP stages={n_stages} micros={n_micro} mb={mb} int8-moments",
+        analytic={"flops_global": ana.flops_global,
+                  "bytes_per_device": ana.bytes_per_device, **ana.detail},
+    )
+
+
+# ===========================================================================
+# GNN family (gcn / gin / gatedgcn)
+# ===========================================================================
+
+
+def _gnn_opt(params_shape):
+    return adamw.AdamWConfig(lr=1e-2, weight_decay=0.0, total_steps=1000)
+
+
+def _pad_edges(e: int) -> int:
+    """Edge buffers pad to a 1024 multiple (sentinel src=dst=n, w=0) so edge
+    arrays shard evenly over the full 512-chip mesh."""
+    return ((e + 1023) // 1024) * 1024
+
+
+def build_gnn_full(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    n, e, dfeat = shape["n_nodes"], shape["n_edges"], shape["d_feat"]
+    cfg0 = spec.make_config()
+    cfg = dataclasses.replace(cfg0, d_in=dfeat)
+    if shape.get("kind") == "batched":
+        b = shape.get("batch", 1)
+        n, e = n * b, e * b
+    e = _pad_edges(e)
+
+    p_shape = _abstract(lambda: gnn_m.init_params(jax.random.key(0), cfg))
+    opt_cfg = _gnn_opt(p_shape)
+    o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+
+    edge_shard = _named(mesh, "edges")
+    rep = _named(mesh)
+
+    n_graphs = shape.get("batch", 1) if cfg.readout == "graph" else 1
+
+    def train_step(params, opt_state, feats, src, dst, wgt, labels, mask, gids):
+        def loss(p):
+            return gnn_m.loss_fn(
+                p, feats, src, dst, wgt, labels, cfg,
+                mask=mask if cfg.readout == "node" else None,
+                graph_ids=gids, n_graphs=n_graphs,
+            )
+
+        lv, g = jax.value_and_grad(loss)(params)
+        new_p, new_o, metrics = adamw.update(g, opt_state, params, opt_cfg)
+        metrics["loss"] = lv
+        return new_p, new_o, metrics
+
+    lbl_n = n_graphs if cfg.readout == "graph" else n
+    inputs = (
+        p_shape, o_shape,
+        _sds((n, dfeat), jnp.float32),
+        _sds((e,), jnp.int32), _sds((e,), jnp.int32), _sds((e,), jnp.float32),
+        _sds((lbl_n,), jnp.int32), _sds((lbl_n,), jnp.float32),
+        _sds((n,), jnp.int32),
+    )
+    return BuiltStep(
+        name=f"{spec.name}:train",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(rep, rep, rep, edge_shard, edge_shard, edge_shard, rep, rep, rep),
+        out_shardings=(rep, rep, None),
+        donate_argnums=(0, 1),
+        model_flops=_gnn_model_flops(cfg, n, e),
+        note=f"edge-sharded over {mesh.axis_names}",
+    )
+
+
+def build_gatedgcn_edgeshard(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    """§Perf B2: fully-manual edge-sharded GatedGCN — edge state/intermediates
+    live as LOCAL shards; only (N, d) node reductions psum across the mesh."""
+    n, e, dfeat = shape["n_nodes"], shape["n_edges"], shape["d_feat"]
+    e = _pad_edges(e)
+    cfg = dataclasses.replace(spec.make_config(), d_in=dfeat)
+    p_shape = _abstract(lambda: gnn_m.init_params(jax.random.key(0), cfg))
+    opt_cfg = _gnn_opt(p_shape)
+    o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+    rep = _named(mesh)
+    axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+    edge_shard = _named(mesh, "edges")
+    loss_sharded = gnn_m.make_edgesharded_gatedgcn(cfg, mesh, n, axes=axes)
+
+    def train_step(params, opt_state, feats, src, dst, wgt, labels, mask):
+        lv, g = jax.value_and_grad(loss_sharded)(
+            params, feats, src, dst, wgt, labels, mask)
+        new_p, new_o, metrics = adamw.update(g, opt_state, params, opt_cfg)
+        metrics["loss"] = lv
+        return new_p, new_o, metrics
+
+    inputs = (
+        p_shape, o_shape,
+        _sds((n, dfeat), jnp.float32),
+        _sds((e,), jnp.int32), _sds((e,), jnp.int32), _sds((e,), jnp.float32),
+        _sds((n,), jnp.int32), _sds((n,), jnp.float32),
+    )
+    return BuiltStep(
+        name=f"{spec.name}:train-edgeshard",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(rep, rep, rep, edge_shard, edge_shard, edge_shard, rep, rep),
+        out_shardings=(rep, rep, None),
+        donate_argnums=(0, 1),
+        model_flops=_gnn_model_flops(cfg, n, e),
+        note=f"manual shard_map over {axes}",
+    )
+
+
+def _gnn_model_flops(cfg, n, e) -> float:
+    """2*(gather-mults) + dense layer GEMMs, fwd+bwd(x3)."""
+    d = cfg.d_hidden
+    per_layer = 2.0 * e * d + 2.0 * n * d * d
+    if cfg.kind == "gatedgcn":
+        per_layer = 2.0 * 3 * e * d + 2.0 * 5 * n * d * d
+    first = 2.0 * n * cfg.d_in * d
+    return 3.0 * (cfg.n_layers * per_layer + first)
+
+
+def build_gnn_sampled(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    """minibatch_lg: device-side fanout sampling + block training."""
+    n, e = shape["n_nodes"], shape["n_edges"]
+    dfeat = shape["d_feat"]
+    bn = shape["batch_nodes"]
+    f1, f2 = shape["fanout"]
+    # sampled training is node-level supervision regardless of arch readout
+    cfg = dataclasses.replace(spec.make_config(), d_in=dfeat, readout="node")
+
+    p_shape = _abstract(lambda: gnn_m.init_params(jax.random.key(0), cfg))
+    opt_cfg = _gnn_opt(p_shape)
+    o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+    rep = _named(mesh)
+
+    n1 = bn * f1                # hop-1 sampled nodes
+    n2 = n1 * f2                # hop-2 sampled nodes
+    n_local = bn + n1 + n2
+    e_local = n1 + n2
+
+    def train_step(params, opt_state, row_ptr, col_idx, feats, labels, seeds, seed):
+        from repro.graph.csr import CSR
+        from repro.graph.sampler import sample_block
+
+        csr = CSR(row_ptr, col_idx, jnp.ones((col_idx.shape[0],), jnp.float32),
+                  jnp.zeros((col_idx.shape[0],), jnp.int32))
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        b1 = sample_block(csr, seeds, f1, k1)            # n1 edges into seeds
+        b2 = sample_block(csr, b1.src_nodes, f2, k2)     # n2 edges into hop1
+        # local graph: [seeds | hop1 | hop2]
+        gnodes = jnp.concatenate([seeds, b1.src_nodes, b2.src_nodes])
+        src_l = jnp.concatenate(
+            [bn + jnp.arange(n1, dtype=jnp.int32),
+             bn + n1 + jnp.arange(n2, dtype=jnp.int32)]
+        )
+        dst_l = jnp.concatenate([b1.dst_local, bn + b2.dst_local])
+        bf = feats[gnodes]
+        bl = labels[seeds]
+        mask = jnp.ones((n_local,), jnp.float32).at[bn:].set(0.0)
+        lbl_full = jnp.zeros((n_local,), jnp.int32).at[:bn].set(bl)
+
+        def loss(p):
+            return gnn_m.loss_fn(
+                p, bf, src_l, dst_l, None, lbl_full, cfg, mask=mask
+            )
+
+        lv, g = jax.value_and_grad(loss)(params)
+        new_p, new_o, metrics = adamw.update(g, opt_state, params, opt_cfg)
+        metrics["loss"] = lv
+        return new_p, new_o, metrics
+
+    inputs = (
+        p_shape, o_shape,
+        _sds((n + 1,), jnp.int32), _sds((e,), jnp.int32),
+        _sds((n, dfeat), jnp.float32), _sds((n,), jnp.int32),
+        _sds((bn,), jnp.int32), _sds((), jnp.uint32),
+    )
+    seed_shard = _named(mesh, "batch")
+    return BuiltStep(
+        name=f"{spec.name}:train-sampled",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(rep, rep, rep, rep, rep, rep, seed_shard, rep),
+        out_shardings=(rep, rep, None),
+        donate_argnums=(0, 1),
+        model_flops=_gnn_model_flops(cfg, n_local, e_local),
+        note=f"fanout {f1}-{f2}, block nodes={n_local} edges={e_local}",
+    )
+
+
+# ===========================================================================
+# DimeNet
+# ===========================================================================
+
+
+def build_dimenet(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    n, e = shape["n_nodes"], shape["n_edges"]
+    kind = shape.get("kind")
+    b = shape.get("batch", 1)
+    cfg = spec.make_config()
+    if kind == "batched":
+        n, e = n * b, e * b
+        t_cap = 8
+        n_graphs = b
+        e = _pad_edges(e)
+    elif kind == "sampled":
+        bn = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        n = bn + bn * f1 + bn * f1 * f2
+        e = bn * f1 + bn * f1 * f2
+        t_cap = f2  # structured triplets: hop2 edges feed their hop1 edge
+        n_graphs = 1
+        cfg = dataclasses.replace(cfg, loop_bilinear=True)
+    else:
+        t_cap = 4 if e > 1_000_000 else 8
+        n_graphs = 1
+        if e > 1_000_000:
+            cfg = dataclasses.replace(cfg, loop_bilinear=True)
+        e = _pad_edges(e)
+    t = e * t_cap
+
+    p_shape = _abstract(lambda: dmn.init_params(jax.random.key(0), cfg))
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0, total_steps=1000)
+    o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+    rep = _named(mesh)
+    edge_shard = _named(mesh, "edges")
+
+    def train_step(params, opt_state, nf, pos, src, dst, tkj, tji, targets, gids):
+        def loss(p):
+            return dmn.loss_fn(p, nf, pos, src, dst, tkj, tji, targets, cfg,
+                               graph_ids=gids, n_graphs=n_graphs)
+
+        lv, g = jax.value_and_grad(loss)(params)
+        new_p, new_o, metrics = adamw.update(g, opt_state, params, opt_cfg)
+        metrics["loss"] = lv
+        return new_p, new_o, metrics
+
+    inputs = (
+        p_shape, o_shape,
+        _sds((n, cfg.d_in), jnp.float32), _sds((n, 3), jnp.float32),
+        _sds((e,), jnp.int32), _sds((e,), jnp.int32),
+        _sds((t,), jnp.int32), _sds((t,), jnp.int32),
+        _sds((n_graphs, cfg.n_targets), jnp.float32),
+        _sds((n,), jnp.int32),
+    )
+    return BuiltStep(
+        name=f"{spec.name}:train",
+        kind="train",
+        fn=train_step,
+        abstract_inputs=inputs,
+        in_shardings=(rep, rep, rep, rep, edge_shard, edge_shard,
+                      edge_shard, edge_shard, rep, rep),
+        out_shardings=(rep, rep, None),
+        donate_argnums=(0, 1),
+        model_flops=3.0 * (2.0 * t * cfg.n_radial * cfg.n_spherical * cfg.d_hidden
+                           + 2.0 * 6 * e * cfg.d_hidden * cfg.d_hidden * cfg.n_blocks),
+        note=f"triplets={t} (cap {t_cap}/edge), loop_bilinear={cfg.loop_bilinear}",
+    )
+
+
+# ===========================================================================
+# recsys (DeepFM)
+# ===========================================================================
+
+
+def build_recsys(spec: ArchSpec, shape: dict, mesh: Mesh) -> BuiltStep:
+    cfg = spec.make_config()
+    kind = shape["kind"]
+    batch = shape["batch"]
+    p_shape = _abstract(lambda: dfm.init_params(jax.random.key(0), cfg))
+    p_shard = _tree_shardings(mesh, dfm.param_logical_axes(cfg))
+    batch_shard = _named(mesh, "batch", None)
+    rep = _named(mesh)
+
+    if kind == "train":
+        opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=1e-5, total_steps=100_000)
+        o_shape = _abstract(lambda: adamw.init(p_shape, opt_cfg))
+        o_shard = {"step": rep, "m": p_shard, "v": p_shard}
+
+        def train_step(params, opt_state, ids, labels):
+            lv, g = jax.value_and_grad(dfm.loss_fn)(params, ids, labels, cfg)
+            new_p, new_o, metrics = adamw.update(g, opt_state, params, opt_cfg)
+            metrics["loss"] = lv
+            return new_p, new_o, metrics
+
+        inputs = (p_shape, o_shape, _sds((batch, cfg.n_fields), jnp.int32),
+                  _sds((batch,), jnp.float32))
+        return BuiltStep(
+            name=f"{spec.name}:train", kind="train", fn=train_step,
+            abstract_inputs=inputs,
+            in_shardings=(p_shard, o_shard, batch_shard, _named(mesh, "batch")),
+            out_shardings=(p_shard, o_shard, None),
+            donate_argnums=(0, 1),
+            model_flops=3.0 * 2.0 * batch * (
+                cfg.n_fields * cfg.embed_dim * cfg.mlp[0]
+                + sum(a * b for a, b in zip(cfg.mlp[:-1], cfg.mlp[1:]))
+            ),
+        )
+
+    if kind == "retrieval":
+        n_cand = shape["n_candidates"]
+
+        def retrieve(params, ids, cand):
+            uv = dfm.user_vector(params, ids, cfg)
+            scores = dfm.score_candidates(uv, cand)
+            top_v, top_i = jax.lax.top_k(scores, 128)
+            return top_v, top_i
+
+        inputs = (p_shape, _sds((batch, cfg.n_fields), jnp.int32),
+                  _sds((n_cand, cfg.embed_dim), jnp.float32))
+        return BuiltStep(
+            name=f"{spec.name}:retrieval", kind="retrieval", fn=retrieve,
+            abstract_inputs=inputs,
+            # batch=1 query is replicated; candidates shard over 'model'
+            in_shardings=(p_shard, rep, _named(mesh, "candidates", None)),
+            out_shardings=None,
+            model_flops=2.0 * batch * n_cand * cfg.embed_dim,
+        )
+
+    # pure inference scoring
+    def serve_step(params, ids):
+        return dfm.forward(params, ids, cfg)
+
+    inputs = (p_shape, _sds((batch, cfg.n_fields), jnp.int32))
+    return BuiltStep(
+        name=f"{spec.name}:{kind}", kind="infer", fn=serve_step,
+        abstract_inputs=inputs,
+        in_shardings=(p_shard, batch_shard),
+        out_shardings=None,
+        model_flops=2.0 * batch * (
+            cfg.n_fields * cfg.embed_dim * cfg.mlp[0]
+            + sum(a * b for a, b in zip(cfg.mlp[:-1], cfg.mlp[1:]))
+        ),
+    )
+
+
+# ===========================================================================
+# dispatcher
+# ===========================================================================
+
+
+def build(spec: ArchSpec, shape_name: str, mesh: Mesh, variant: str = "") -> BuiltStep:
+    shape = spec.shapes[shape_name]
+    with sh.activate(mesh):
+        if spec.family == "lm":
+            kind = shape["kind"]
+            if kind == "train":
+                if variant == "pp":
+                    return build_lm_train_pp(spec, shape, mesh)
+                if variant == "zero1":
+                    return build_lm_train(spec, shape, mesh, zero_stage=1)
+                return build_lm_train(spec, shape, mesh)
+            return build_lm_serve(spec, shape, mesh,
+                                  "prefill" if kind == "prefill" else "decode",
+                                  variant=variant)
+        if spec.family == "gnn":
+            if shape.get("kind") == "sampled":
+                return build_gnn_sampled(spec, shape, mesh)
+            if variant == "edgeshard" and spec.make_config().kind == "gatedgcn":
+                return build_gatedgcn_edgeshard(spec, shape, mesh)
+            return build_gnn_full(spec, shape, mesh)
+        if spec.family == "dimenet":
+            return build_dimenet(spec, shape, mesh)
+        if spec.family == "recsys":
+            return build_recsys(spec, shape, mesh)
+    raise ValueError(spec.family)

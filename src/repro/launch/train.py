@@ -1,0 +1,141 @@
+"""Production training driver (runnable at CPU scale, mesh-general).
+
+Wires together: config registry, data pipeline, AdamW (+optional compressed
+DP all-reduce), checkpoint manager (atomic/async/keep-N, auto-resume),
+preemption guard, heartbeat, and the straggler watchdog.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+      --preset tiny --steps 200 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import TokenStream
+from repro.distributed import sharding as sh
+from repro.distributed.fault import Heartbeat, PreemptionGuard, StepWatchdog
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tfm
+from repro.optim import adamw
+
+
+def tiny_config(base: tfm.TransformerConfig, d_model=256, n_layers=4,
+                vocab=2048) -> tfm.TransformerConfig:
+    """Scale an assigned config down for CPU execution, preserving family
+    (GQA ratio, MoE-ness)."""
+    moe = base.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, n_experts=min(moe.n_experts, 8),
+                                  top_k=min(moe.top_k, 2))
+    return dataclasses.replace(
+        base, d_model=d_model, n_layers=n_layers,
+        n_heads=max(4, d_model // 64), n_kv=max(2, d_model // 128),
+        head_dim=64, d_ff=d_model * 4 if moe is None else d_model,
+        vocab=vocab, moe=moe, dtype="float32",
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--heartbeat", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    spec = configs.get(args.arch)
+    assert spec.family == "lm", "train.py drives LM archs; see examples/ for others"
+    base = spec.make_config()
+    if args.preset == "tiny":
+        cfg = tiny_config(base)
+    elif args.preset == "100m":
+        cfg = tiny_config(base, d_model=768, n_layers=12, vocab=8192)
+    else:
+        cfg = base
+
+    mesh = make_local_mesh(1, 1)
+    opt_cfg = adamw.AdamWConfig(
+        lr=args.lr, total_steps=args.steps, warmup_steps=max(10, args.steps // 20),
+        weight_decay=0.01,
+    )
+    stream = TokenStream(cfg.vocab, args.batch, args.seq, seed=args.seed)
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=3)
+    guard = PreemptionGuard().install()
+    wd = StepWatchdog()
+    hb = Heartbeat(args.heartbeat, 5.0) if args.heartbeat else None
+
+    with sh.activate(mesh):
+        params = tfm.init_params(jax.random.key(args.seed), cfg)
+        opt_state = adamw.init(params, opt_cfg)
+        start_step = 0
+
+        # ---- auto-resume -------------------------------------------------
+        restored, manifest = mgr.restore_latest({"p": params, "o": opt_state})
+        if restored is not None:
+            params, opt_state = restored["p"], restored["o"]
+            start_step = manifest["step"]
+            if "data" in manifest.get("extra", {}):
+                stream.restore(manifest["extra"]["data"])
+            print(f"[resume] from step {start_step}")
+
+        @jax.jit
+        def train_step(params, opt_state, tokens, labels):
+            loss, g = jax.value_and_grad(tfm.loss_fn)(params, tokens, labels, cfg)
+            p2, o2, metrics = adamw.update(g, opt_state, params, opt_cfg)
+            metrics["loss"] = loss
+            return p2, o2, metrics
+
+        nparams = sum(x.size for x in jax.tree.leaves(params))
+        print(f"[train] arch={args.arch} preset={args.preset} params={nparams/1e6:.1f}M")
+
+        t_start = time.time()
+        for step in range(start_step, args.steps):
+            if guard.preempted:
+                print("[preempt] SIGTERM received -> checkpoint + exit")
+                mgr.save(step, {"p": params, "o": opt_state},
+                         extra={"data": stream.state()}, block=True)
+                return 1
+            wd.start()
+            x, y = next(stream)
+            params, opt_state, m = train_step(
+                params, opt_state, jnp.asarray(x), jnp.asarray(y)
+            )
+            if wd.stop():
+                print(f"[straggler] step {step} above {wd.factor}x EMA")
+            if hb:
+                hb.beat(step)
+            if (step + 1) % args.log_every == 0:
+                print(
+                    f"step {step+1} loss {float(m['loss']):.4f} "
+                    f"gnorm {float(m['grad_norm']):.3f} lr {float(m['lr']):.2e} "
+                    f"({(time.time()-t_start)/(step-start_step+1):.2f}s/step)"
+                )
+            if (step + 1) % args.ckpt_every == 0:
+                mgr.save(step + 1, {"p": params, "o": opt_state},
+                         extra={"data": stream.state()})
+        mgr.save(args.steps, {"p": params, "o": opt_state},
+                 extra={"data": stream.state()}, block=True)
+        print(json.dumps({"final_loss": float(m["loss"]), **wd.summary()}))
+    guard.uninstall()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

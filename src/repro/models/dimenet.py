@@ -1,0 +1,203 @@
+"""DimeNet (directional message passing) — the triplet-gather GNN regime.
+
+Faithful structure per arXiv:2003.03123: edge messages m_ji embedded from
+radial basis of |r_ji|; interaction blocks refresh m_ji from *triplets*
+(k->j->i) through a directional basis of (d_kj, angle_kji) contracted by a
+bilinear layer (n_bilinear=8); output blocks scatter edge messages to nodes.
+Config: 6 blocks, d_hidden=128, n_spherical=7, n_radial=6.
+
+TPU adaptations (DESIGN.md §4):
+  * the spherical-Bessel/Legendre 2D basis is replaced by an equivalent-rank
+    Fourier directional basis sin(n pi d / c)/d x cos(l theta) — same tensor
+    shape (n_radial x n_spherical), same triplet dataflow, MXU-friendly;
+  * triplet fan-in is capped at `t_per_edge` for non-molecular graphs
+    (DimeNet++-style neighbor cap) to bound the O(sum deg^2) blowup;
+  * non-geometric graphs get synthesized positions (documented stub — the
+    assigned shape grid pairs DimeNet with citation/product graphs).
+
+Triplets are built host-side by `build_triplets`; device arrays (t_kj, t_ji)
+index EDGES, and the aggregation m_ji <- sum_k basis x m_kj is one more ACC
+segment combine — the paper's primitive again.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    d_in: int = 16           # node-type embedding size
+    n_targets: int = 1
+    t_per_edge: int = 8      # triplet cap for non-molecular graphs
+    #: stream the bilinear contraction over the n_bilinear slices instead of
+    #: materializing (T, n_bilinear, d) — needed when T is 10^8-scale
+    #: (ogb_products / minibatch_lg cells)
+    loop_bilinear: bool = False
+
+
+def build_triplets(src: np.ndarray, dst: np.ndarray, n: int, cap: int):
+    """Host-side triplet lists: for each edge e1=(j->i), incoming edges
+    e2=(k->j), k != i, up to `cap` per edge. Returns (t_kj, t_ji) edge ids
+    padded with m (sentinel)."""
+    m = src.shape[0]
+    in_edges: list[list[int]] = [[] for _ in range(n)]
+    for e in range(m):
+        in_edges[dst[e]].append(e)
+    t_kj, t_ji = [], []
+    for e1 in range(m):
+        j, i = src[e1], dst[e1]
+        cnt = 0
+        for e2 in in_edges[j]:
+            if src[e2] == i:
+                continue
+            t_kj.append(e2)
+            t_ji.append(e1)
+            cnt += 1
+            if cnt >= cap:
+                break
+    if not t_kj:
+        t_kj, t_ji = [m], [m]
+    return np.asarray(t_kj, np.int32), np.asarray(t_ji, np.int32)
+
+
+def radial_basis(d: jnp.ndarray, n_radial: int, cutoff: float) -> jnp.ndarray:
+    """sin(n pi d/c)/d Bessel-type radial basis with smooth cutoff envelope."""
+    d = jnp.maximum(d, 1e-3)
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    u = d[:, None] / cutoff
+    env = jnp.where(u < 1.0, (1 - u) ** 2 * (1 + 2 * u), 0.0)   # smooth cutoff
+    return env * jnp.sin(n[None, :] * jnp.pi * u) / jnp.maximum(u, 1e-3)
+
+
+def angular_basis(theta: jnp.ndarray, n_spherical: int) -> jnp.ndarray:
+    l = jnp.arange(n_spherical, dtype=jnp.float32)
+    return jnp.cos(l[None, :] * theta[:, None])
+
+
+def init_params(key: jax.Array, cfg: DimeNetConfig) -> dict:
+    ks = iter(jax.random.split(key, 8 * cfg.n_blocks + 10))
+    d = cfg.d_hidden
+
+    def w(*shape, scale=None):
+        s = scale or shape[-2] ** -0.5 if len(shape) >= 2 else 0.02
+        return jax.random.normal(next(ks), shape, jnp.float32) * s
+
+    p = {
+        "atom_embed": w(cfg.d_in, d, scale=cfg.d_in ** -0.5),
+        "rbf_embed": w(cfg.n_radial, d, scale=0.3),
+        "msg_embed": w(3 * d, d),
+        "blocks": [],
+        "out_rbf": w(cfg.n_radial, d, scale=0.3),
+        "out1": w(d, d),
+        "out2": w(d, cfg.n_targets),
+    }
+    for _ in range(cfg.n_blocks):
+        p["blocks"].append(
+            {
+                "w_msg": w(d, d),
+                "w_kj": w(d, d),
+                "bilinear": jax.random.normal(
+                    next(ks), (cfg.n_radial * cfg.n_spherical, cfg.n_bilinear, d),
+                    jnp.float32,
+                ) * 0.05,
+                "w_bi_out": w(cfg.n_bilinear * d, d),
+                "w_update": w(d, d),
+                "rbf_gate": w(cfg.n_radial, d, scale=0.3),
+            }
+        )
+    return p
+
+
+def forward(params, node_feat, pos, src, dst, t_kj, t_ji, cfg: DimeNetConfig,
+            graph_ids=None, n_graphs: int = 1):
+    """node_feat (N, d_in) one-hot-ish types; pos (N, 3); edges (j->i).
+    Returns (n_graphs, n_targets) regression output."""
+    n = node_feat.shape[0]
+    m = src.shape[0]
+    d = cfg.d_hidden
+    src_c = jnp.minimum(src, n - 1)
+    dst_c = jnp.minimum(dst, n - 1)
+
+    from repro.distributed import sharding as _sh
+
+    rel = _sh.constrain(pos[dst_c] - pos[src_c], "edges", None)   # (E, 3) r_ji
+    dist = jnp.linalg.norm(rel + 1e-9, axis=-1)
+    rbf = _sh.constrain(
+        radial_basis(dist, cfg.n_radial, cfg.cutoff), "edges", None)  # (E, R)
+
+    h = node_feat @ params["atom_embed"]                          # (N, d)
+    e_in = jnp.concatenate(
+        [h[src_c], h[dst_c], rbf @ params["rbf_embed"]], axis=-1
+    )
+    msg = jax.nn.silu(e_in @ params["msg_embed"])                 # (E, d)
+    msg = _sh.constrain(msg, "edges", None)
+
+    # triplet geometry: angle between r_kj (edge e2) and r_ji (edge e1)
+    tk = jnp.minimum(t_kj, m - 1)
+    tj = jnp.minimum(t_ji, m - 1)
+    valid = (t_kj < m)[:, None]
+    v1 = rel[tk]
+    v2 = rel[tj]
+    cosang = jnp.sum(v1 * v2, -1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-9
+    )
+    theta = jnp.arccos(jnp.clip(cosang, -1 + 1e-6, 1 - 1e-6))
+    sbf = (
+        rbf[tk][:, :, None] * angular_basis(theta, cfg.n_spherical)[:, None, :]
+    ).reshape(-1, cfg.n_radial * cfg.n_spherical)                 # (T, R*S)
+
+    sbf = _sh.constrain(sbf, "edges", None)
+
+    for blk in params["blocks"]:
+        m_kj = _sh.constrain(
+            jax.nn.silu(msg[tk] @ blk["w_kj"]), "edges", None)    # (T, d)
+        if cfg.loop_bilinear:
+            # stream over bilinear slices: peak memory O(T*d), not O(T*B*d)
+            def one_slice(k, _sbf=sbf, _m=m_kj, _blk=blk):
+                basis_k = _sh.constrain(
+                    _sbf @ _blk["bilinear"][:, k, :], "edges", None)  # (T, d)
+                tri_k = jnp.where(valid, basis_k * _m, 0.0)
+                part = jax.ops.segment_sum(tri_k, tj, num_segments=m)
+                return _sh.constrain(part, "edges", None)
+            agg = jax.lax.map(one_slice, jnp.arange(cfg.n_bilinear))
+            agg = agg.transpose(1, 0, 2).reshape(m, cfg.n_bilinear * d)
+            agg = _sh.constrain(agg, "edges", None)
+        else:
+            # bilinear contraction: (T,RS) x (RS,B,d) x (T,d) -> (T, B, d)
+            basis = jnp.einsum("tb,bkd->tkd", sbf, blk["bilinear"])
+            tri = basis * m_kj[:, None, :]
+            tri = jnp.where(valid[:, :, None], tri, 0.0)
+            agg = jax.ops.segment_sum(
+                tri.reshape(-1, cfg.n_bilinear * d), tj, num_segments=m
+            )                                                      # (E, B*d)
+        upd = jax.nn.silu(msg @ blk["w_msg"]) + agg @ blk["w_bi_out"]
+        msg = msg + jax.nn.silu(upd @ blk["w_update"]) * (rbf @ blk["rbf_gate"])
+        msg = _sh.constrain(msg, "edges", None)
+
+    # output: edge -> node -> graph (raw dst so sentinel-padded edges drop
+    # into the scratch row rather than polluting node n-1)
+    node_out = jax.ops.segment_sum(msg * (rbf @ params["out_rbf"]), dst,
+                                   num_segments=n + 1)[:n]
+    node_out = jax.nn.silu(node_out @ params["out1"])
+    gi = graph_ids if graph_ids is not None else jnp.zeros((n,), jnp.int32)
+    pooled = jax.ops.segment_sum(node_out, gi, num_segments=n_graphs)
+    return pooled @ params["out2"]
+
+
+def loss_fn(params, node_feat, pos, src, dst, t_kj, t_ji, targets,
+            cfg: DimeNetConfig, graph_ids=None, n_graphs: int = 1):
+    pred = forward(params, node_feat, pos, src, dst, t_kj, t_ji, cfg,
+                   graph_ids, n_graphs)
+    return jnp.mean((pred - targets) ** 2)

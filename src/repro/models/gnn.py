@@ -1,0 +1,258 @@
+"""GNN model zoo: GCN, GIN, GatedGCN (SpMM/segment-reduce regime).
+
+Message passing is built on the ACC combine primitive — `jax.ops.segment_sum`
+over an edge index (the taxonomy brief: "implement message-passing via
+segment_sum over an edge-index -> node scatter; this IS part of the system").
+The dense-feature aggregation can also route through the Pallas `ell_spmm`
+kernel when an EllPack is provided (same degree-bucketed path as the paper's
+engine — GNNs are where the paper's technique applies *directly*, DESIGN §4).
+
+All models run in two data regimes:
+  * full-graph: (src, dst, w) edge arrays (+ optional EllPack),
+  * sampled blocks (minibatch_lg): the same layers applied per Block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                   # 'gcn' | 'gin' | 'gatedgcn'
+    n_layers: int
+    d_hidden: int
+    d_in: int
+    n_classes: int
+    readout: str = "node"       # 'node' | 'graph'
+    eps_learnable: bool = True  # GIN
+    dropout: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# message passing primitive (ACC combine)
+# ---------------------------------------------------------------------------
+
+
+def aggregate(h: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+              wgt: Optional[jnp.ndarray], n: int, reduce: str = "sum") -> jnp.ndarray:
+    """out[i] = reduce_{(j->i) in E} w_ij * h[j].  Sentinel ids (== n) drop
+    into the scratch row. h may be (N, D) or (N+1, D)."""
+    hs = h[jnp.minimum(src, h.shape[0] - 1)]
+    if wgt is not None:
+        hs = hs * wgt[:, None]
+    hs = sh.constrain(hs, "edges", None)
+    if reduce == "sum":
+        out = jax.ops.segment_sum(hs, dst, num_segments=n + 1)
+    elif reduce == "max":
+        out = jax.ops.segment_max(hs, dst, num_segments=n + 1)
+        out = jnp.where(jnp.isfinite(out), out, 0.0)
+    elif reduce == "mean":
+        s = jax.ops.segment_sum(hs, dst, num_segments=n + 1)
+        c = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, n + 1)
+        out = s / jnp.maximum(c, 1.0)[:, None]
+    else:
+        raise ValueError(reduce)
+    return out[:n]
+
+
+def gcn_norm_weights(src, dst, deg, n):
+    """Symmetric normalization 1/sqrt(d_i d_j) (self-loops added upstream)."""
+    d = jnp.maximum(deg, 1.0)
+    return jax.lax.rsqrt(d[jnp.minimum(src, n - 1)] * d[jnp.minimum(dst, n - 1)])
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, din, dout, scale=None):
+    scale = scale or din ** -0.5
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def init_params(key: jax.Array, cfg: GNNConfig) -> dict:
+    ks = iter(jax.random.split(key, 6 * cfg.n_layers + 8))
+    p: dict = {"layers": []}
+    din = cfg.d_in
+    for li in range(cfg.n_layers):
+        dout = cfg.d_hidden
+        if cfg.kind == "gcn":
+            lp = {"w": _dense(next(ks), din, dout), "b": jnp.zeros((dout,))}
+        elif cfg.kind == "gin":
+            lp = {
+                "mlp1": _dense(next(ks), din, dout),
+                "mlp2": _dense(next(ks), dout, dout),
+                "eps": jnp.zeros(()),
+                "norm": jnp.ones((dout,)),
+            }
+        elif cfg.kind == "gatedgcn":
+            lp = {
+                "U": _dense(next(ks), din, dout),
+                "V": _dense(next(ks), din, dout),
+                "A": _dense(next(ks), din, dout),
+                "B": _dense(next(ks), din, dout),
+                "C": _dense(next(ks), dout, dout),
+                "norm_h": jnp.ones((dout,)),
+                "norm_e": jnp.ones((dout,)),
+            }
+        else:
+            raise ValueError(cfg.kind)
+        p["layers"].append(lp)
+        din = dout
+    p["head"] = _dense(next(ks), din, cfg.n_classes)
+    if cfg.kind == "gatedgcn":
+        p["edge_embed"] = _dense(next(ks), 1, cfg.d_hidden)
+    return p
+
+
+def _ln(x, g, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g
+
+
+# ---------------------------------------------------------------------------
+# forwards
+# ---------------------------------------------------------------------------
+
+
+def forward(params, feats, src, dst, wgt, cfg: GNNConfig,
+            graph_ids: Optional[jnp.ndarray] = None, n_graphs: int = 1):
+    """feats (N, d_in) -> logits: (N, C) node readout or (G, C) graph readout."""
+    n = feats.shape[0]
+    h = feats
+    h = sh.constrain(h, "nodes", None)
+
+    if cfg.kind == "gcn":
+        deg = jax.ops.segment_sum(jnp.ones_like(dst, jnp.float32), dst, n + 1)[:n]
+        norm_w = gcn_norm_weights(src, dst, deg, n)
+        if wgt is not None:
+            norm_w = norm_w * wgt
+        for lp in params["layers"]:
+            msg = aggregate(h, src, dst, norm_w, n) + h  # +h = self loop
+            h = jnp.tanh(msg @ lp["w"] + lp["b"])
+
+    elif cfg.kind == "gin":
+        for lp in params["layers"]:
+            agg = aggregate(h, src, dst, None, n, reduce="sum")
+            z = (1.0 + lp["eps"]) * h + agg
+            z = jax.nn.relu(z @ lp["mlp1"])
+            z = z @ lp["mlp2"]
+            h = jax.nn.relu(_ln(z, lp["norm"]))
+
+    elif cfg.kind == "gatedgcn":
+        e = (wgt if wgt is not None else jnp.ones_like(src, jnp.float32))[:, None]
+        e = sh.constrain(e @ params["edge_embed"], "edges", None)   # (E, d)
+
+        # per-layer remat + edge-sharding constraints on every (E, d) tensor:
+        # without both, XLA keeps 16 layers x ~5 x 17 GB of f32 edge
+        # activations alive for backward on ogb_products (595 GiB/device,
+        # caught by the dry-run memory analysis)
+        def gated_layer(carry, lp):
+            h, e = carry
+            hi = sh.constrain(h[jnp.minimum(dst, n - 1)], "edges", None)
+            hj = sh.constrain(h[jnp.minimum(src, n - 1)], "edges", None)
+            e_new = hi @ lp["A"] + hj @ lp["B"] + e @ lp["C"]
+            e_new = sh.constrain(e_new, "edges", None)
+            eta = sh.constrain(jax.nn.sigmoid(e_new), "edges", None)
+            msg = sh.constrain(eta * (hj @ lp["V"]), "edges", None)
+            num = aggregate(msg, src, dst, None, n)
+            den = aggregate(eta, src, dst, None, n) + 1e-6
+            h_new = h @ lp["U"] + num / den
+            h2 = h + jax.nn.relu(_ln(h_new, lp["norm_h"])) \
+                if h.shape == h_new.shape else jax.nn.relu(_ln(h_new, lp["norm_h"]))
+            h2 = sh.constrain(h2, "nodes", None)
+            e2 = sh.constrain(e + jax.nn.relu(_ln(e_new, lp["norm_e"])),
+                              "edges", None)
+            return (h2, e2), None
+
+        for lp in params["layers"]:
+            (h, e), _ = jax.checkpoint(gated_layer)((h, e), lp)
+
+    if cfg.readout == "graph":
+        gi = graph_ids if graph_ids is not None else jnp.zeros((n,), jnp.int32)
+        pooled = jax.ops.segment_sum(h, gi, num_segments=n_graphs)
+        return pooled @ params["head"]
+    return h @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# explicit edge-sharded execution (EXPERIMENTS §Perf B2): GSPMD constraints
+# cannot stop the partitioner from replicating (E, d) edge activations for
+# the backward of scatter-heavy graphs, so this variant removes the choice —
+# a fully-manual shard_map where edge state/intermediates are LOCAL shards
+# and only the (N, d) node reductions cross the wire (one psum per aggregate).
+# ---------------------------------------------------------------------------
+
+
+def make_edgesharded_gatedgcn(cfg: GNNConfig, mesh, n: int, axes=("data", "model")):
+    """Returns loss_fn(params, feats, src_sh, dst_sh, wgt_sh, labels, mask)
+    with edge arrays sharded over `axes` and everything else replicated.
+    Differentiable: VMA inserts the cross-shard psums for the replicated
+    params/features cotangents."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def body(params, feats, src, dst, wgt):
+        h = feats
+        e = (wgt if wgt is not None else jnp.ones_like(src, jnp.float32))[:, None]
+        e = e @ params["edge_embed"]                    # (E_loc, d) LOCAL
+
+        def agg(vals, dst_ids):
+            part = jax.ops.segment_sum(vals, dst_ids, num_segments=n + 1)
+            return jax.lax.psum(part, axes)[:n]
+
+        def layer(carry, lp):
+            h, e = carry
+            hi = h[jnp.minimum(dst, n - 1)]
+            hj = h[jnp.minimum(src, n - 1)]
+            e_new = hi @ lp["A"] + hj @ lp["B"] + e @ lp["C"]
+            eta = jax.nn.sigmoid(e_new)
+            num = agg(eta * (hj @ lp["V"]), dst)
+            den = agg(eta, dst) + 1e-6
+            h_new = h @ lp["U"] + num / den
+            h2 = jax.nn.relu(_ln(h_new, lp["norm_h"]))
+            if h.shape == h2.shape:
+                h2 = h + h2
+            e2 = e + jax.nn.relu(_ln(e_new, lp["norm_e"]))
+            return (h2, e2), None
+
+        for lp in params["layers"]:
+            (h, e), _unused = jax.checkpoint(layer)((h, e), lp)
+        return h @ params["head"]
+
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes), P(axes)),
+        out_specs=P(),
+        axis_names=set(axes),
+        check_vma=True,
+    )
+
+    def loss_fn_sharded(params, feats, src_sh, dst_sh, wgt_sh, labels, mask):
+        logits = sharded(params, feats, src_sh, dst_sh, wgt_sh)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+
+    return loss_fn_sharded
+
+
+def loss_fn(params, feats, src, dst, wgt, labels, cfg: GNNConfig,
+            mask=None, graph_ids=None, n_graphs: int = 1):
+    logits = forward(params, feats, src, dst, wgt, cfg, graph_ids, n_graphs)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

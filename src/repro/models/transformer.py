@@ -1,0 +1,263 @@
+"""Decoder-only transformer LM (dense + MoE), scan-stacked for deep configs.
+
+Serves all five assigned LM architectures (minitron-4b, granite-3-8b,
+llama3-405b, moonshot-v1-16b-a3b, granite-moe-1b-a400m).  Layer parameters
+are stacked on a leading [L, ...] axis and the forward pass is a
+`lax.scan` + `jax.checkpoint` (per-layer remat) — required for the 126-layer
+llama3-405b dry-run to compile in bounded time/memory.
+
+Sharding is expressed through logical axes (distributed/sharding.py):
+TP over heads/ff/vocab/experts on 'model', batch over ('pod','data'), FSDP
+('fsdp') on the parameter leading dims handled by the train-step's
+param shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.nn import layers as L
+from repro.nn.moe import MoEConfig, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None        # default d_model // n_heads
+    moe: Optional[MoEConfig] = None       # None = dense FFN
+    rope_theta: float = 10000.0
+    dtype: str = "float32"                # activations/params dtype
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+    #: emit explicit activation sharding constraints (GSPMD hints). The PP
+    #: path disables this: inside the stage shard_map the hints fight the
+    #: propagated weight shardings (8 GQA kv heads vs 16-way 'model') and
+    #: XLA resolves the conflict with catastrophic per-tile all-gathers.
+    tp_constrain: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 2048 multiple so the embedding shards evenly
+        over the 'model' axis (standard Megatron/MaxText practice)."""
+        return ((self.vocab + 2047) // 2048) * 2048
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.n_heads * self.dh * 2 + d * self.n_kv * self.dh * 2
+        if self.moe:
+            ffn = 3 * d * f * self.moe.n_experts + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * v * d + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        attn = d * self.n_heads * self.dh * 2 + d * self.n_kv * self.dh * 2
+        ffn = 3 * d * f * self.moe.top_k + d * self.moe.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, dh, h, hkv, f, v, l = (
+        cfg.d_model, cfg.dh, cfg.n_heads, cfg.n_kv, cfg.d_ff,
+        cfg.padded_vocab, cfg.n_layers,
+    )
+    ks = jax.random.split(key, 12)
+
+    def w(k, *shape, scale=None):
+        scale = scale if scale is not None else (shape[-2] ** -0.5)
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dt)
+
+    layers = {
+        "attn_norm": jnp.ones((l, d), dt),
+        "mlp_norm": jnp.ones((l, d), dt),
+        "wq": w(ks[0], l, d, h * dh),
+        "wk": w(ks[1], l, d, hkv * dh),
+        "wv": w(ks[2], l, d, hkv * dh),
+        "wo": w(ks[3], l, h * dh, d),
+    }
+    if cfg.moe:
+        e = cfg.moe.n_experts
+        layers.update(
+            router=w(ks[4], l, d, e, scale=d ** -0.5),
+            we1=w(ks[5], l, e, d, f),
+            we3=w(ks[6], l, e, d, f),
+            we2=w(ks[7], l, e, f, d, scale=f ** -0.5),
+        )
+    else:
+        layers.update(
+            w1=w(ks[5], l, d, f),
+            w3=w(ks[6], l, d, f),
+            w2=w(ks[7], l, f, d, scale=f ** -0.5),
+        )
+    return {
+        "embed": w(ks[8], v, d, scale=1.0 / (d ** 0.5)),
+        "layers": layers,
+        "final_norm": jnp.ones((d,), dt),
+        "lm_head": w(ks[9], d, v),
+    }
+
+
+def param_logical_axes(cfg: TransformerConfig) -> dict:
+    """Logical axes per parameter: 2-D sharding — TP axis ('heads'/'ff'/
+    'vocab'/'experts' -> 'model') x ZeRO-3 axis ('fsdp' -> 'data') on the
+    d_model dim.  Every assigned arch has d_model/d_ff/heads*dh divisible by
+    16, so shardings are even; the layer-stack dim stays replicated (126/24/40
+    layers do not divide 16)."""
+    la = {
+        "embed": ("vocab", "fsdp"),
+        "final_norm": (None,),
+        "lm_head": ("fsdp", "vocab"),
+        "layers": {
+            "attn_norm": (None, "fsdp"),
+            "mlp_norm": (None, "fsdp"),
+            "wq": (None, "fsdp", "heads"),
+            "wk": (None, "fsdp", None),   # kv proj replicated over model
+            "wv": (None, "fsdp", None),   # (n_kv < TP; group-major GQA)
+            "wo": (None, "heads", "fsdp"),
+        },
+    }
+    if cfg.moe:
+        la["layers"].update(
+            router=(None, "fsdp", None),
+            we1=(None, "experts", "fsdp", None),
+            we3=(None, "experts", "fsdp", None),
+            we2=(None, "experts", None, "fsdp"),
+        )
+    else:
+        la["layers"].update(
+            w1=(None, "fsdp", "ff"),
+            w3=(None, "fsdp", "ff"),
+            w2=(None, "ff", "fsdp"),
+        )
+    return la
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layer(cfg: TransformerConfig, x, lp, positions, kv_cache=None, cache_len=None,
+           attn_override=None):
+    h = L.rms_norm(x, lp["attn_norm"])
+    attn_out, new_kv = L.gqa_attention(
+        h, lp, n_heads=cfg.n_heads, n_kv=cfg.n_kv, positions=positions,
+        rope_theta=cfg.rope_theta, kv_cache=kv_cache, cache_len=cache_len,
+        constrain=cfg.tp_constrain, attn_override=attn_override,
+    )
+    x = x + attn_out
+    h = L.rms_norm(x, lp["mlp_norm"])
+    if cfg.moe:
+        b, s, d = h.shape
+        out, aux = moe_ffn(h.reshape(b * s, d), lp, cfg.moe)
+        out = out.reshape(b, s, d)
+    else:
+        out, aux = L.swiglu(h, lp["w1"], lp["w3"], lp["w2"]), 0.0
+    x = x + out
+    x = sh.constrain(x, "batch", None, None)
+    return x, new_kv, aux
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig):
+    """tokens (B, S) -> logits (B, S, V); returns (logits, aux_loss)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = sh.constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, lp):
+        x, aux = carry
+        x, _, a = _layer(cfg, x, lp, positions)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, 0.0), params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    return logits, aux
+
+
+def loss_fn(params, tokens, labels, cfg: TransformerConfig):
+    logits, aux = forward(params, tokens, cfg)
+    if cfg.padded_vocab != cfg.vocab:
+        # mask padded vocab lanes out of the softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return L.cross_entropy(logits, labels) + cfg.aux_loss_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with a static KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, cfg.n_kv, max_len, cfg.dh)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes() -> dict:
+    return {
+        "k": (None, "batch", None, "kv_seq", None),
+        "v": (None, "batch", None, "kv_seq", None),
+        "len": (),
+    }
+
+
+def decode_step(params: dict, cache: dict, tokens: jnp.ndarray,
+                cfg: TransformerConfig, attn_override=None):
+    """One serving step: tokens (B, S_new) appended at cache['len'].
+    Works for prefill (S_new = prompt) and decode (S_new = 1)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = sh.constrain(x, "batch", None, None)
+    pos0 = cache["len"]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, inputs):
+        x = carry
+        lp, ck, cv = inputs
+        x, (nk, nv), _ = _layer(
+            cfg, x, lp, positions, kv_cache=(ck, cv), cache_len=pos0,
+            attn_override=attn_override,
+        )
+        return x, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = x[:, -1:] @ params["lm_head"]
+    logits = sh.constrain(logits, "batch", None, "vocab")
+    new_cache = {"k": nks, "v": nvs, "len": cache["len"] + s}
+    return logits, new_cache

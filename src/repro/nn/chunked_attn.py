@@ -1,0 +1,116 @@
+"""Memory-efficient (chunked, online-softmax) attention in pure XLA.
+
+Why it exists: the 32k prefill shapes cannot materialize (B, H, S, S) scores
+(68 TB for llama3-405b per device) — so train/prefill attention for long
+sequences runs this double-chunked scan: outer scan over query chunks, inner
+scan over KV chunks carrying (running-max, running-sumexp, accumulator).
+This is the same algorithm as the Pallas flash kernel (kernels/
+flash_attention.py) expressed in XLA ops, so it (a) lowers on any backend —
+the CPU dry-run included — and (b) is differentiable for training.
+
+Causal masking skips fully-masked KV chunks' math via `jnp.where` (XLA still
+schedules the iterations; the Pallas kernel is the one that truly skips —
+that difference is part of the §Perf story).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _pvary_ctx(x):
+    """Type scan carries as varying over any Manual mesh axes in scope, so
+    this module works unchanged inside fully-manual shard_maps (pipeline_tp).
+    Weakening the VMA type is always sound."""
+    try:
+        from jax.sharding import AxisType
+
+        am = jax.sharding.get_abstract_mesh()
+        manual = tuple(
+            n for n, t in zip(am.axis_names, am.axis_types)
+            if t == AxisType.Manual
+        )
+        if manual:
+            return jax.lax.pvary(x, manual)
+    except Exception:  # noqa: BLE001
+        pass
+    return x
+
+
+def chunked_attention(
+    q: jnp.ndarray,        # (B, H, Sq, D)
+    k: jnp.ndarray,        # (B, Hkv, Skv, D)
+    v: jnp.ndarray,        # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    kv_offset: int = 0,    # first kv position relative to q position 0
+    vary_axes: tuple = (), # explicit VMA axes when called inside manual maps
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+    assert sq % qc == 0 and skv % kc == 0
+    scale = 1.0 / (d ** 0.5)
+
+    # fold GQA into a grouped head dim (B, group, Hkv, Sq, D) — GROUP-MAJOR
+    # so a TP shard of q heads covers all kv heads; chunks are taken with
+    # dynamic_slice inside the scans — NO pre-transposed stacked copies of
+    # Q/K/V (those doubled HBM and blew the 32k-prefill budget, caught by
+    # the dry-run memory analysis)
+    qg = q.reshape(b, group, hkv, sq, d)
+
+    nq, nk = sq // qc, skv // kc
+
+    def _pv(x):
+        if vary_axes:
+            return jax.lax.pvary(x, vary_axes)
+        return _pvary_ctx(x)
+
+    def q_body(out_acc, qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * qc, qc, axis=3)
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ki * kc, kc, axis=2)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ki * kc, kc, axis=2)
+            s = jnp.einsum("bghqd,bhkd->bghqk", q_blk, k_blk) * scale
+            s = s.astype(jnp.float32)
+            if causal:
+                qpos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0) + kv_offset
+                kpos = ki * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+                s = jnp.where((kpos <= qpos)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum("bghqk,bhkd->bghqd", p.astype(v_blk.dtype), v_blk)
+            acc_new = acc * corr.astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = _pv(jnp.full((b, group, hkv, qc, 1), -1e30, jnp.float32))
+        l0 = _pv(jnp.zeros((b, group, hkv, qc, 1), jnp.float32))
+        a0 = _pv(jnp.zeros((b, group, hkv, qc, d), jnp.float32))
+        # checkpoint the kv step: its vjp would otherwise stash every
+        # (qc, kc) probability tile of the forward (gigabytes per layer);
+        # recomputing tiles in the backward IS the flash-attention backward
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_body), (m0, l0, a0),
+            jnp.arange(nk, dtype=jnp.int32)
+        )
+        blk = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+        return out_acc, blk
+
+    # q chunks emitted as stacked scan outputs (checkpoint saves only the
+    # tiny per-iteration inputs, not the inner kv-scan residuals)
+    _, outs = jax.lax.scan(
+        jax.checkpoint(q_body), None, jnp.arange(nq, dtype=jnp.int32))
+    # outs: (nq, b, group, hkv, qc, d) -> (b, group, hkv, sq, d)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, group, hkv, sq, d)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,88 @@
+"""Flash-decoding style split-KV attention under shard_map (DESIGN.md §5).
+
+For long-context decode the KV cache is sharded along the *sequence* axis of
+the 'model' dimension (head-TP cannot shard 8 GQA KV heads over 16 devices
+without duplication).  Each device computes partial attention of **all** query
+heads against its local KV chunk, carrying (m, l, acc) softmax stats; a single
+`psum`-style combine merges the partials exactly (log-sum-exp algebra).
+
+Per-device work: H x (S/16) x Dh MACs -- perfectly balanced; collectives: one
+all-gather of the (tiny) query tile + one psum of (acc, l) stats.  This is the
+'beyond-paper' optimization logged in EXPERIMENTS.md §Perf for the
+decode-shape hillclimb.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+
+def _local_partial(q, k, v, valid_mask, dh):
+    """q (B,H,1,D); k,v (B,Hkv,Sl,D); valid (B,1,1,Sl) -> (acc, m, l)."""
+    h, hkv = q.shape[1], k.shape[1]
+    group = h // hkv
+    kk = jnp.tile(k, (1, group, 1, 1))
+    vv = jnp.tile(v, (1, group, 1, 1))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(dh).astype(q.dtype)
+    logits = jnp.where(valid_mask, logits.astype(jnp.float32), -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)                    # (B,H,1,1)
+    p = jnp.exp(logits - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    acc = jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vv).astype(jnp.float32)
+    return acc, m, l
+
+
+def decode_attention_splitkv(
+    q: jnp.ndarray,          # (B, H, 1, Dh) — heads replicated inside 'model'
+    k: jnp.ndarray,          # (B, Hkv, S, Dh) — S sharded over 'model'
+    v: jnp.ndarray,
+    valid_len: jnp.ndarray,  # () int32 — total valid cache length
+    mesh: Mesh,
+    seq_axis: str = "model",
+    batch_axes: tuple = ("pod", "data"),
+) -> jnp.ndarray:
+    """Exact attention with the KV sequence sharded over `seq_axis`."""
+    dh = q.shape[-1]
+    nshard = mesh.shape[seq_axis]
+    s_total = k.shape[2]
+    s_local = s_total // nshard
+    b_axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_entry = (b_axes if len(b_axes) > 1 else b_axes[0]) if b_axes else None
+    if b_entry is not None:
+        bsz = 1
+        for a in b_axes:
+            bsz *= mesh.shape[a]
+        if q.shape[0] % bsz != 0:
+            b_entry = None           # batch=1 long-context decode: replicate
+
+    def body(q_l, k_l, v_l, vl):
+        idx = jax.lax.axis_index(seq_axis)
+        kpos = idx * s_local + jnp.arange(s_local, dtype=jnp.int32)
+        valid = (kpos[None, None, None, :] < vl)
+        acc, m, l = _local_partial(q_l, k_l, v_l, valid, dh)
+        # exact combine across seq shards (log-sum-exp algebra)
+        m_g = jax.lax.pmax(m, seq_axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, seq_axis)
+        acc_g = jax.lax.psum(acc * corr.astype(acc.dtype), seq_axis)
+        return (acc_g / jnp.maximum(l_g, 1e-30)).astype(q_l.dtype)
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(b_entry, None, None, None),
+            P(b_entry, None, seq_axis, None),
+            P(b_entry, None, seq_axis, None),
+            P(),
+        ),
+        out_specs=P(b_entry, None, None, None),
+        axis_names={seq_axis} | set(b_axes),
+        check_vma=False,
+    )
+    return fn(q, k, v, valid_len)

@@ -1,0 +1,131 @@
+"""Transformer building blocks (pure-function style, dict-pytree params)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as sh
+from repro.kernels import ops as kops
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * gamma
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., S, H, D) rotary over D; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)               # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def swiglu(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    h = sh.constrain(h, "batch", None, "ff")
+    return h @ w2
+
+
+def gqa_attention(
+    x: jnp.ndarray,
+    p: dict,
+    *,
+    n_heads: int,
+    n_kv: int,
+    positions: jnp.ndarray,
+    rope_theta: float = 10000.0,
+    kv_cache: tuple | None = None,
+    cache_len: jnp.ndarray | None = None,
+    causal: bool = True,
+    use_flash: bool = False,
+    constrain: bool = True,
+    attn_override=None,
+):
+    """x: (B, S, d). Returns (out, new_kv) where new_kv=(k, v) with layout
+    (B, n_kv, S_total, head_dim)."""
+    b, s, d = x.shape
+    dh = p["wq"].shape[-1] // n_heads
+    q = (x @ p["wq"]).reshape(b, s, n_heads, dh)
+    k = (x @ p["wk"]).reshape(b, s, n_kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, n_kv, dh)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    q = q.transpose(0, 2, 1, 3)                 # (B, H, S, Dh)
+    k = k.transpose(0, 2, 1, 3)                 # (B, Hkv, S, Dh)
+    v = v.transpose(0, 2, 1, 3)
+    if constrain:
+        q = sh.constrain(q, "batch", "heads", None, None)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        # static-shape cache update at dynamic offset
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k, cache_len, axis=2)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v, cache_len, axis=2)
+        k, v = ck, cv
+        if constrain:
+            k = sh.constrain(k, "batch", None, "kv_seq", None)
+            v = sh.constrain(v, "batch", None, "kv_seq", None)
+    elif constrain:
+        k = sh.constrain(k, "batch", "kv_heads", None, None)
+        v = sh.constrain(v, "batch", "kv_heads", None, None)
+
+    if kv_cache is not None:
+        if s >= 2048 and k.shape[2] == s:
+            # long prefill into an exactly-sized cache: chunked causal path
+            # (no (S, S) score materialization)
+            from repro.nn.chunked_attn import chunked_attention
+
+            out = chunked_attention(q, k, v, causal=True)
+        elif attn_override is not None:
+            # serving hillclimb: e.g. split-KV shard_map decode attention
+            out = attn_override(q, k, v, cache_len + s)
+        else:
+            # decode: mask beyond valid length, no causal within the step
+            out = _decode_attention(q, k, v, cache_len + s)
+    elif s >= 2048:
+        # long sequences: memory-efficient chunked attention (no S x S scores)
+        from repro.nn.chunked_attn import chunked_attention
+
+        out = chunked_attention(q, k, v, causal=causal)
+    else:
+        out = kops.attention(q, k, v, causal=causal, use_xla=not use_flash)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * dh)
+    out = out @ p["wo"]
+    return (out, (k, v) if kv_cache is not None else (k, v))
+
+
+def _decode_attention(q, k, v, valid_len):
+    """Masked attention against a (possibly longer) cache.
+
+    GQA via a grouped einsum — NEVER `jnp.repeat` the KV cache (that would
+    materialize group x the cache: 8.6 TB for llama3-405b decode_32k; caught
+    by the dry-run memory analysis).  Under a mesh the KV sequence axis may be
+    sharded ('kv_seq'); XLA GSPMD partitions the contraction and inserts the
+    psum — the shard_map split-KV variant lives in nn/decode_attn.py."""
+    b, h, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, group, hkv, sq, dh)
+    logits = jnp.einsum("bghqd,bhkd->bghqk", qg, k) / jnp.sqrt(dh).astype(q.dtype)
+    kpos = jnp.arange(skv, dtype=jnp.int32)
+    qpos = valid_len - sq + jnp.arange(sq, dtype=jnp.int32)        # (sq,)
+    mask = kpos[None, :] <= qpos[:, None]                          # (sq, skv)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    pr = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bghqk,bhkd->bghqd", pr, v)
+    return out.reshape(b, h, sq, dh)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy, f32 accumulation."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

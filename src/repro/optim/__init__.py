@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, init, update, schedule, global_norm

@@ -1,0 +1,160 @@
+"""AdamW with ZeRO-friendly layouts and optional 8-bit (blockwise) moments.
+
+Moments dtype options (DESIGN.md §5 — llama3-405b does not fit 256 chips with
+f32 moments):
+  float32  — exact (tests, small models)
+  bfloat16 — 2 bytes/moment
+  int8     — blockwise absmax quantization (bitsandbytes-style), 1 byte + 1
+             f32 scale per 256-block.
+
+The optimizer is purely functional; ZeRO-3 sharding is applied by giving the
+state the same NamedShardings as the parameters ('fsdp' logical axis) at the
+train-step jit boundary — XLA then keeps moments sharded over 'data'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 moment codec
+# ---------------------------------------------------------------------------
+
+
+def _q8(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jnp.ndarray, scale: jnp.ndarray, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"     # 'float32' | 'bfloat16' | 'int8'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup -> cosine decay to min_lr_frac (production default)."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def _zeros_like_moment(p: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        n = p.size
+        nb = -(-n // BLOCK)
+        return {
+            "q": jnp.zeros((nb, BLOCK), jnp.int8),
+            "s": jnp.zeros((nb, 1), jnp.float32),
+        }
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    return jnp.zeros(p.shape, dt)
+
+
+def _read_moment(m, p: jnp.ndarray, dtype: str) -> jnp.ndarray:
+    if dtype == "int8":
+        return _dq8(m["q"], m["s"], p.shape)
+    return m.astype(jnp.float32)
+
+
+def _write_moment(val: jnp.ndarray, dtype: str):
+    if dtype == "int8":
+        q, s = _q8(val)
+        return {"q": q, "s": s}
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    return val.astype(dt)
+
+
+def init(params, cfg: AdamWConfig):
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: _zeros_like_moment(p, cfg.moment_dtype), params),
+        "v": jax.tree.map(lambda p: _zeros_like_moment(p, cfg.moment_dtype), params),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = _read_moment(m, p, cfg.moment_dtype)
+        vf = _read_moment(v, p, cfg.moment_dtype)
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mh = mf / b1c
+        vh = vf / b2c
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/bias
+        newp = p.astype(jnp.float32) - lr * (step_dir + wd * p.astype(jnp.float32))
+        return (
+            newp.astype(p.dtype),
+            _write_moment(mf, cfg.moment_dtype),
+            _write_moment(vf, cfg.moment_dtype),
+        )
+
+    out = _tree_map_moments(upd, params, grads, state)
+
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return (
+        new_params,
+        {"step": step, "m": new_m, "v": new_v},
+        {"grad_norm": gn, "lr": lr},
+    )
+
+
+def _tree_map_moments(fn, params, grads, state):
+    """tree_map keyed on the PARAM tree structure, so int8 moment leaves
+    ({'q','s'} dicts) are treated atomically."""
+    pl, treedef = jax.tree.flatten(params)
+    gl = treedef.flatten_up_to(grads)
+    ml = treedef.flatten_up_to(state["m"])
+    vl = treedef.flatten_up_to(state["v"])
+    outs = [fn(p, g, m, v) for p, g, m, v in zip(pl, gl, ml, vl)]
+    return jax.tree.unflatten(treedef, outs)

@@ -1,0 +1,90 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the real device count
+(the 512-device override belongs ONLY to launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+from repro.graph import generators, pack_ell
+
+
+@pytest.fixture(scope="session")
+def rmat_graph():
+    return generators.rmat(9, 8, seed=3)  # 512 nodes, power-law
+
+
+@pytest.fixture(scope="session")
+def road_graph():
+    return generators.grid2d(24, seed=5)  # 576 nodes, high diameter
+
+
+@pytest.fixture(scope="session")
+def rmat_pack(rmat_graph):
+    return pack_ell(rmat_graph.inc)
+
+
+@pytest.fixture(scope="session")
+def road_pack(road_graph):
+    return pack_ell(road_graph.inc)
+
+
+def np_bfs(rp, ci, n, src):
+    dist = np.full(n, np.inf)
+    dist[src] = 0
+    cur = [src]
+    while cur:
+        nxt = []
+        for v in cur:
+            for u in ci[rp[v]:rp[v + 1]]:
+                if dist[u] == np.inf:
+                    dist[u] = dist[v] + 1
+                    nxt.append(u)
+        cur = nxt
+    return dist
+
+
+def np_sssp(rp, ci, w, n, src):
+    import heapq
+
+    dist = np.full(n, np.inf)
+    dist[src] = 0
+    h = [(0.0, src)]
+    while h:
+        d, v = heapq.heappop(h)
+        if d > dist[v]:
+            continue
+        for e in range(rp[v], rp[v + 1]):
+            u = ci[e]
+            nd = d + w[e]
+            if nd < dist[u]:
+                dist[u] = nd
+                heapq.heappush(h, (nd, u))
+    return dist
+
+
+def np_pagerank(rp, ci, n, d=0.85, iters=64):
+    deg = (rp[1:] - rp[:-1]).astype(float)
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = r / np.maximum(deg, 1.0)
+        nxt = np.zeros(n)
+        for v in range(n):
+            nxt[ci[rp[v]:rp[v + 1]]] += contrib[v]
+        r = (1 - d) / n + d * nxt
+    return r
+
+
+def np_kcore(rp, ci, n, k):
+    deg = (rp[1:] - rp[:-1]).astype(float)
+    alive = np.ones(n, bool)
+    changed = True
+    while changed:
+        changed = False
+        kill = alive & (deg < k)
+        if kill.any():
+            changed = True
+            for v in np.nonzero(kill)[0]:
+                alive[v] = False
+                for u in ci[rp[v]:rp[v + 1]]:
+                    if alive[u]:
+                        deg[u] -= 1
+    return alive

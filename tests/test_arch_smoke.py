@@ -1,0 +1,208 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (the full
+assigned configs are exercised only via the dry-run)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import deepfm as dfm
+from repro.models import dimenet as dmn
+from repro.models import gnn as gnn_m
+from repro.models import transformer as tfm
+
+LM_ARCHS = ["minitron-4b", "granite-3-8b", "llama3-405b",
+            "moonshot-v1-16b-a3b", "granite-moe-1b-a400m"]
+GNN_ARCHS = ["gcn-cora", "gin-tu", "gatedgcn"]
+
+
+def _finite(tree):
+    return all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
+               if jnp.issubdtype(x.dtype, jnp.floating))
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_reduced_train_step(arch):
+    cfg = configs.get(arch).make_reduced()
+    p = tfm.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    logits, aux = jax.jit(lambda p, t: tfm.forward(p, t, cfg))(p, toks)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all())
+    g = jax.grad(lambda p: tfm.loss_fn(p, toks, toks, cfg))(p)
+    assert _finite(g)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_reduced_decode_matches_forward(arch):
+    cfg = configs.get(arch).make_reduced()
+    if cfg.moe is not None:
+        # capacity dropping legitimately differs between a (B,S) forward and
+        # prefill+decode batches; disable drops to compare numerics
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0)
+        )
+    p = tfm.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 9), 0, cfg.vocab)
+    cache = tfm.init_cache(cfg, 2, 16)
+    _, cache = tfm.decode_step(p, cache, toks[:, :8], cfg)
+    lg, cache = tfm.decode_step(p, cache, toks[:, 8:9], cfg)
+    full, _ = tfm.forward(p, toks, cfg)
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0]), np.asarray(full[:, 8]), rtol=2e-2, atol=2e-3
+    )
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_reduced_train_step(arch):
+    cfg = configs.get(arch).make_reduced()
+    from repro.graph import generators
+
+    g = generators.rmat(7, 6, seed=2)
+    n = g.n_nodes
+    feats = jax.random.normal(jax.random.key(0), (n, cfg.d_in))
+    labels = jax.random.randint(jax.random.key(1), (n,), 0, cfg.n_classes)
+    p = gnn_m.init_params(jax.random.key(2), cfg)
+    if cfg.readout == "graph":
+        gids = jnp.zeros((n,), jnp.int32)
+        logits = gnn_m.forward(p, feats, g.out.src_idx, g.out.col_idx,
+                               g.out.weights, cfg, gids, 1)
+        assert logits.shape == (1, cfg.n_classes)
+        labels = labels[:1]
+        loss = gnn_m.loss_fn(p, feats, g.out.src_idx, g.out.col_idx,
+                             g.out.weights, labels, cfg, graph_ids=gids,
+                             n_graphs=1)
+    else:
+        logits = gnn_m.forward(p, feats, g.out.src_idx, g.out.col_idx,
+                               g.out.weights, cfg)
+        assert logits.shape == (n, cfg.n_classes)
+        loss = gnn_m.loss_fn(p, feats, g.out.src_idx, g.out.col_idx,
+                             g.out.weights, labels, cfg)
+    assert bool(jnp.isfinite(logits).all()) and bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: gnn_m.loss_fn(
+        p, feats, g.out.src_idx, g.out.col_idx, g.out.weights,
+        labels, cfg,
+        graph_ids=jnp.zeros((n,), jnp.int32) if cfg.readout == "graph" else None,
+        n_graphs=1))(p)
+    assert _finite(grads)
+
+
+def test_dimenet_reduced_train_step():
+    cfg = configs.get("dimenet").make_reduced()
+    n, m = 24, 72
+    r = np.random.default_rng(0)
+    src = r.integers(0, n, m)
+    dst = r.integers(0, n, m)
+    tkj, tji = dmn.build_triplets(src, dst, n, cap=4)
+    p = dmn.init_params(jax.random.key(0), cfg)
+    nf = jax.nn.one_hot(jnp.arange(n) % cfg.d_in, cfg.d_in)
+    pos = jax.random.normal(jax.random.key(1), (n, 3))
+    out = dmn.forward(p, nf, pos, jnp.array(src), jnp.array(dst),
+                      jnp.array(tkj), jnp.array(tji), cfg)
+    assert out.shape == (1, cfg.n_targets)
+    assert bool(jnp.isfinite(out).all())
+    g = jax.grad(lambda p: dmn.loss_fn(p, nf, pos, jnp.array(src),
+                                       jnp.array(dst), jnp.array(tkj),
+                                       jnp.array(tji), jnp.zeros((1, 1)), cfg))(p)
+    assert _finite(g)
+
+
+def test_dimenet_loop_bilinear_equivalent():
+    cfg = configs.get("dimenet").make_reduced()
+    cfg2 = dataclasses.replace(cfg, loop_bilinear=True)
+    n, m = 16, 40
+    r = np.random.default_rng(1)
+    src = r.integers(0, n, m)
+    dst = r.integers(0, n, m)
+    tkj, tji = dmn.build_triplets(src, dst, n, cap=4)
+    p = dmn.init_params(jax.random.key(0), cfg)
+    nf = jax.nn.one_hot(jnp.arange(n) % cfg.d_in, cfg.d_in)
+    pos = jax.random.normal(jax.random.key(1), (n, 3))
+    args = (p, nf, pos, jnp.array(src), jnp.array(dst), jnp.array(tkj),
+            jnp.array(tji))
+    a = dmn.forward(*args, cfg)
+    b = dmn.forward(*args, cfg2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_deepfm_reduced_train_learns():
+    cfg = configs.get("deepfm").make_reduced()
+    from repro.data import ClickStream
+    from repro.optim import AdamWConfig, init, update
+
+    stream = ClickStream(cfg.n_fields, cfg.vocab_per_field, cfg.embed_dim,
+                         batch=256, seed=0)
+    p = dfm.init_params(jax.random.key(0), cfg)
+    ocfg = AdamWConfig(lr=3e-3, weight_decay=0.0, total_steps=60)
+    o = init(p, ocfg)
+
+    @jax.jit
+    def step(p, o, ids, y):
+        lv, g = jax.value_and_grad(dfm.loss_fn)(p, ids, y, cfg)
+        p, o, _ = update(g, o, p, ocfg)
+        return p, o, lv
+
+    losses = []
+    for _ in range(40):
+        ids, y = next(stream)
+        p, o, lv = step(p, o, jnp.asarray(ids), jnp.asarray(y))
+        losses.append(float(lv))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-8:]) < np.mean(losses[:8])  # learning signal
+
+
+def test_deepfm_retrieval_shapes():
+    cfg = configs.get("deepfm").make_reduced()
+    p = dfm.init_params(jax.random.key(0), cfg)
+    ids = jax.random.randint(jax.random.key(1), (4, cfg.n_fields), 0,
+                             cfg.vocab_per_field)
+    uv = dfm.user_vector(p, ids, cfg)
+    cand = jax.random.normal(jax.random.key(2), (1000, cfg.embed_dim))
+    scores = dfm.score_candidates(uv, cand)
+    assert scores.shape == (4, 1000)
+    assert bool(jnp.isfinite(scores).all())
+
+
+def test_registry_covers_40_cells():
+    assert len(configs.cells()) == 40
+    assert len(configs.names()) == 10
+
+
+def test_sampled_block_training_step():
+    """minibatch_lg data path at reduced scale: sampler + local-graph step."""
+    from repro.graph import generators
+    from repro.launch.steps import build_gnn_sampled
+    from repro.configs.registry import ArchSpec
+
+    g = generators.rmat(9, 8, seed=4)
+    n = g.n_nodes
+    spec = configs.get("gcn-cora")
+    shape = dict(n_nodes=n, n_edges=g.n_edges, batch_nodes=32, fanout=(3, 2),
+                 d_feat=16, kind="sampled")
+    from repro.launch.mesh import make_local_mesh
+    from repro.distributed import sharding as sh
+
+    mesh = make_local_mesh(1, 1)
+    with sh.activate(mesh):
+        built = build_gnn_sampled(spec, shape, mesh)
+        # materialize real inputs matching the abstract specs
+        import jax.random as jr
+
+        cfg = dataclasses.replace(spec.make_config(), d_in=16, readout="node")
+        p = gnn_m.init_params(jax.random.key(0), cfg)
+        from repro.optim import AdamWConfig, init as oinit
+
+        o = oinit(p, AdamWConfig(lr=1e-2, weight_decay=0.0, total_steps=100))
+        feats = jr.normal(jax.random.key(1), (n, 16))
+        labels = jr.randint(jax.random.key(2), (n,), 0, cfg.n_classes)
+        seeds = jnp.arange(32, dtype=jnp.int32)
+        new_p, new_o, metrics = jax.jit(built.fn)(
+            p, o, g.out.row_ptr, g.out.col_idx, feats, labels, seeds,
+            jnp.uint32(3)
+        )
+        assert bool(jnp.isfinite(metrics["loss"]))
+        assert _finite(new_p)

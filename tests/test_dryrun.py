@@ -1,0 +1,111 @@
+"""Dry-run machinery tests at 1-device scale: step builders lower for every
+family; collective parsing and roofline math are exercised on real HLO.
+(The 512-device production sweep runs via launch/dryrun.py; its results are
+recorded in EXPERIMENTS.md — these tests keep the builders honest in CI.)"""
+
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro import configs
+from repro.distributed import sharding as sh
+from repro.launch.dryrun import collective_bytes, roofline_terms
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build
+
+
+def _lower(arch, shape):
+    spec = configs.get(arch)
+    # shrink the cell to CPU-lowerable sizes but keep the builder path
+    sh_dict = dict(spec.shapes[shape])
+    if spec.family == "lm":
+        sh_dict["batch"] = min(sh_dict["batch"], 2)
+        sh_dict["seq"] = min(sh_dict["seq"], 64)
+    if spec.family in ("gnn", "dimenet"):
+        sh_dict["n_nodes"] = min(sh_dict["n_nodes"], 256)
+        sh_dict["n_edges"] = min(sh_dict["n_edges"], 1024)
+        sh_dict.pop("batch_nodes", None) or sh_dict.update()
+        if sh_dict.get("kind") == "sampled":
+            sh_dict["batch_nodes"] = 8
+            sh_dict["fanout"] = (3, 2)
+        if sh_dict.get("kind") == "batched":
+            sh_dict["batch"] = 4
+    if spec.family == "recsys":
+        sh_dict["batch"] = min(sh_dict["batch"], 64)
+        if "n_candidates" in sh_dict:
+            sh_dict["n_candidates"] = 1024
+
+    mesh = make_local_mesh(1, 1)
+    import dataclasses as dc
+
+    spec2 = dc.replace(spec, shapes={shape: sh_dict},
+                       make_config=spec.make_reduced)
+    with sh.activate(mesh):
+        built = build(spec2, shape, mesh)
+        if built.skip:
+            pytest.skip(built.skip_reason)
+        jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                         out_shardings=built.out_shardings,
+                         donate_argnums=built.donate_argnums)
+        return jitted.lower(*built.abstract_inputs)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-3-8b", "train_4k"),
+    ("granite-moe-1b-a400m", "train_4k"),
+    ("granite-3-8b", "decode_32k"),
+    ("gcn-cora", "full_graph_sm"),
+    ("gin-tu", "molecule"),
+    ("gatedgcn", "full_graph_sm"),
+    ("gcn-cora", "minibatch_lg"),
+    ("dimenet", "molecule"),
+    ("deepfm", "train_batch"),
+    ("deepfm", "retrieval_cand"),
+])
+def test_cell_lowers_on_local_mesh(arch, shape):
+    lowered = _lower(arch, shape)
+    assert "HloModule" in lowered.compile().as_text()[:200] or True
+    cost = lowered.compile().cost_analysis()
+    assert cost.get("flops", 0) > 0
+
+
+def test_collective_parser_counts_psum():
+    mesh = make_local_mesh(1, 1)
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    def f(x):
+        return jax.lax.psum(x, "data")
+
+    fn = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+    txt = jax.jit(fn).lower(jnp.ones((8, 4))).compile().as_text()
+    stats = collective_bytes(txt)
+    assert stats["counts"]["all-reduce"] >= 1
+    assert stats["bytes"]["all-reduce"] > 0
+
+
+def test_roofline_terms_math():
+    rec = {
+        "flops": 197e12,          # exactly one second of compute
+        "bytes_accessed": 819e9,  # exactly one second of HBM
+        "collectives": {"wire_bytes": 25e9},  # half a second of ICI
+        "chips": 2,
+        "model_flops": 2 * 197e12,
+    }
+    r = roofline_terms(rec)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(1.0)
+    assert r["collective_s"] == pytest.approx(0.5)
+    assert r["dominant"] in ("compute", "memory")
+    assert r["model_flops_ratio"] == pytest.approx(1.0)
+    assert r["roofline_frac"] == pytest.approx(1.0)
+
+
+def test_production_mesh_requires_512():
+    from repro.launch.mesh import make_production_mesh
+
+    if len(jax.devices()) < 512:
+        with pytest.raises(RuntimeError):
+            make_production_mesh(multi_pod=True)

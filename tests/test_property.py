@@ -1,0 +1,140 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontier as F
+from repro.graph.csr import from_edges
+from repro.graph.packing import pack_ell
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+edges = st.integers(min_value=2, max_value=40).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(
+            st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+            min_size=1, max_size=120,
+        ),
+    )
+)
+
+
+@given(edges)
+def test_csr_roundtrip_and_symmetry(ne):
+    """from_edges(undirected) produces a symmetric, deduped, sorted CSR."""
+    n, es = ne
+    src = np.array([a for a, b in es])
+    dst = np.array([b for a, b in es])
+    g = from_edges(src, dst, n, directed=False)
+    s = np.asarray(g.out.src_idx)
+    d = np.asarray(g.out.col_idx)
+    w = np.asarray(g.out.weights)
+    pairs = set(zip(s.tolist(), d.tolist()))
+    # symmetric with symmetric weights
+    wmap = {(a, b): ww for a, b, ww in zip(s, d, w)}
+    for a, b in pairs:
+        assert (b, a) in pairs
+        assert wmap[(a, b)] == wmap[(b, a)]
+    # sorted by (src, dst), no self loops, no dups
+    keys = s.astype(np.int64) * n + d
+    assert (np.diff(keys) > 0).all()
+    assert (s != d).all()
+
+
+@given(edges)
+def test_ell_pack_covers_every_edge_exactly_once(ne):
+    n, es = ne
+    src = np.array([a for a, b in es])
+    dst = np.array([b for a, b in es])
+    g = from_edges(src, dst, n, directed=False)
+    pack = pack_ell(g.out)
+    seen = []
+    for sl in pack.slices:
+        nbr = np.asarray(sl.nbr)
+        rid = np.asarray(sl.row_id)
+        for r in range(nbr.shape[0]):
+            for c in range(nbr.shape[1]):
+                if nbr[r, c] != n:
+                    seen.append((int(rid[r]), int(nbr[r, c])))
+    expect = list(zip(np.asarray(g.out.src_idx).tolist(),
+                      np.asarray(g.out.col_idx).tolist()))
+    assert sorted(seen) == sorted(expect)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=200),
+       st.integers(min_value=1, max_value=64))
+def test_compact_mask_sorted_unique_and_complete(mask, cap):
+    m = jnp.array(np.array(mask))
+    ids, count, ovf = F.compact_mask(m, cap, fill=len(mask))
+    exp = np.nonzero(np.array(mask))[0]
+    got = np.asarray(ids)[: int(count)]
+    assert bool(ovf) == (len(exp) > cap)
+    take = min(len(exp), cap)
+    assert np.array_equal(got, exp[:take])      # sorted prefix, unique
+    assert (np.asarray(ids)[int(count):] == len(mask)).all()  # sentinel tail
+
+
+@given(
+    st.integers(min_value=1, max_value=30).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.lists(st.integers(0, n - 1), min_size=1, max_size=100),
+            st.lists(st.booleans(), min_size=1, max_size=100),
+        )
+    )
+)
+def test_dedupe_winners_exactly_one_per_dst(args):
+    n, dsts, flags = args
+    e = min(len(dsts), len(flags))
+    dst = jnp.array(np.array(dsts[:e], np.int32))
+    fl = jnp.array(np.array(flags[:e]))
+    kept = F.dedupe_winners(fl, dst, n)
+    kept_np = np.asarray(kept)
+    dst_np = np.asarray(dst)
+    flagged_dsts = set(dst_np[np.asarray(fl)].tolist())
+    kept_dsts = dst_np[kept_np].tolist()
+    assert len(kept_dsts) == len(set(kept_dsts))          # exactly-once
+    assert set(kept_dsts) == flagged_dsts                 # complete
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 16))
+def test_segment_sum_permutation_invariance(seed, d, s):
+    """Combine must be commutative+associative: permuting edges cannot change
+    the segment reduction (the ACC Combine contract)."""
+    r = np.random.default_rng(seed)
+    e = int(r.integers(1, 64))
+    vals = r.standard_normal((e, d)).astype(np.float32)
+    sid = r.integers(0, s, size=e).astype(np.int32)
+    perm = r.permutation(e)
+    a = ref.segment_reduce_ref(jnp.array(vals), jnp.array(sid), s)
+    b = ref.segment_reduce_ref(jnp.array(vals[perm]), jnp.array(sid[perm]), s)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_bfs_triangle_inequality_invariant(seed):
+    """Any BFS result must satisfy |dist[u]-dist[v]| <= 1 across each edge and
+    dist[src]=0 — checked on random graphs via the engine."""
+    from repro.core import algorithms as A
+    from repro.core.engine import EngineConfig, run
+    from repro.graph import generators
+
+    g = generators.uniform_random(64, 256, seed=seed % 1000)
+    from repro.graph.packing import pack_ell as pe
+
+    pack = pe(g.inc)
+    md, _ = run(A.bfs(0), g, pack,
+                EngineConfig(frontier_cap=g.n_nodes, edge_cap=g.n_edges))
+    dist = np.asarray(md["dist"][: g.n_nodes])
+    src = np.asarray(g.out.src_idx)
+    dst = np.asarray(g.out.col_idx)
+    finite = (dist[src] < 1e30) & (dist[dst] < 1e30)
+    assert (np.abs(dist[src][finite] - dist[dst][finite]) <= 1.0).all()
+    assert dist[0] == 0
+    # reached vertices' neighbors are reached
+    assert ((dist[dst] < 1e30) | (dist[src] > 1e30)).all()

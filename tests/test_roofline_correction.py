@@ -1,0 +1,127 @@
+"""Evidence for the roofline methodology (EXPERIMENTS.md §Roofline):
+
+1. XLA cost_analysis counts scan bodies ONCE (the undercount that motivates
+   the analytic model for LM cells).
+2. The trip-count-aware collective parser recovers the true collective bytes
+   for collectives inside scans.
+3. The analytic LM flop model is calibrated: on a small FULLY-UNROLLED config
+   the analytic count matches HLO flops within tolerance.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.dryrun import collective_bytes
+from repro.launch.mesh import make_local_mesh
+
+
+def test_scan_body_counted_once():
+    x = jnp.ones((128, 128))
+    w = jnp.ones((8, 128, 128))
+    scanned = jax.jit(lambda x, w: jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0])
+    unrolled = jax.jit(lambda x, w: x @ w[0] @ w[1] @ w[2] @ w[3] @ w[4] @ w[5] @ w[6] @ w[7])
+    fs = scanned.lower(x, w).compile().cost_analysis()["flops"]
+    fu = unrolled.lower(x, w).compile().cost_analysis()["flops"]
+    assert fu / fs == pytest.approx(8.0, rel=0.01)
+
+
+def test_collective_parser_multiplies_by_trip_count():
+    mesh = make_local_mesh(1, 1)
+    trips = 6
+
+    def inner(x):
+        def body(c, _):
+            return c + jax.lax.psum(c, "data"), None
+        return jax.lax.scan(body, x, None, length=trips)[0]
+
+    fn = jax.shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    txt = jax.jit(fn).lower(jnp.ones((8, 128))).compile().as_text()
+    stats = collective_bytes(txt)
+    one_shot = 8 * 128 * 4  # f32 per-device operand bytes
+    # the psum fires `trips` times: corrected bytes must reflect that
+    assert stats["bytes"]["all-reduce"] >= trips * one_shot
+    assert stats["bytes"]["all-reduce"] < (trips + 2) * one_shot * 2
+
+
+def test_analytic_lm_flops_calibrated_against_unrolled_hlo():
+    """Unrolled tiny transformer: HLO flops within 35% of the analytic model
+    (XLA adds softmax/norm/rope flops the 6ND model intentionally omits)."""
+    from repro.launch.analytic import lm_cell
+    from repro.models import transformer as tfm
+
+    cfg = tfm.TransformerConfig(
+        "cal", n_layers=2, d_model=128, n_heads=4, n_kv=2, d_ff=256,
+        vocab=2048, head_dim=32, remat=False,
+    )
+
+    # unrolled forward+backward (python loop over layers, no scan anywhere)
+    def unrolled_loss(params, tokens, labels):
+        b, s = tokens.shape
+        x = params["embed"][tokens]
+        import repro.nn.layers as L
+
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda v: v[i], params["layers"])
+            h = L.rms_norm(x, lp["attn_norm"])
+            attn, _ = L.gqa_attention(h, lp, n_heads=cfg.n_heads,
+                                      n_kv=cfg.n_kv, positions=positions)
+            x = x + attn
+            h = L.rms_norm(x, lp["mlp_norm"])
+            x = x + L.swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+        x = L.rms_norm(x, params["final_norm"])
+        logits = x @ params["lm_head"]
+        return L.cross_entropy(logits, labels)
+
+    params = tfm.init_params(jax.random.key(0), cfg)
+    toks = jnp.zeros((2, 64), jnp.int32)
+    step = jax.jit(lambda p, t: jax.grad(unrolled_loss)(p, t, t))
+    hlo_flops = step.lower(params, toks).compile().cost_analysis()["flops"]
+
+    ana = lm_cell(cfg, "train", batch=2, seq=64, dp=1, tp=1, accum=1)
+    # remove the remat-recompute term (this variant doesn't remat) and the
+    # optimizer (not part of this fn)
+    ana_flops = ana.detail["flops_mm"] + ana.detail["flops_attn"]
+    assert hlo_flops == pytest.approx(ana_flops, rel=0.35)
+
+
+def test_analytic_decode_flops_calibrated():
+    from repro.launch.analytic import lm_cell
+    from repro.models import transformer as tfm
+    import repro.nn.layers as L
+
+    cfg = tfm.TransformerConfig(
+        "cal", n_layers=2, d_model=128, n_heads=4, n_kv=2, d_ff=256,
+        vocab=2048, head_dim=32, remat=False,
+    )
+    params = tfm.init_params(jax.random.key(0), cfg)
+    seq = 64
+
+    def unrolled_decode(params, ck, cv, tok):
+        b = tok.shape[0]
+        x = params["embed"][tok]
+        positions = jnp.full((b, 1), seq - 1, jnp.int32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda v: v[i], params["layers"])
+            h = L.rms_norm(x, lp["attn_norm"])
+            attn, _ = L.gqa_attention(
+                h, lp, n_heads=cfg.n_heads, n_kv=cfg.n_kv, positions=positions,
+                kv_cache=(ck[i], cv[i]), cache_len=jnp.asarray(seq - 1),
+            )
+            x = x + attn
+            h = L.rms_norm(x, lp["mlp_norm"])
+            x = x + L.swiglu(h, lp["w1"], lp["w3"], lp["w2"])
+        return (L.rms_norm(x, params["final_norm"]) @ params["lm_head"])
+
+    cache = tfm.init_cache(cfg, 4, seq)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    hlo = (jax.jit(unrolled_decode)
+           .lower(params, cache["k"], cache["v"], tok)
+           .compile().cost_analysis()["flops"])
+    ana = lm_cell(cfg, "decode", batch=4, seq=seq, dp=1, tp=1).flops_global
+    assert hlo == pytest.approx(ana, rel=0.4)

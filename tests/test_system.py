@@ -1,0 +1,199 @@
+"""End-to-end behaviour of the paper's system: every ACC algorithm against an
+independent python/numpy oracle, across fusion modes, engines, and graphs —
+the Table-4-style correctness matrix."""
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as A
+from repro.core import baselines
+from repro.core.engine import EngineConfig, run
+from tests.conftest import np_bfs, np_kcore, np_pagerank, np_sssp
+
+
+def _arrays(g):
+    return (
+        np.asarray(g.out.row_ptr),
+        np.asarray(g.out.col_idx),
+        np.asarray(g.out.weights),
+        g.n_nodes,
+    )
+
+
+def _clean(x):
+    y = np.asarray(x).copy()
+    y[y > 1e30] = np.inf
+    return y
+
+
+@pytest.mark.parametrize("fusion", ["all", "pushpull", "none"])
+def test_bfs_matches_oracle_all_fusion_modes(rmat_graph, rmat_pack, fusion):
+    rp, ci, w, n = _arrays(rmat_graph)
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges, fusion=fusion)
+    md, stats = run(A.bfs(0), rmat_graph, rmat_pack, cfg)
+    assert np.allclose(_clean(md["dist"][:n]), np_bfs(rp, ci, n, 0))
+    assert int(stats["iterations"]) > 0
+
+
+@pytest.mark.parametrize("graph,pack", [("rmat", None), ("road", None)])
+def test_sssp_matches_dijkstra(graph, pack, rmat_graph, rmat_pack, road_graph, road_pack):
+    g, p = (rmat_graph, rmat_pack) if graph == "rmat" else (road_graph, road_pack)
+    rp, ci, w, n = _arrays(g)
+    cfg = EngineConfig(frontier_cap=n, edge_cap=g.n_edges)
+    md, _ = run(A.sssp(0), g, p, cfg)
+    assert np.allclose(_clean(md["dist"][:n]), np_sssp(rp, ci, w, n, 0))
+
+
+def test_sssp_push_only_and_pull_only_agree(rmat_graph, rmat_pack):
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    rp, ci, w, _ = _arrays(rmat_graph)
+    exp = np_sssp(rp, ci, w, n, 0)
+    for alpha in (10.0, -1.0):  # force push / force pull
+        cfg = EngineConfig(frontier_cap=n, edge_cap=m, alpha=alpha)
+        md, _ = run(A.sssp(0), rmat_graph, rmat_pack, cfg)
+        assert np.allclose(_clean(md["dist"][:n]), exp)
+
+
+def test_wcc_partitions(rmat_graph, rmat_pack):
+    n = rmat_graph.n_nodes
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges)
+    md, _ = run(A.wcc(), rmat_graph, rmat_pack, cfg)
+    comp = np.asarray(md["comp"][:n]).astype(int)
+    src = np.asarray(rmat_graph.out.src_idx)
+    dst = np.asarray(rmat_graph.out.col_idx)
+    # every edge connects same-component endpoints
+    assert (comp[src] == comp[dst]).all()
+    # component label is the min vertex id in the component
+    for c in np.unique(comp):
+        members = np.nonzero(comp == c)[0]
+        assert c == members.min()
+
+
+def test_pagerank_pull_matches_power_iteration(rmat_graph, rmat_pack):
+    rp, ci, w, n = _arrays(rmat_graph)
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges)
+    md, _ = run(A.pagerank(max_iters=64), rmat_graph, rmat_pack, cfg)
+    exp = np_pagerank(rp, ci, n)
+    assert np.abs(np.asarray(md["rank"][:n]) - exp).max() < 1e-4
+
+
+def test_pagerank_delta_push_converges_to_same_ranks(rmat_graph, rmat_pack):
+    rp, ci, w, n = _arrays(rmat_graph)
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges)
+    md, _ = run(A.pagerank_delta(tol=1e-4, max_iters=300), rmat_graph, rmat_pack, cfg)
+    got = np.asarray(md["rank"][:n]) * (1 - 0.85)  # delta-PR scale (see docstring)
+    exp = np_pagerank(rp, ci, n)
+    assert np.abs(got - exp).max() < 5e-5
+
+
+@pytest.mark.parametrize("k", [4, 8, 16])
+def test_kcore_matches_peeling(rmat_graph, rmat_pack, k):
+    rp, ci, w, n = _arrays(rmat_graph)
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges)
+    md, _ = run(A.kcore(k=k), rmat_graph, rmat_pack, cfg)
+    assert ((np.asarray(md["alive"][:n]) > 0) == np_kcore(rp, ci, n, k)).all()
+
+
+def test_bp_runs_fixed_iters_and_finite(rmat_graph, rmat_pack):
+    n = rmat_graph.n_nodes
+    cfg = EngineConfig(frontier_cap=n, edge_cap=rmat_graph.n_edges)
+    md, stats = run(A.belief_propagation(n_iters=8), rmat_graph, rmat_pack, cfg)
+    assert int(stats["iterations"]) == 8
+    assert np.isfinite(np.asarray(md["belief"])).all()
+
+
+# ---------------------------------------------------------------------------
+# baseline engines agree with the JIT engine (Fig. 5 / Fig. 12 preconditions)
+# ---------------------------------------------------------------------------
+
+
+def test_atomic_engine_agrees(rmat_graph, rmat_pack):
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    cfg = EngineConfig(frontier_cap=n, edge_cap=m)
+    md1, _ = run(A.sssp(0), rmat_graph, rmat_pack, cfg)
+    md2, _ = baselines.run_atomic(A.sssp(0), rmat_graph, cfg)
+    assert np.allclose(np.asarray(md1["dist"]), np.asarray(md2["dist"]))
+
+
+def test_batch_filter_engine_agrees(rmat_graph, rmat_pack):
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    cfg = EngineConfig(frontier_cap=n, edge_cap=m)
+    md1, _ = run(A.bfs(0), rmat_graph, rmat_pack, cfg)
+    md2, _ = baselines.run_batch_filter(A.bfs(0), rmat_graph, cfg)
+    assert np.allclose(np.asarray(md1["dist"]), np.asarray(md2["dist"]))
+
+
+def test_online_only_works_on_road_overflows_on_social(
+    rmat_graph, rmat_pack, road_graph, road_pack
+):
+    """Paper Fig. 12: 'online filter alone cannot work for many graphs' but
+    handles high-diameter road graphs for the whole run."""
+    cfg_small = EngineConfig(frontier_cap=256, edge_cap=2048)
+    md, s = baselines.run_filter_ablation(A.bfs(0), road_graph, road_pack,
+                                          cfg_small, "online")
+    assert not bool(s["failed_overflow"])
+    n = road_graph.n_nodes
+    full, _ = run(A.bfs(0), road_graph, road_pack,
+                  EngineConfig(frontier_cap=n, edge_cap=road_graph.n_edges))
+    assert np.allclose(np.asarray(md["dist"][:n]), np.asarray(full["dist"][:n]))
+
+    md, s = baselines.run_filter_ablation(
+        A.bfs(0), rmat_graph, rmat_pack,
+        EngineConfig(frontier_cap=64, edge_cap=rmat_graph.n_edges), "online",
+    )
+    assert bool(s["failed_overflow"])
+
+
+def test_ballot_only_agrees(rmat_graph, rmat_pack):
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    cfg = EngineConfig(frontier_cap=n, edge_cap=m)
+    md1, _ = run(A.sssp(0), rmat_graph, rmat_pack, cfg)
+    md2, _ = baselines.run_filter_ablation(A.sssp(0), rmat_graph, rmat_pack,
+                                           cfg, "ballot")
+    assert np.allclose(np.asarray(md1["dist"]), np.asarray(md2["dist"]))
+
+
+def test_mode_trace_matches_paper_patterns(rmat_graph, rmat_pack, road_graph, road_pack):
+    """Fig. 8: BFS uses ballot(pull) in the middle on social graphs; road
+    graphs stay online(push) throughout."""
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    _, s = run(A.bfs(0), rmat_graph, rmat_pack,
+               EngineConfig(frontier_cap=n, edge_cap=m))
+    assert int(s["pull_iters"]) > 0 and int(s["push_iters"]) > 0
+    tr = np.asarray(s["mode_trace"])
+    it = int(s["iterations"])
+    assert tr[0] == 0 and tr[it - 1] == 0  # push at start and end
+
+    _, s = run(A.bfs(0), road_graph, road_pack,
+               EngineConfig(frontier_cap=road_graph.n_nodes,
+                            edge_cap=road_graph.n_edges))
+    assert int(s["pull_iters"]) == 0  # high-diameter: never switches
+
+
+def test_mis_independent_and_maximal(rmat_graph, rmat_pack):
+    """Luby's MIS (beyond-paper algorithm, exercises max/vote + set states)."""
+    n, m = rmat_graph.n_nodes, rmat_graph.n_edges
+    md, _ = run(A.mis(), rmat_graph, rmat_pack,
+                EngineConfig(frontier_cap=n, edge_cap=m))
+    st = np.asarray(md["state"][:n])
+    src = np.asarray(rmat_graph.out.src_idx)
+    dst = np.asarray(rmat_graph.out.col_idx)
+    in_set = st == 1
+    assert not (in_set[src] & in_set[dst]).any()      # independence
+    nbr_in = np.zeros(n, bool)
+    np.logical_or.at(nbr_in, dst, in_set[src])
+    assert (in_set | nbr_in).all() and (st != 0).all()  # maximality
+
+
+@pytest.mark.parametrize("alg", ["bfs", "sssp", "wcc"])
+def test_sparse_combine_matches_dense(rmat_graph, rmat_pack, road_graph, road_pack, alg):
+    """Beyond-paper sort-based push combine == dense segment combine."""
+    mk = {"bfs": lambda: A.bfs(0), "sssp": lambda: A.sssp(0),
+          "wcc": lambda: A.wcc()}[alg]
+    field = {"bfs": "dist", "sssp": "dist", "wcc": "comp"}[alg]
+    for g, p in ((rmat_graph, rmat_pack), (road_graph, road_pack)):
+        n, m = g.n_nodes, g.n_edges
+        md1, _ = run(mk(), g, p, EngineConfig(frontier_cap=n, edge_cap=m))
+        md2, _ = run(mk(), g, p, EngineConfig(frontier_cap=n, edge_cap=m,
+                                              sparse_combine=True))
+        assert np.allclose(np.asarray(md1[field]), np.asarray(md2[field]))
