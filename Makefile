@@ -1,0 +1,15 @@
+.PHONY: check test smoke bench-serving
+
+# tier-1 tests + serving smoke (scripts/check.sh)
+check:
+	bash scripts/check.sh
+
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+smoke:
+	PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 --slots 4
+
+# full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
+bench-serving:
+	PYTHONPATH=src python benchmarks/serving_bench.py

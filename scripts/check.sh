@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 tests + a short serving smoke.
+#
+#   scripts/check.sh          # or: make check
+#
+# Tier-1 (ROADMAP.md): the full pytest suite, fail-fast.
+# Serving smoke: a few queries through the batched graph server on a small
+# generated graph — catches scheduler/engine wiring regressions in seconds.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== serving smoke =="
+python -m repro.launch.serve_graph --requests 8 --slots 4
+
+echo "== check OK =="

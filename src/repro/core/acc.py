@@ -25,6 +25,7 @@ the engine dedupes online-filter output before re-expansion).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Dict, Optional
 
 import jax
@@ -64,6 +65,25 @@ class Combiner:
             return jax.ops.segment_sum(vals, ids, num_segments=num)
         raise ValueError(self.name)
 
+    def segment_stacked(self, vals: jnp.ndarray, ids: jnp.ndarray, num: int) -> jnp.ndarray:
+        """Independent per-row segment combine: vals/ids (..., E) -> (..., num).
+
+        The leading (query-batch) axes are folded into the segment-id space so
+        the whole batch reduces in ONE flat scatter — XLA lowers a vmapped
+        scatter poorly on CPU/TPU, a widened unbatched one well. Row q's output
+        is bit-identical to `segment(vals[q], ids[q], num)` (same lane order,
+        same op). Companion to the query-major `frontier.*_batched` filters;
+        the vertex-major serving engine instead feeds `segment` (E, Q)
+        payloads directly (leading-axis segment ids, contiguous lanes).
+        """
+        lead = vals.shape[:-1]
+        if not lead:
+            return self.segment(vals, ids, num)
+        q = math.prod(lead)
+        offs = (jnp.arange(q, dtype=ids.dtype) * num).reshape(lead + (1,))
+        flat = self.segment(vals.reshape(-1), (ids + offs).reshape(-1), q * num)
+        return flat.reshape(lead + (num,))
+
     def pair(self, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
         if self.name == "min":
             return jnp.minimum(a, b)
@@ -81,6 +101,35 @@ class Combiner:
         if self.name == "sum":
             return jnp.sum(vals, axis=axis)
         raise ValueError(self.name)
+
+    def reduce_axis_tree(self, vals: jnp.ndarray, axis: int) -> jnp.ndarray:
+        """Reduce `axis` with an EXPLICIT balanced halving tree.
+
+        `jnp.sum`'s association order is an XLA implementation detail that
+        varies with the surrounding shape (a trailing query-batch axis changes
+        vectorization), so engine paths that must produce bit-identical
+        results for batched and unbatched runs pin the tree here: pad to a
+        power of two with the identity, then pair halves — the same sequence
+        of elementwise combines for every layout of the other axes.
+        """
+        axis = axis % vals.ndim
+        length = vals.shape[axis]
+        if length == 0:
+            shape = vals.shape[:axis] + vals.shape[axis + 1:]
+            return jnp.full(shape, self.identity(vals.dtype))
+        p = 1 << max(length - 1, 0).bit_length()
+        if p != length:
+            pad_shape = list(vals.shape)
+            pad_shape[axis] = p - length
+            pad = jnp.full(pad_shape, self.identity(vals.dtype))
+            vals = jnp.concatenate([vals, pad], axis=axis)
+        while p > 1:
+            half = p // 2
+            lo = jax.lax.slice_in_dim(vals, 0, half, axis=axis)
+            hi = jax.lax.slice_in_dim(vals, half, p, axis=axis)
+            vals = self.pair(lo, hi)
+            p = half
+        return jnp.squeeze(vals, axis=axis)
 
 
 MIN_VOTE = Combiner("min", "vote")

@@ -152,6 +152,50 @@ def pagerank(damping: float = 0.85, tol: float = 1e-4, max_iters: int = 64) -> A
     )
 
 
+def ppr(src: int = 0, damping: float = 0.85, tol: float = 1e-5,
+        max_iters: int = 64) -> ACCProgram:
+    """Personalized PageRank from one source (the per-user point query the
+    serving subsystem batches). Same pull-mode power iteration as `pagerank`,
+    but the teleport vector is the one-hot personalization preference, carried
+    in metadata (`pref`) so `apply` stays source-agnostic — which is what lets
+    a batch axis of different sources run through one stacked program."""
+
+    def init(n, deg, source=src):
+        pref = jnp.zeros((n + 1,), jnp.float32).at[source].set(1.0)
+        rank = pref
+        safe = jnp.maximum(deg, 1).astype(jnp.float32)
+        degf = jnp.concatenate([safe, jnp.ones((1,), jnp.float32)])
+        contrib = rank / degf
+        return (
+            {"contrib": contrib, "rank": rank, "pref": pref, "deg": degf},
+            jnp.arange(n),
+        )
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["contrib"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        new_rank = (1.0 - damping) * m["pref"] + damping * seg
+        return {
+            "rank": new_rank,
+            "contrib": new_rank / m["deg"],
+            "pref": m["pref"],
+            "deg": m["deg"],
+        }
+
+    def active(new: Meta, old: Meta, it):
+        del it
+        return jnp.abs(new["rank"] - old["rank"]) > tol
+
+    return ACCProgram(
+        name="ppr", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="contrib", modes="pull",
+        fixed_iters=max_iters,
+    )
+
+
 def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 128) -> ACCProgram:
     """Delta/residual PageRank: the push phase the paper switches to "at the
     end ... because the majority of the vertices are stable".  Metadata keeps

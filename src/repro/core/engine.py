@@ -78,25 +78,48 @@ class EngineState(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+def _searchsorted_rows(a: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """`searchsorted(side='right')` along the last axis; `a` may carry leading
+    batch axes (vmapped binary search), `v` is shared across rows."""
+    if a.ndim == 1:
+        return jnp.searchsorted(a, v, side="right").astype(jnp.int32)
+    flat = a.reshape((-1, a.shape[-1]))
+    out = jax.vmap(lambda row: jnp.searchsorted(row, v, side="right"))(flat)
+    return out.reshape(a.shape[:-1] + (v.shape[-1],)).astype(jnp.int32)
+
+
 def expand_frontier(csr: CSR, ids: jnp.ndarray, count: jnp.ndarray, edge_cap: int):
     """Expand the frontier's adjacency into a flat (edge_cap,) buffer with
     perfectly balanced lanes: lane e binary-searches which frontier vertex owns
-    edge e. Returns (src, dst, w, valid, total_edges)."""
+    edge e. Returns (src, dst, w, valid, total_edges).
+
+    Batch-generic: `ids` may be (..., cap) with `count` (...,) — one
+    independent frontier per leading row against the SHARED graph; all outputs
+    then carry the same leading axes (query-major layouts). The unbatched path
+    is unchanged and is what the vertex-major serving engine calls with its
+    single union frontier (serving/batch_engine.py).
+    """
     n = csr.n_nodes
-    cap = ids.shape[0]
-    valid_v = jnp.arange(cap, dtype=jnp.int32) < count
+    cap = ids.shape[-1]
+    count = jnp.asarray(count)
+    valid_v = jnp.arange(cap, dtype=jnp.int32) < count[..., None]
     safe = jnp.where(valid_v, jnp.minimum(ids, n - 1), 0)
     deg = jnp.where(valid_v, csr.row_ptr[safe + 1] - csr.row_ptr[safe], 0)
-    cum = jnp.cumsum(deg)                                  # inclusive
-    total = cum[-1] if cap > 0 else jnp.int32(0)
+    cum = jnp.cumsum(deg, axis=-1)                         # inclusive
+    if cap > 0:
+        total = cum[..., -1]
+    else:
+        total = jnp.zeros(count.shape, jnp.int32)
     e = jnp.arange(edge_cap, dtype=jnp.int32)
-    owner = jnp.searchsorted(cum, e, side="right").astype(jnp.int32)
+    owner = _searchsorted_rows(cum, e)
     owner = jnp.minimum(owner, cap - 1)
-    start = cum[owner] - deg[owner]
+    start = (jnp.take_along_axis(cum, owner, -1)
+             - jnp.take_along_axis(deg, owner, -1))
     within = e - start
-    src = safe[owner]
+    src = jnp.take_along_axis(safe, owner, -1)
     ptr = jnp.minimum(csr.row_ptr[src] + within, csr.n_edges - 1)
-    valid_e = e < jnp.minimum(total, edge_cap)
+    valid_e = e < jnp.minimum(total, edge_cap)[..., None]
+    valid_e = jnp.broadcast_to(valid_e, src.shape)
     dst = jnp.where(valid_e, csr.col_idx[ptr], n)
     w = jnp.where(valid_e, csr.weights[ptr], 0.0)
     src = jnp.where(valid_e, src, n)
@@ -191,7 +214,9 @@ def _pull_step(
             upd = program.compute(sender, s.wgt, recv)
             ident = comb.identity(upd.dtype)
             upd = jnp.where(s.nbr == n, ident, upd)
-            partial = comb.reduce_axis(upd, axis=1)                 # (R,)
+            # tree reduce: association order pinned so batched serving runs
+            # (serving/batch_engine.py, trailing query axis) stay bit-identical
+            partial = comb.reduce_axis_tree(upd, axis=1)            # (R,)
         seg = comb.pair(seg, comb.segment(partial, s.row_id, n + 1))
 
     m_new = program.run_apply(st.m, seg, st.it)
@@ -203,11 +228,13 @@ def _pull_step(
 
 
 def _frontier_volume(csr: CSR, ids: jnp.ndarray, count: jnp.ndarray) -> jnp.ndarray:
+    """Frontier out-degree volume; batch-generic like `expand_frontier`."""
     n = csr.n_nodes
-    valid = jnp.arange(ids.shape[0], dtype=jnp.int32) < count
+    count = jnp.asarray(count)
+    valid = jnp.arange(ids.shape[-1], dtype=jnp.int32) < count[..., None]
     safe = jnp.where(valid, jnp.minimum(ids, n - 1), 0)
     deg = jnp.where(valid, csr.row_ptr[safe + 1] - csr.row_ptr[safe], 0)
-    return jnp.sum(deg).astype(jnp.int32)
+    return jnp.sum(deg, axis=-1).astype(jnp.int32)
 
 
 def _advance(st, m_new, ids, count, fe_next, ovf, was_mode) -> EngineState:

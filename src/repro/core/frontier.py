@@ -28,6 +28,7 @@ All functions are shape-static and jit/while_loop safe.
 
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
@@ -97,6 +98,104 @@ def dedupe_winners(
     ticket = jnp.where(changed_e, e, 0)
     winner = jnp.zeros((n_nodes + 1,), jnp.int32).at[dst_e].max(ticket, mode="drop")
     return changed_e & (winner[dst_e] == ticket)
+
+
+# ---------------------------------------------------------------------------
+# query-major batched variants: Q independent filters in ONE flat scatter,
+# folding the leading (query) axes into the scatter-target space (stride
+# cap+1 / n+1) so XLA lowers a single wide 1-D scatter instead of a
+# serialized vmapped one. Row q's output is bit-identical to the unbatched
+# function on row q (tests/test_serving.py pins this).
+#
+# NOTE: the production serving engine (serving/batch_engine.py) batches in
+# the VERTEX-major layout with per-query dense masks and a single union
+# compaction, so it does not call these; they are the compaction primitives
+# for query-major state layouts (per-lane frontier id lists — e.g. lane
+# sharding across devices, where each shard compacts its own lanes).
+# ---------------------------------------------------------------------------
+
+
+def _lead_size(lead: tuple) -> int:
+    return math.prod(lead)
+
+
+def _fold_offsets(lead: tuple, stride: int, dtype) -> jnp.ndarray:
+    return (jnp.arange(_lead_size(lead), dtype=dtype) * stride).reshape(
+        lead + (1,)
+    )
+
+
+def compact_mask_batched(
+    mask: jnp.ndarray, cap: int, fill: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """`compact_mask` over the last axis of a (..., L) mask."""
+    lead = mask.shape[:-1]
+    if not lead:
+        return compact_mask(mask, cap, fill)
+    m = mask.astype(jnp.int32)
+    pos = jnp.cumsum(m, axis=-1) - 1
+    count = jnp.asarray(pos[..., -1] + 1, jnp.int32)
+    overflow = count > cap
+    ids_src = jnp.broadcast_to(
+        jnp.arange(mask.shape[-1], dtype=jnp.int32), mask.shape
+    )
+    tgt = jnp.where((m > 0) & (pos < cap), pos, cap)
+    tgt = tgt + _fold_offsets(lead, cap + 1, tgt.dtype)
+    buf = jnp.full((_lead_size(lead) * (cap + 1),), fill, dtype=jnp.int32)
+    buf = buf.at[tgt.reshape(-1)].set(ids_src.reshape(-1), mode="drop")
+    buf = buf.reshape(lead + (cap + 1,))
+    return buf[..., :cap], jnp.minimum(count, cap), overflow
+
+
+def compact_values_batched(
+    flags: jnp.ndarray, values: jnp.ndarray, cap: int, fill: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """`compact_values` over the last axis of (..., E) flags/values."""
+    lead = flags.shape[:-1]
+    if not lead:
+        return compact_values(flags, values, cap, fill)
+    f = flags.astype(jnp.int32)
+    pos = jnp.cumsum(f, axis=-1) - 1
+    count = jnp.asarray(pos[..., -1] + 1, jnp.int32)
+    overflow = count > cap
+    tgt = jnp.where((f > 0) & (pos < cap), pos, cap)
+    tgt = tgt + _fold_offsets(lead, cap + 1, tgt.dtype)
+    buf = jnp.full((_lead_size(lead) * (cap + 1),), fill, dtype=jnp.int32)
+    buf = buf.at[tgt.reshape(-1)].set(
+        values.astype(jnp.int32).reshape(-1), mode="drop"
+    )
+    buf = buf.reshape(lead + (cap + 1,))
+    return buf[..., :cap], jnp.minimum(count, cap), overflow
+
+
+def online_filter_batched(
+    changed_e: jnp.ndarray, dst_e: jnp.ndarray, cap: int, n_nodes: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-query online filter over a (..., E) edge buffer."""
+    return compact_values_batched(changed_e, dst_e, cap, fill=n_nodes)
+
+
+def ballot_filter_batched(
+    changed_v: jnp.ndarray, cap: int, n_nodes: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-query ballot filter over a (..., n+1) dense changed-mask."""
+    return compact_mask_batched(changed_v[..., :n_nodes], cap, fill=n_nodes)
+
+
+def dedupe_winners_batched(
+    changed_e: jnp.ndarray, dst_e: jnp.ndarray, n_nodes: int
+) -> jnp.ndarray:
+    """Per-query `dedupe_winners` on (..., E) buffers via one flat scatter-max."""
+    lead = changed_e.shape[:-1]
+    if not lead:
+        return dedupe_winners(changed_e, dst_e, n_nodes)
+    e = jnp.arange(changed_e.shape[-1], dtype=jnp.int32) + 1
+    ticket = jnp.where(changed_e, e, 0)
+    tgt = dst_e + _fold_offsets(lead, n_nodes + 1, dst_e.dtype)
+    winner = jnp.zeros((_lead_size(lead) * (n_nodes + 1),), jnp.int32)
+    winner = winner.at[tgt.reshape(-1)].max(ticket.reshape(-1), mode="drop")
+    winner = winner.reshape(lead + (n_nodes + 1,))
+    return changed_e & (jnp.take_along_axis(winner, dst_e, -1) == ticket)
 
 
 def batch_filter(

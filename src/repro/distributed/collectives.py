@@ -20,7 +20,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 
 def bf16_psum_ef(grad: jnp.ndarray, residual: jnp.ndarray, axis: str):

@@ -29,7 +29,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro import compat
+from repro.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.distributed.pipeline import PipeConfig, pad_layer_stack, plan  # noqa: F401
@@ -175,8 +176,8 @@ def pipeline_tp_loss_and_grads(
             return (jax.lax.ppermute(y, stage_axis, fwd_perm), stash), None
 
         # pvary: zero-init carries must carry the loop body's VMA type
-        act0 = jax.lax.pvary(jnp.zeros((mb, seq, d), dt), (stage_axis,))
-        stash0 = jax.lax.pvary(
+        act0 = compat.pvary(jnp.zeros((mb, seq, d), dt), (stage_axis,))
+        stash0 = compat.pvary(
             jnp.zeros((m_count, mb, s_loc, d), jnp.bfloat16),
             (stage_axis, tp_axis))
         (act, stash), _ = jax.lax.scan(
@@ -191,14 +192,14 @@ def pipeline_tp_loss_and_grads(
         vary_of = {"attn_norm": sonly, "mlp_norm": sonly, "wk": sonly,
                    "wv": sonly}
         g_slab0 = {
-            k: jax.lax.pvary(jnp.zeros(p.shape, jnp.float32),
+            k: compat.pvary(jnp.zeros(p.shape, jnp.float32),
                              vary_of.get(k, both))
             for k, p in slab.items()
         }
-        g_embed0 = jax.lax.pvary(jnp.zeros(embed.shape, jnp.float32), both)
+        g_embed0 = compat.pvary(jnp.zeros(embed.shape, jnp.float32), both)
         # head/fnorm grads arrive stage-psum'd (stage-invariant): only TP
         # variance remains for the sharded head; fnorm is fully invariant
-        g_head0 = jax.lax.pvary(jnp.zeros(head.shape, jnp.float32), (tp_axis,))
+        g_head0 = compat.pvary(jnp.zeros(head.shape, jnp.float32), (tp_axis,))
         g_fnorm0 = jnp.zeros(fnorm.shape, jnp.float32)
 
         def stage_from_slice(sl, my_slice):
@@ -225,7 +226,7 @@ def pipeline_tp_loss_and_grads(
                 lambda yy, hh, fn: head_f(yy, hh, fn, lbls[mi_c]) * lastg,
                 y, head, fnorm)
             dy_head, g_h_mi, g_f_mi = head_vjp(
-                jax.lax.pvary(jnp.float32(1.0), (stage_axis,)))
+                compat.pvary(jnp.float32(1.0), (stage_axis,)))
             # cotangent convention into vjp_stage: SUM-DECOMPOSED over TP
             # ranks (the all_gather transpose reduce-scatters, i.e. sums).
             # dy_head already is (each rank carries its vocab slice's term);
@@ -257,9 +258,9 @@ def pipeline_tp_loss_and_grads(
             dacc_next = jax.lax.ppermute(dx_send, stage_axis, bwd_perm)
             return (dacc_next, g_slab, g_embed, g_head, g_fnorm, loss_sum), None
 
-        carry0 = (jax.lax.pvary(jnp.zeros((mb, seq, d), dt), both),
+        carry0 = (compat.pvary(jnp.zeros((mb, seq, d), dt), both),
                   g_slab0, g_embed0, g_head0,
-                  g_fnorm0, jax.lax.pvary(jnp.float32(0.0), sonly))
+                  g_fnorm0, compat.pvary(jnp.float32(0.0), sonly))
         (dacc, g_slab, g_embed, g_head, g_fnorm, loss_sum), _ = jax.lax.scan(
             bwd_tick, carry0, jnp.arange(ticks, dtype=jnp.int32))
 

@@ -30,7 +30,7 @@ import traceback
 import jax
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.distributed import sharding as sh
 from repro.kernels.tuning import V5E
 from repro.launch.mesh import make_production_mesh
@@ -215,7 +215,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, allow_bonus: bool = False,
             lowered = jitted.lower(*built.abstract_inputs)
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = compat.cost_analysis(compiled)
             coll = collective_bytes(compiled.as_text())
         rec.update(
             status="OK",

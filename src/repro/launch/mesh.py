@@ -8,7 +8,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,7 +24,7 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, have {len(devs)} — run via "
             "launch/dryrun.py which forces 512 host devices"
         )
-    return jax.make_mesh(
+    return make_mesh(
         shape, axes, devices=devs[:need],
         axis_types=(AxisType.Auto,) * len(axes),
     )
@@ -34,7 +35,7 @@ def make_local_mesh(data: int = 1, model: int = 1):
     devs = jax.devices()
     need = data * model
     assert len(devs) >= need, (len(devs), need)
-    return jax.make_mesh(
+    return make_mesh(
         (data, model), ("data", "model"), devices=devs[:need],
         axis_types=(AxisType.Auto, AxisType.Auto),
     )

@@ -7,6 +7,11 @@ are recycled.  The slot-recycling admission is the serving analogue of the
 paper's JIT task management: a bounded static structure absorbing an
 irregular stream.
 
+The same admission loop, generalized behind a reusable API (slot pools +
+bounded queue with backpressure + result cache), lives in `repro.serving`
+and drives batched GRAPH queries via `launch/serve_graph.py`; this module
+keeps the LM-specific prefill/decode shape of the idea.
+
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --slots 4
 """
 

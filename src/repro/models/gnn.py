@@ -199,7 +199,7 @@ def make_edgesharded_gatedgcn(cfg: GNNConfig, mesh, n: int, axes=("data", "model
     with edge arrays sharded over `axes` and everything else replicated.
     Differentiable: VMA inserts the cross-shard psums for the replicated
     params/features cotangents."""
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     def body(params, feats, src, dst, wgt):

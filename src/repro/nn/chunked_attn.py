@@ -20,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 
 def _pvary_ctx(x):
     """Type scan carries as varying over any Manual mesh axes in scope, so
@@ -34,7 +36,7 @@ def _pvary_ctx(x):
             if t == AxisType.Manual
         )
         if manual:
-            return jax.lax.pvary(x, manual)
+            return compat.pvary(x, manual)
     except Exception:  # noqa: BLE001
         pass
     return x
@@ -70,7 +72,7 @@ def chunked_attention(
 
     def _pv(x):
         if vary_axes:
-            return jax.lax.pvary(x, vary_axes)
+            return compat.pvary(x, vary_axes)
         return _pvary_ctx(x)
 
     def q_body(out_acc, qi):

@@ -19,7 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map
 
 
 def _local_partial(q, k, v, valid_mask, dh):

@@ -1,0 +1,49 @@
+"""Batched multi-query graph serving (DESIGN.md §7).
+
+The layer between the single-query ACC engine and serving traffic:
+
+  batch_engine.py -- Q stacked point queries, one fused push-pull loop
+                     (vertex-major layout, union-frontier push, consensus
+                     JIT controller, per-query done-masking)
+  scheduler.py    -- slot pools + bounded request queue with backpressure;
+                     continuous batching with mid-flight lane recycling
+  cache.py        -- graph-version-keyed LRU so hot queries short-circuit
+
+Entry points: `GraphServer` for request streams, `run_batch` for one
+fixed batch, `launch/serve_graph.py` for the CLI driver.
+"""
+
+from repro.serving.batch_engine import (  # noqa: F401
+    BatchState,
+    init_batch,
+    make_batched_step,
+    query_result,
+    run_batch,
+    run_sequential,
+)
+from repro.serving.cache import ResultCache, make_key  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    AlgoPool,
+    Completion,
+    GraphServer,
+    QueueFull,
+    Request,
+    default_config,
+)
+
+__all__ = [
+    "BatchState",
+    "init_batch",
+    "make_batched_step",
+    "query_result",
+    "run_batch",
+    "run_sequential",
+    "ResultCache",
+    "make_key",
+    "AlgoPool",
+    "Completion",
+    "GraphServer",
+    "QueueFull",
+    "Request",
+    "default_config",
+]

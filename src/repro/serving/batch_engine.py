@@ -1,0 +1,360 @@
+"""Batched multi-query ACC engine: Q independent point queries, one fused loop.
+
+The single-query engine (`core/engine.py`) runs ONE frontier through a
+`lax.while_loop`. Serving traffic is many concurrent point queries (BFS/SSSP
+from arbitrary sources, per-user PPR) against a SHARED graph. This module
+stacks Q query states and advances all of them in one fused push-pull loop —
+SIMD-X's JIT task management lifted from vertices to queries, in the
+multi-source masked-SpMV/SpMM formulation of GraphBLAST (arXiv 1908.01407)
+and the batched-traversal spirit of Gunrock (arXiv 1701.01170).
+
+Layout is **vertex-major**: metadata fields are (n+1, Q) with the query axis
+LAST, and the per-query frontier is a dense (n+1, Q) boolean mask. That
+choice is what makes batching pay on real hardware (DESIGN.md §7):
+
+  * Every graph-indexed gather (`m[nbr]`, `m[src]`) pulls CONTIGUOUS
+    Q-vectors per vertex — one shared index stream serves all queries, so
+    the irregular-access cost of a traversal is amortized Q ways instead of
+    being repeated per query (this is exactly SpMV -> SpMM).
+  * Segment combines run over the LEADING axis with (E, Q) payloads — the
+    native `jax.ops.segment_*` path, one wide scatter; a query-major layout
+    would need vmapped scatters, which XLA serializes.
+  * **Union push**: in push mode the frontiers of all live queries are
+    OR-ed, compacted ONCE with the unbatched online/ballot machinery, and
+    expanded ONCE; per-edge updates are masked per query. JIT task
+    management happens on the union, amortized across the batch.
+  * **Consensus JIT controller**: one scalar push/pull decision per
+    iteration from the aggregate union-frontier volume (paper Fig. 7 over
+    the whole batch) — `lax.cond` on a batched predicate would execute both
+    branches.
+  * **Done-masking**: converged queries contribute nothing (their mask
+    lanes are False and their metadata is frozen) instead of blocking the
+    batch; the scheduler recycles their lanes mid-flight.
+
+Exactness: for idempotent min/max programs (BFS, SSSP, WCC) a push and a
+pull iteration compute identical metadata — every contribution is either
+pushed when its sender changes or pulled from an already-final value, and
+min/max are reassociation-free — so per-query results are bit-identical to
+a solo `core.engine.run` even when the consensus mode sequence differs from
+the solo policy's. Pull-only programs (PageRank, PPR) keep an identical
+iteration structure by construction. Non-idempotent sum programs under
+`modes='both'` match up to FP reassociation across modes.
+
+Supported programs: `init` must accept a per-query `source=` kwarg (BFS,
+SSSP, PPR) or be source-free, and `apply`/`active` must be elementwise in
+the vertex axis (true for the whole paper suite except BP's iteration-count
+`active`).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as F
+from repro.core.acc import ACCProgram
+from repro.core.engine import PULL, PUSH, EngineConfig, expand_frontier
+from repro.graph.csr import CSR, Graph
+from repro.graph.packing import EllPack
+
+
+class BatchState(NamedTuple):
+    """Q stacked query states, vertex-major, plus one consensus mode."""
+
+    m: dict                        # {field: (n+1, Q)}
+    active: jnp.ndarray            # (n+1, Q) bool — frontier mask, scratch row False
+    count: jnp.ndarray             # (Q,) int32 — per-query frontier size
+    union_fe: jnp.ndarray          # () int32 — union-frontier out-edge volume
+    overflow: jnp.ndarray          # () bool — union compaction overflowed
+    mode: jnp.ndarray              # (Q,) int32 — mode each live lane last ran
+    it: jnp.ndarray                # (Q,) int32
+    done: jnp.ndarray              # (Q,) bool
+    push_iters: jnp.ndarray        # (Q,) int32
+    pull_iters: jnp.ndarray        # (Q,) int32
+    switches: jnp.ndarray          # (Q,) int32
+    mode_trace: jnp.ndarray        # (Q, trace_len) int8
+    gmode: jnp.ndarray             # () int32 consensus PUSH/PULL
+
+
+def _ident(program: ACCProgram, m: dict):
+    return program.combiner.identity(m[program.primary].dtype)
+
+
+def _accepts_source(program: ACCProgram) -> bool:
+    """Whether `program.init` takes a per-query `source=` kwarg."""
+    params = inspect.signature(program.init).parameters
+    return "source" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
+
+
+def _apply_and_refilter(program, cfg, csr, st, seg):
+    """Shared tail of a push/pull iteration: apply the combined updates, take
+    the dense changed-mask as the next frontier (ballot semantics — the set a
+    solo run's online/ballot filter would produce), and re-aggregate volumes."""
+    m_new = program.run_apply(st.m, seg, st.it)
+    nxt = program.active(m_new, st.m, st.it)
+    nxt = nxt.at[-1].set(False)                      # scratch row stays inert
+    nxt = nxt & ~st.done[None, :]                    # done lanes push nothing
+    count = jnp.sum(nxt, axis=0).astype(jnp.int32)
+    union_fe, overflow = _union_volume(csr, cfg, nxt)
+    return m_new, nxt, count, union_fe, overflow
+
+
+def _union_volume(csr: CSR, cfg: EngineConfig, mask: jnp.ndarray):
+    """Out-edge volume of the union frontier + would-the-union-overflow."""
+    union = jnp.any(mask, axis=-1)                   # (n+1,)
+    deg = csr.row_ptr[1:] - csr.row_ptr[:-1]         # (n,)
+    fe = jnp.sum(jnp.where(union[:-1], deg, 0)).astype(jnp.int32)
+    ucount = jnp.sum(union[:-1]).astype(jnp.int32)
+    return fe, ucount > cfg.frontier_cap
+
+
+# ---------------------------------------------------------------------------
+# one batched push / pull iteration
+# ---------------------------------------------------------------------------
+
+
+def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState) -> BatchState:
+    """Union-frontier push: ONE compaction + ONE balanced edge expansion for
+    the whole batch (shared src/dst/w streams), per-query masking on the
+    (E, Q) update matrix, one leading-axis segment combine."""
+    n = csr.n_nodes
+    comb = program.combiner
+    union = jnp.any(st.active, axis=-1)
+    uids, ucount, _uovf = F.compact_mask(union[:n], cfg.frontier_cap, fill=n)
+    src, dst, w, valid_e, _total = expand_frontier(csr, uids, ucount, cfg.edge_cap)
+
+    sender = {k: v[src] for k, v in st.m.items()}        # (E, Q) row gathers
+    receiver = {k: v[dst] for k, v in st.m.items()}
+    upd = program.compute(sender, w[:, None], receiver)
+    ident = comb.identity(upd.dtype)
+    # an edge carries query q's message iff its source is in q's frontier
+    eactive = st.active[src] & valid_e[:, None]
+    upd = jnp.where(eactive, upd, ident)
+    seg = comb.segment(upd, dst, n + 1)                  # (n+1, Q)
+
+    new = _apply_and_refilter(program, cfg, csr, st, seg)
+    return _advance(st, *new, was_mode=PUSH)
+
+
+def _pull_step(
+    program: ACCProgram, pack: EllPack, cfg: EngineConfig, st: BatchState, csr_for_deg: CSR
+) -> BatchState:
+    """Full-graph pull over the degree-bucketed ELL slices, all queries at
+    once: each slice's neighbor gather is (R, W, Q) with a contiguous query
+    inner dim, reduced along the width then segment-combined per vertex."""
+    n = pack.n_nodes
+    comb = program.combiner
+    q = st.it.shape[0]
+    ident = _ident(program, st.m)
+    seg = jnp.full((n + 1, q), ident)
+    for s in pack.slices:
+        sender = {k: v[s.nbr] for k, v in st.m.items()}          # (R, W, Q)
+        recv = {k: v[s.row_id][:, None, :] for k, v in st.m.items()}
+        upd = program.compute(sender, s.wgt[..., None], recv)
+        upd = jnp.where(s.nbr[..., None] == n, ident, upd)
+        partial = comb.reduce_axis_tree(upd, axis=1)             # (R, Q)
+        seg = comb.pair(seg, comb.segment(partial, s.row_id, n + 1))
+
+    new = _apply_and_refilter(program, cfg, csr_for_deg, st, seg)
+    return _advance(st, *new, was_mode=PULL)
+
+
+def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode) -> BatchState:
+    live = ~st.done
+    it = st.it + jnp.where(live, 1, 0)
+    q = it.shape[0]
+    tr_col = jnp.minimum(st.it, st.mode_trace.shape[-1] - 1)
+    tr_val = jnp.where(live, jnp.int8(was_mode), st.mode_trace[jnp.arange(q), tr_col])
+    tr = st.mode_trace.at[jnp.arange(q), tr_col].set(tr_val)
+    keep = st.done[None, :]
+    m_merged = {k: jnp.where(keep, st.m[k], m_new[k]) for k in st.m}
+    return st._replace(
+        m=m_merged,
+        active=nxt,
+        count=jnp.where(live, count, jnp.int32(0)),
+        union_fe=union_fe,
+        overflow=overflow,
+        it=it,
+        push_iters=st.push_iters + jnp.where(live & (was_mode == PUSH), 1, 0),
+        pull_iters=st.pull_iters + jnp.where(live & (was_mode == PULL), 1, 0),
+        mode_trace=tr,
+    )
+
+
+# ---------------------------------------------------------------------------
+# consensus policy
+# ---------------------------------------------------------------------------
+
+
+def _consensus_mode(program: ACCProgram, cfg: EngineConfig, n_edges: int, st) -> jnp.ndarray:
+    """One scalar push/pull decision for the whole batch — the JIT controller
+    (paper Fig. 7 + direction-optimizing volume test) over the union stream."""
+    if program.modes == "push":
+        return jnp.asarray(PUSH)
+    if program.modes == "pull":
+        return jnp.asarray(PULL)
+    heavy = (
+        st.overflow
+        | (st.union_fe > jnp.int32(cfg.alpha * n_edges))
+        | (st.union_fe > cfg.edge_cap)
+    )
+    return jnp.where(heavy, PULL, PUSH)
+
+
+def _policy(program: ACCProgram, cfg: EngineConfig, n_edges: int, st: BatchState) -> BatchState:
+    max_it = program.fixed_iters if program.fixed_iters is not None else cfg.max_iters
+    done = st.done | (st.count == 0) | (st.it >= max_it)
+    live = ~done
+    want = _consensus_mode(program, cfg, n_edges, st)
+    switched = live & (want != st.mode)
+    return st._replace(
+        mode=jnp.where(live, want, st.mode),
+        switches=st.switches + switched.astype(jnp.int32),
+        done=done,
+        gmode=jnp.asarray(want, jnp.int32),
+    )
+
+
+def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack, cfg: EngineConfig):
+    """Per-iteration batched step (BatchState -> BatchState) — used by
+    `run_batch`'s fused loop and by the scheduler's host-stepped loop."""
+
+    def step(st: BatchState) -> BatchState:
+        if program.modes == "push":
+            new = _push_step(program, g.out, cfg, st)
+        elif program.modes == "pull":
+            new = _pull_step(program, pack, cfg, st, g.out)
+        else:
+            new = jax.lax.cond(
+                st.gmode == PULL,
+                lambda s: _pull_step(program, pack, cfg, s, g.out),
+                lambda s: _push_step(program, g.out, cfg, s),
+                st,
+            )
+        return _policy(program, cfg, g.n_edges, new)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# init / run
+# ---------------------------------------------------------------------------
+
+
+def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
+               sources, done=None) -> BatchState:
+    """Stack Q fresh query states (one per source), vertex-major.
+
+    `done` marks lanes to create as empty/inactive (the scheduler starts
+    pools fully inactive and admits into lanes later).
+    """
+    sources = jnp.asarray(sources, jnp.int32)
+    q = sources.shape[0]
+    n = g.n_nodes
+    if program.modes == "push":
+        # same no-overflow contract as engine.init_state: a push-only program
+        # has no pull fallback, so a truncated union expansion would silently
+        # drop updates (the consensus controller only reroutes modes='both').
+        assert cfg.frontier_cap >= n and cfg.edge_cap >= g.n_edges, (
+            "push-only programs must not overflow "
+            "(set frontier_cap>=n, edge_cap>=m)"
+        )
+    deg = g.out.degrees()
+    if _accepts_source(program):
+        m_q, f_q = jax.vmap(lambda s: program.init(n, deg, source=s))(sources)
+        m = {k: v.T for k, v in m_q.items()}                 # (n+1, Q)
+    else:
+        # source-free program (e.g. global pagerank): one init, every lane
+        # identical — sources are ignored.
+        m_1, f_1 = program.init(n, deg)
+        m = {k: jnp.broadcast_to(v[:, None], (n + 1, q)) for k, v in m_1.items()}
+        f_q = jnp.broadcast_to(f_1[None, :], (q,) + f_1.shape)
+    mask = jnp.zeros((n + 1, q), bool)
+    lane = jnp.broadcast_to(jnp.arange(q, dtype=jnp.int32)[:, None], f_q.shape)
+    mask = mask.at[f_q.astype(jnp.int32), lane].set(True, mode="drop")
+    mask = mask.at[-1].set(False)
+    if done is None:
+        done = jnp.zeros((q,), bool)
+    done = jnp.asarray(done)
+    mask = mask & ~done[None, :]
+    count = jnp.sum(mask, axis=0).astype(jnp.int32)
+    union_fe, overflow = _union_volume(g.out, cfg, mask)
+    st = BatchState(
+        m=m, active=mask, count=count, union_fe=union_fe, overflow=overflow,
+        mode=jnp.full((q,), PUSH, jnp.int32),
+        it=jnp.zeros((q,), jnp.int32),
+        done=done | (count == 0),
+        push_iters=jnp.zeros((q,), jnp.int32),
+        pull_iters=jnp.zeros((q,), jnp.int32),
+        switches=jnp.zeros((q,), jnp.int32),
+        mode_trace=jnp.full((q, cfg.trace_len), -1, jnp.int8),
+        gmode=jnp.asarray(PUSH, jnp.int32),
+    )
+    return st._replace(gmode=_consensus_mode(program, cfg, g.n_edges, st),
+                       mode=jnp.where(st.done, st.mode,
+                                      _consensus_mode(program, cfg, g.n_edges, st)))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _run_fused(program, g, pack, cfg, st0):
+    step = make_batched_step(program, g, pack, cfg)
+    return jax.lax.while_loop(lambda s: jnp.any(~s.done), step, st0)
+
+
+def run_batch(
+    program: ACCProgram,
+    g: Graph,
+    pack: EllPack,
+    cfg: EngineConfig,
+    sources,
+    fusion: str = "all",
+):
+    """Run Q point queries of `program` (one per entry of `sources`) to
+    convergence as one batch. Returns (metadata dict, field -> (n+1, Q),
+    stats). `cfg.pull_impl`/`cfg.sparse_combine` are single-query fast paths
+    and are ignored here."""
+    st0 = init_batch(program, g, cfg, sources)
+    if fusion == "all":
+        final = _run_fused(program, g, pack, cfg, st0)
+    elif fusion == "none":
+        step = jax.jit(make_batched_step(program, g, pack, cfg))
+        final = st0
+        while bool(jnp.any(~final.done)):
+            final = step(final)
+    else:
+        raise ValueError(fusion)
+    stats = {
+        "iterations": jnp.max(final.it),
+        "per_query_iters": final.it,
+        "push_iters": final.push_iters,
+        "pull_iters": final.pull_iters,
+        "switches": final.switches,
+        "final_count": final.count,
+    }
+    return final.m, stats
+
+
+def query_result(m: dict, field: str, lane: int) -> jnp.ndarray:
+    """Extract lane `lane`'s (n,) result from vertex-major batched metadata."""
+    return m[field][:-1, lane]
+
+
+def run_sequential(program_factory, g: Graph, pack: EllPack, cfg: EngineConfig,
+                   sources, run_fn=None):
+    """Reference: the same queries one at a time through the single-query
+    engine. Used by tests to assert bit-identity and by benchmarks as the
+    no-batching baseline."""
+    from repro.core import engine as E
+
+    run_fn = run_fn or E.run
+    outs = []
+    for s in sources:
+        m, _ = run_fn(program_factory(), g, pack, cfg, source=jnp.int32(int(s)))
+        outs.append(m)
+    return outs

@@ -1,0 +1,82 @@
+"""LRU result cache for the graph serving layer.
+
+Point queries are heavily skewed in serving traffic (hot sources, repeated
+per-user PPR) — a small LRU in front of the batched engine short-circuits
+repeats without touching a slot. Keys bind the GRAPH VERSION so a graph swap
+(rebuild, streaming update) invalidates every cached result implicitly:
+bump `GraphServer.graph_version` and old keys simply never match again.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable, Optional, Tuple
+
+
+def make_key(graph_version: int, algo: str, source: int,
+             params: Tuple = ()) -> Tuple:
+    """Canonical cache key: (graph version, algorithm, source, extra params).
+
+    `params` must be hashable; `GraphServer` passes () (each pool serves one
+    parameterization — its algo name identifies it). Callers serving several
+    parameterizations of one algorithm (e.g. two PPR dampings as separate
+    pools) put the distinguishing (name, value) pairs here.
+    """
+    return (int(graph_version), str(algo), int(source), tuple(params))
+
+
+class ResultCache:
+    """Bounded LRU: `get` refreshes recency, `put` evicts the stalest entry.
+
+    Values are whatever the caller stores (host numpy result arrays here —
+    keeping cached results off-device frees HBM for in-flight queries).
+    """
+
+    def __init__(self, capacity: int = 1024):
+        assert capacity >= 0
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        return key in self._entries
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return self._entries[key]
+        self.misses += 1
+        return None
+
+    def put(self, key: Hashable, value: Any) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._entries:
+            self._entries.move_to_end(key)
+        self._entries[key] = value
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def invalidate(self, key: Hashable) -> bool:
+        return self._entries.pop(key, None) is not None
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "size": len(self._entries),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": self.hits / total if total else 0.0,
+        }

@@ -1,0 +1,296 @@
+"""Slot scheduler: continuous batching of graph point queries.
+
+`launch/serve.py` demos slot-recycling admission for LM decode; this module
+is that loop generalized into a reusable serving layer for ACC graph
+queries. The analogy to SIMD-X JIT task management is direct: a bounded
+static structure (S query lanes per algorithm, fixed shapes, one compiled
+step) absorbs an irregular request stream (arrivals of arbitrary sources
+and algorithms), with overflow handled by a bounded queue + backpressure
+instead of device-side reallocation.
+
+Pieces:
+
+  * `AlgoPool` — S lanes of `batch_engine.BatchState` for ONE program.
+    Admission writes a freshly initialized query into a done lane (a jitted
+    column write); one `step()` advances every live lane one iteration;
+    harvest extracts converged lanes and frees them. Lanes converge and are
+    recycled MID-FLIGHT — queries never wait for the batch.
+  * `GraphServer` — per-algorithm pools behind one bounded FIFO request
+    queue (`submit` returns False when the queue is full — backpressure for
+    the caller to retry/shed), fronted by the LRU `ResultCache`: a hit
+    completes the request without touching a pool.
+
+Exactness note: a lane admitted into a half-busy pool sees consensus
+push/pull decisions influenced by its batch-mates, so its mode *sequence*
+can differ from a solo run; results are still bit-identical for the
+idempotent/min programs and pull-only programs served here (see
+batch_engine's module docstring for the argument).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acc import ACCProgram
+from repro.core.engine import EngineConfig
+from repro.graph.csr import Graph
+from repro.graph.packing import EllPack
+from repro.serving import batch_engine as B
+from repro.serving.cache import ResultCache, make_key
+
+
+class QueueFull(Exception):
+    """Raised by `submit(..., strict=True)` when the request queue is full."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    algo: str
+    source: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    algo: str
+    source: int
+    result: np.ndarray          # (n,) primary metadata field
+    iterations: int
+    from_cache: bool
+
+
+def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
+    """Serving-friendly engine config: full frontier cap (dense masks can't
+    overflow), a modest push edge budget (the consensus controller pulls on
+    heavy iterations anyway, so a lean push buffer keeps light iterations
+    cheap)."""
+    n, m = g.n_nodes, g.n_edges
+    return EngineConfig(
+        frontier_cap=n, edge_cap=max(1, min(m, 2 * n)), max_iters=max_iters
+    )
+
+
+class AlgoPool:
+    """Fixed query slots for one ACC program over one graph."""
+
+    def __init__(self, name: str, program: ACCProgram, g: Graph, pack: EllPack,
+                 cfg: EngineConfig, slots: int, result_field: Optional[str] = None):
+        assert slots >= 1
+        self.name = name
+        self.program = program
+        self.result_field = result_field or program.primary
+        self.g = g
+        self.pack = pack
+        self.cfg = cfg
+        self.slots = slots
+        self.lane_rid: List[Optional[int]] = [None] * slots
+        # all lanes start inactive (done=True, empty frontiers)
+        self.state = B.init_batch(
+            program, g, cfg,
+            jnp.zeros((slots,), jnp.int32),
+            done=jnp.ones((slots,), bool),
+        )
+        # graph/pack are TRACED pytree args (not closure constants), so the
+        # CSR/ELL arrays are not baked into each pool's executable — pools
+        # over the same graph share the device buffers.
+        self._step = jax.jit(
+            lambda st, g_, pack_: B.make_batched_step(program, g_, pack_, cfg)(st)
+        )
+        self._admit = jax.jit(
+            lambda st, source, lane, g_: _admit_lane(program, g_, cfg, st, source, lane)
+        )
+        self.engine_queries = 0
+        self.steps = 0
+
+    # -- scheduling interface ------------------------------------------------
+
+    def free_lanes(self) -> List[int]:
+        done = np.asarray(self.state.done)
+        return [i for i in range(self.slots) if self.lane_rid[i] is None and done[i]]
+
+    def live(self) -> bool:
+        return any(r is not None for r in self.lane_rid)
+
+    def admit(self, lane: int, rid: int, source: int) -> None:
+        assert self.lane_rid[lane] is None
+        self.state = self._admit(
+            self.state, jnp.int32(source), jnp.int32(lane), self.g
+        )
+        self.lane_rid[lane] = rid
+        self.engine_queries += 1
+
+    def step(self) -> None:
+        if self.live():
+            self.state = self._step(self.state, self.g, self.pack)
+            self.steps += 1
+
+    def harvest(self) -> List[tuple]:
+        """(lane, rid, result, iterations) for every lane that converged."""
+        if not self.live():
+            return []
+        done = np.asarray(self.state.done)
+        out = []
+        for lane, rid in enumerate(self.lane_rid):
+            if rid is None or not done[lane]:
+                continue
+            res = np.asarray(self.state.m[self.result_field][:-1, lane])
+            out.append((lane, rid, res, int(self.state.it[lane])))
+            self.lane_rid[lane] = None
+        return out
+
+
+def _admit_lane(program, g, cfg, st: B.BatchState, source, lane) -> B.BatchState:
+    """Write one freshly initialized query into lane `lane` (jitted)."""
+    one = B.init_batch(program, g, cfg, source[None])
+    m = {k: st.m[k].at[:, lane].set(one.m[k][:, 0]) for k in st.m}
+    active = st.active.at[:, lane].set(one.active[:, 0])
+    st = st._replace(
+        m=m,
+        active=active,
+        count=st.count.at[lane].set(one.count[0]),
+        mode=st.mode.at[lane].set(one.mode[0]),
+        it=st.it.at[lane].set(0),
+        done=st.done.at[lane].set(one.done[0]),
+        push_iters=st.push_iters.at[lane].set(0),
+        pull_iters=st.pull_iters.at[lane].set(0),
+        switches=st.switches.at[lane].set(0),
+        mode_trace=st.mode_trace.at[lane].set(one.mode_trace[0]),
+    )
+    union_fe, overflow = B._union_volume(g.out, cfg, active)
+    st = st._replace(union_fe=union_fe, overflow=overflow)
+    return st._replace(gmode=B._consensus_mode(program, cfg, g.n_edges, st))
+
+
+class GraphServer:
+    """Batched multi-query graph serving: cache -> queue -> slot pools."""
+
+    def __init__(
+        self,
+        g: Graph,
+        pack: EllPack,
+        programs: Dict[str, ACCProgram],
+        slots: "int | Dict[str, int]" = 8,
+        cfg: Optional[EngineConfig] = None,
+        queue_cap: int = 256,
+        cache_capacity: int = 1024,
+        graph_version: int = 0,
+        result_fields: Optional[Dict[str, str]] = None,
+    ):
+        cfg = cfg or default_config(g)
+        self.g = g
+        self.graph_version = graph_version
+        self.queue: deque = deque()
+        self.queue_cap = queue_cap
+        self.cache = ResultCache(cache_capacity)
+        self.pools: Dict[str, AlgoPool] = {}
+        result_fields = result_fields or {}
+        for name, prog in programs.items():
+            s = slots[name] if isinstance(slots, dict) else slots
+            self.pools[name] = AlgoPool(
+                name, prog, g, pack, cfg, s,
+                result_field=result_fields.get(name),
+            )
+        self._next_rid = 0
+        self._inflight_sources: Dict[int, int] = {}
+        self.completions: List[Completion] = []
+        self.rejected = 0
+
+    # -- request side --------------------------------------------------------
+
+    def submit(self, algo: str, source: int, strict: bool = False) -> Optional[int]:
+        """Enqueue a query; returns its rid, or None when the queue is full
+        (backpressure — caller sheds or retries; `strict=True` raises)."""
+        if algo not in self.pools:
+            raise KeyError(f"no pool for algorithm {algo!r}")
+        rid = self._next_rid
+        key = make_key(self.graph_version, algo, source)
+        hit = self.cache.get(key)
+        if hit is not None:
+            self._next_rid += 1
+            self.completions.append(Completion(
+                rid=rid, algo=algo, source=int(source), result=hit,
+                iterations=0, from_cache=True,
+            ))
+            return rid
+        if len(self.queue) >= self.queue_cap:
+            self.rejected += 1
+            if strict:
+                raise QueueFull(f"queue at capacity {self.queue_cap}")
+            return None
+        self._next_rid += 1
+        self.queue.append(Request(rid=rid, algo=algo, source=int(source)))
+        return rid
+
+    # -- serving loop --------------------------------------------------------
+
+    def pump(self) -> List[Completion]:
+        """One scheduling round: admit from the queue into free lanes, one
+        batched step per live pool, harvest converged lanes. Returns the
+        completions produced this round."""
+        # admission (FIFO per algorithm; requests for saturated pools wait)
+        free = {name: deque(pool.free_lanes()) for name, pool in self.pools.items()}
+        still_waiting: deque = deque()
+        while self.queue:
+            req = self.queue.popleft()
+            lanes = free[req.algo]
+            if lanes:
+                self.pools[req.algo].admit(lanes.popleft(), req.rid, req.source)
+                self._inflight_sources[req.rid] = req.source
+            else:
+                still_waiting.append(req)
+        self.queue = still_waiting
+
+        new: List[Completion] = []
+        for name, pool in self.pools.items():
+            pool.step()
+            for _lane, rid, result, iters in pool.harvest():
+                # rid -> source lookup: completions carry it forward
+                comp = Completion(
+                    rid=rid, algo=name, source=self._source_of(rid, name, result),
+                    result=result, iterations=iters, from_cache=False,
+                )
+                new.append(comp)
+        # cache fill
+        for comp in new:
+            self.cache.put(
+                make_key(self.graph_version, comp.algo, comp.source), comp.result
+            )
+        self.completions.extend(new)
+        return new
+
+    def _source_of(self, rid: int, algo: str, result) -> int:
+        return self._inflight_sources.pop(rid)
+
+    def drain(self, max_rounds: int = 100000) -> List[Completion]:
+        """Pump until the queue and every pool are empty; returns ALL
+        completions accumulated so far (cache hits included)."""
+        rounds = 0
+        while self.queue or any(p.live() for p in self.pools.values()):
+            self.pump()
+            rounds += 1
+            if rounds >= max_rounds:
+                raise RuntimeError("drain did not converge")
+        return self.completions
+
+    def stats(self) -> dict:
+        return {
+            "completed": len(self.completions),
+            "queued": len(self.queue),
+            "rejected": self.rejected,
+            "cache": self.cache.stats(),
+            "pools": {
+                name: {
+                    "slots": p.slots,
+                    "engine_queries": p.engine_queries,
+                    "steps": p.steps,
+                }
+                for name, p in self.pools.items()
+            },
+        }

@@ -11,7 +11,7 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    from repro.compat import AxisType, make_mesh
     from repro.models import transformer as tfm
     from repro.distributed import pipeline as pp
     from repro.distributed import pipeline_tp as pptp
@@ -27,8 +27,8 @@ SCRIPT = textwrap.dedent("""
         params, toks.reshape(8, 16), lbls.reshape(8, 16), cfg)
 
     for shape in [(2, 2), (1, 2), (4, 1)]:
-        mesh = jax.make_mesh(shape, ('data', 'model'),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh(shape, ('data', 'model'),
+                         axis_types=(AxisType.Auto,) * 2)
         pc = pp.plan(cfg, n_stages=shape[0], n_micro=4)
         pparams = dict(params,
                        layers=pp.pad_layer_stack(params['layers'], cfg, pc))
@@ -55,6 +55,12 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(__import__("jax").lax, "pvary"),
+    reason="manual-TP pipeline grads need VMA/pvary autodiff semantics "
+           "(old shard_map skips the cross-shard psum on replicated-param "
+           "cotangents when the static replication checker is off)",
+)
 def test_pipeline_tp_matches_reference():
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import cost_analysis, shard_map
 from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_local_mesh
 
@@ -25,8 +26,8 @@ def test_scan_body_counted_once():
     w = jnp.ones((8, 128, 128))
     scanned = jax.jit(lambda x, w: jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0])
     unrolled = jax.jit(lambda x, w: x @ w[0] @ w[1] @ w[2] @ w[3] @ w[4] @ w[5] @ w[6] @ w[7])
-    fs = scanned.lower(x, w).compile().cost_analysis()["flops"]
-    fu = unrolled.lower(x, w).compile().cost_analysis()["flops"]
+    fs = cost_analysis(scanned.lower(x, w).compile())["flops"]
+    fu = cost_analysis(unrolled.lower(x, w).compile())["flops"]
     assert fu / fs == pytest.approx(8.0, rel=0.01)
 
 
@@ -39,7 +40,7 @@ def test_collective_parser_multiplies_by_trip_count():
             return c + jax.lax.psum(c, "data"), None
         return jax.lax.scan(body, x, None, length=trips)[0]
 
-    fn = jax.shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    fn = shard_map(inner, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
     txt = jax.jit(fn).lower(jnp.ones((8, 128))).compile().as_text()
     stats = collective_bytes(txt)
     one_shot = 8 * 128 * 4  # f32 per-device operand bytes
@@ -81,7 +82,7 @@ def test_analytic_lm_flops_calibrated_against_unrolled_hlo():
     params = tfm.init_params(jax.random.key(0), cfg)
     toks = jnp.zeros((2, 64), jnp.int32)
     step = jax.jit(lambda p, t: jax.grad(unrolled_loss)(p, t, t))
-    hlo_flops = step.lower(params, toks).compile().cost_analysis()["flops"]
+    hlo_flops = cost_analysis(step.lower(params, toks).compile())["flops"]
 
     ana = lm_cell(cfg, "train", batch=2, seq=64, dp=1, tp=1, accum=1)
     # remove the remat-recompute term (this variant doesn't remat) and the
@@ -120,8 +121,8 @@ def test_analytic_decode_flops_calibrated():
 
     cache = tfm.init_cache(cfg, 4, seq)
     tok = jnp.zeros((4, 1), jnp.int32)
-    hlo = (jax.jit(unrolled_decode)
-           .lower(params, cache["k"], cache["v"], tok)
-           .compile().cost_analysis()["flops"])
+    hlo = cost_analysis(jax.jit(unrolled_decode)
+                        .lower(params, cache["k"], cache["v"], tok)
+                        .compile())["flops"]
     ana = lm_cell(cfg, "decode", batch=4, seq=seq, dp=1, tp=1).flops_global
     assert hlo == pytest.approx(ana, rel=0.4)

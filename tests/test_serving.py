@@ -1,0 +1,255 @@
+"""Serving subsystem: batched engine exactness, scheduler, cache.
+
+Three contracts from the serving design (DESIGN.md §7):
+  (a) batched multi-source BFS/SSSP/PPR results bit-match Q sequential
+      single-query engine runs (vertex-major stacking is exact, not approx);
+  (b) the slot scheduler drains a request stream larger than the slot count
+      with no request lost, and results still bit-match;
+  (c) a cache hit completes a request without invoking the engine.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.acc import MIN_VOTE, SUM_AGG
+from repro.core import frontier as F
+from repro.graph import generators, pack_ell
+from repro.serving import (
+    GraphServer,
+    default_config,
+    query_result,
+    run_batch,
+    run_sequential,
+)
+
+
+@pytest.fixture(scope="module")
+def served_graph():
+    g = generators.rmat(9, 8, seed=3)          # 512 nodes, power-law
+    return g, pack_ell(g.inc)
+
+
+CASES = [
+    ("bfs", alg.bfs, "dist"),
+    ("sssp", alg.sssp, "dist"),
+    ("ppr", alg.ppr, "rank"),
+]
+
+
+# ---------------------------------------------------------------------------
+# (a) batched == sequential, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,factory,field", CASES)
+def test_batched_bitmatches_sequential(served_graph, name, factory, field):
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    sources = [0, 7, 101, g.n_nodes - 1, 7]    # includes a duplicate
+    m, stats = run_batch(factory(0), g, pack, cfg, sources)
+    seq = run_sequential(lambda: factory(0), g, pack, cfg, sources)
+    for i, s in enumerate(sources):
+        got = np.asarray(query_result(m, field, i))
+        ref = np.asarray(seq[i][field][:-1])
+        assert np.array_equal(got, ref), (
+            f"{name} source {s}: batched result diverges from sequential "
+            f"(max |diff| {np.abs(got - ref).max()})"
+        )
+    # duplicate sources must produce identical lanes
+    assert np.array_equal(
+        np.asarray(query_result(m, field, 1)),
+        np.asarray(query_result(m, field, 4)),
+    )
+
+
+def test_batched_source_free_program(served_graph):
+    """Programs whose init has no `source=` (global pagerank) batch too:
+    every lane computes the same fixed point, bit-equal to the solo engine."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    m, _ = run_batch(alg.pagerank(), g, pack, cfg, [0, 9])   # sources ignored
+    from repro.core import engine as E
+    ref, _ = E.run(alg.pagerank(), g, pack, cfg)
+    for lane in range(2):
+        assert np.array_equal(np.asarray(query_result(m, "rank", lane)),
+                              np.asarray(ref["rank"][:-1]))
+
+
+def test_batched_road_graph_high_diameter():
+    """High-diameter regime (many tiny frontiers — the online-filter regime)."""
+    g = generators.grid2d(16, seed=5)          # 256 nodes, diameter 30
+    pack = pack_ell(g.inc)
+    cfg = default_config(g, max_iters=256)
+    sources = [0, 255, 128]
+    m, _ = run_batch(alg.bfs(0), g, pack, cfg, sources)
+    seq = run_sequential(lambda: alg.bfs(0), g, pack, cfg, sources)
+    for i in range(len(sources)):
+        assert np.array_equal(
+            np.asarray(query_result(m, "dist", i)),
+            np.asarray(seq[i]["dist"][:-1]),
+        )
+
+
+def test_done_masking_freezes_converged_lanes(served_graph):
+    """A converged query's lane must not change while batch-mates continue."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    # BFS converges in ~6 iters; PPR-like long-tail comes from sssp weights
+    m, stats = run_batch(alg.sssp(0), g, pack, cfg, [0, 301])
+    iters = np.asarray(stats["per_query_iters"])
+    seq = run_sequential(lambda: alg.sssp(0), g, pack, cfg, [0, 301])
+    assert np.array_equal(np.asarray(query_result(m, "dist", 0)),
+                          np.asarray(seq[0]["dist"][:-1]))
+    assert np.array_equal(np.asarray(query_result(m, "dist", 1)),
+                          np.asarray(seq[1]["dist"][:-1]))
+    assert int(np.asarray(stats["iterations"])) == iters.max()
+
+
+# ---------------------------------------------------------------------------
+# (b) scheduler: stream >> slots, nothing lost
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_drains_oversubscribed_stream(served_graph):
+    g, pack = served_graph
+    n = g.n_nodes
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack,
+        {"bfs": alg.bfs(0), "sssp": alg.sssp(0)},
+        slots=3, cfg=cfg, queue_cap=64, cache_capacity=0,   # cache off
+    )
+    rng = np.random.default_rng(11)
+    want = {}
+    for i in range(17):                        # 17 requests >> 3 slots/pool
+        algo = "bfs" if i % 2 == 0 else "sssp"
+        src = int(rng.integers(0, n))
+        rid = srv.submit(algo, src)
+        assert rid is not None
+        want[rid] = (algo, src)
+    comps = srv.drain()
+    assert len(comps) == len(want), "scheduler lost requests"
+    assert {c.rid for c in comps} == set(want)
+    for c in comps:
+        algo, src = want[c.rid]
+        assert (c.algo, c.source) == (algo, src)
+        ref = run_sequential(
+            lambda: alg.bfs(0) if algo == "bfs" else alg.sssp(0),
+            g, pack, cfg, [src],
+        )[0]
+        assert np.array_equal(c.result, np.asarray(ref["dist"][:-1])), (
+            f"{algo}({src}) result wrong after slot recycling"
+        )
+
+
+def test_scheduler_backpressure(served_graph):
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(g, pack, {"bfs": alg.bfs(0)}, slots=2, cfg=cfg,
+                      queue_cap=4, cache_capacity=0)
+    accepted = [srv.submit("bfs", s) for s in range(10)]
+    assert accepted[:4] == [0, 1, 2, 3]
+    assert all(r is None for r in accepted[4:]), "queue_cap not enforced"
+    assert srv.rejected == 6
+    from repro.serving import QueueFull
+    with pytest.raises(QueueFull):
+        srv.submit("bfs", 99, strict=True)
+    comps = srv.drain()
+    assert len(comps) == 4                      # the accepted ones all finish
+
+
+# ---------------------------------------------------------------------------
+# (c) cache hits bypass the engine
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_skips_engine(served_graph):
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(g, pack, {"bfs": alg.bfs(0)}, slots=2, cfg=cfg,
+                      cache_capacity=8)
+    rid1 = srv.submit("bfs", 42)
+    first = {c.rid: c for c in srv.drain()}[rid1]
+    assert not first.from_cache
+    queries_before = srv.pools["bfs"].engine_queries
+    steps_before = srv.pools["bfs"].steps
+
+    rid2 = srv.submit("bfs", 42)                # hot repeat
+    comp = [c for c in srv.drain() if c.rid == rid2][0]
+    assert comp.from_cache
+    assert comp.iterations == 0
+    assert srv.pools["bfs"].engine_queries == queries_before, "engine ran on a hit"
+    assert srv.pools["bfs"].steps == steps_before
+    assert np.array_equal(comp.result, first.result)
+
+
+def test_cache_lru_eviction_and_version_invalidation():
+    from repro.serving import ResultCache, make_key
+
+    c = ResultCache(capacity=2)
+    c.put(make_key(0, "bfs", 1), "a")
+    c.put(make_key(0, "bfs", 2), "b")
+    assert c.get(make_key(0, "bfs", 1)) == "a"  # refresh 1
+    c.put(make_key(0, "bfs", 3), "c")           # evicts 2 (LRU)
+    assert c.get(make_key(0, "bfs", 2)) is None
+    assert c.get(make_key(0, "bfs", 1)) == "a"
+    # a graph-version bump misses every old key
+    assert c.get(make_key(1, "bfs", 1)) is None
+    s = c.stats()
+    assert s["evictions"] == 1 and s["size"] == 2
+
+
+# ---------------------------------------------------------------------------
+# batched frontier primitives (lane-major variants)
+# ---------------------------------------------------------------------------
+
+
+def test_batched_filters_match_per_row():
+    rng = np.random.default_rng(5)
+    n, E, Q, cap = 37, 50, 4, 16
+    mask = jnp.asarray(rng.random((Q, n + 1)) < 0.3).at[:, -1].set(False)
+    ids_b, cnt_b, ovf_b = F.ballot_filter_batched(mask, cap, n)
+    for q in range(Q):
+        ids, cnt, ovf = F.ballot_filter(mask[q], cap, n)
+        assert np.array_equal(np.asarray(ids_b[q]), np.asarray(ids))
+        assert int(cnt_b[q]) == int(cnt) and bool(ovf_b[q]) == bool(ovf)
+
+    changed = jnp.asarray(rng.random((Q, E)) < 0.4)
+    dst = jnp.asarray(rng.integers(0, n, size=(Q, E)), jnp.int32)
+    kept_b = F.dedupe_winners_batched(changed, dst, n)
+    ids_b, cnt_b, ovf_b = F.online_filter_batched(kept_b, dst, cap, n)
+    for q in range(Q):
+        kept = F.dedupe_winners(changed[q], dst[q], n)
+        assert np.array_equal(np.asarray(kept_b[q]), np.asarray(kept))
+        ids, cnt, ovf = F.online_filter(kept, dst[q], cap, n)
+        assert np.array_equal(np.asarray(ids_b[q]), np.asarray(ids))
+        assert int(cnt_b[q]) == int(cnt) and bool(ovf_b[q]) == bool(ovf)
+
+
+def test_segment_stacked_matches_per_row():
+    rng = np.random.default_rng(6)
+    Q, E, num = 3, 40, 11
+    vals = jnp.asarray(rng.random((Q, E)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, num, size=(Q, E)), jnp.int32)
+    for comb in (MIN_VOTE, SUM_AGG):
+        out = comb.segment_stacked(vals, ids, num)
+        for q in range(Q):
+            ref = comb.segment(vals[q], ids[q], num)
+            assert np.array_equal(np.asarray(out[q]), np.asarray(ref))
+
+
+def test_reduce_axis_tree_matches_reduce():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.random((5, 7, 3)), jnp.float32)
+    for comb in (MIN_VOTE, SUM_AGG):
+        tree = np.asarray(comb.reduce_axis_tree(x, axis=1))
+        ref = np.asarray(comb.reduce_axis(x, axis=1))
+        assert np.allclose(tree, ref, rtol=1e-6)
+        # and the tree is layout-independent: batched lanes == solo lanes
+        solo = np.stack([
+            np.asarray(comb.reduce_axis_tree(x[:, :, q], axis=1))
+            for q in range(x.shape[2])
+        ], axis=-1)
+        assert np.array_equal(tree, solo)
