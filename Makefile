@@ -1,6 +1,6 @@
-.PHONY: check test smoke bench-serving
+.PHONY: check test smoke smoke-streaming bench-serving bench-streaming bench-schema
 
-# tier-1 tests + serving smoke (scripts/check.sh)
+# tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
 	bash scripts/check.sh
 
@@ -10,6 +10,19 @@ test:
 smoke:
 	PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 --slots 4
 
+# verified streaming smoke: queries + edge-update batches interleaved
+smoke-streaming:
+	PYTHONPATH=src python -m repro.launch.stream_graph --requests 9 --slots 3 \
+		--scale 8 --update-every 4 --verify
+
 # full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
 bench-serving:
 	PYTHONPATH=src python benchmarks/serving_bench.py
+
+# streaming incremental-vs-full benchmark (writes BENCH_streaming.json)
+bench-streaming:
+	PYTHONPATH=src python benchmarks/streaming_bench.py
+
+# lint the BENCH_*.json records (also part of `make check`)
+bench-schema:
+	python scripts/bench_schema.py

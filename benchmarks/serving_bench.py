@@ -16,6 +16,7 @@ whole query batch (SpMV -> SpMM), so per-query cost falls as Q grows.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -91,6 +92,27 @@ def main(argv=None):
         print(f"[serving_bench] {name} speedup Q={batches[-1]} vs Q={batches[0]}: "
               f"{top / base:.2f}x")
         record["algos"][name] = rows
+
+    # frontier-aware masked pull (ROADMAP "PPR batch efficiency"): bounded
+    # active-row compaction serves cold rows from a partial cache instead of
+    # regathering (R, W, Q) every iteration; exact for min programs,
+    # tol-bounded for PPR (DESIGN.md §8)
+    q = max(batches)
+    program = alg.ppr(0)
+    sources = rng.integers(0, n, size=q).tolist()
+    cfg_masked = dataclasses.replace(cfg, masked_pull=True)
+    dense_s = bench_batch(program, g, pack, cfg, sources, repeats=args.repeats)
+    masked_s = bench_batch(program, g, pack, cfg_masked, sources,
+                           repeats=args.repeats)
+    record["ppr_masked_pull"] = {
+        "batch": q,
+        "dense_seconds": dense_s,
+        "masked_seconds": masked_s,
+        "speedup": dense_s / masked_s,
+        "masked_pull_frac": cfg_masked.masked_pull_frac,
+    }
+    print(f"[serving_bench] ppr masked pull Q={q}: dense {dense_s:.3f}s vs "
+          f"masked {masked_s:.3f}s -> {dense_s / masked_s:.2f}x")
 
     # single-query engine baseline (no batching at all), BFS only
     program = alg.bfs(0)

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""Sanity-check the BENCH_*.json records at the repo root.
+
+Benchmarks are rerun rarely and read often (ROADMAP/PR claims cite them), so
+`make check` validates that every record is well-formed rather than silently
+bit-rotted:
+
+  * valid JSON, top-level object;
+  * a "graph" object with integer n_nodes / n_edges;
+  * every "pass_*" key is a bool (the gate flags benches exit on);
+  * every number in the tree is finite (no NaN/inf smuggled through);
+  * every "*_seconds" / "*_qps" / "speedup" value is positive.
+
+Usage: python scripts/bench_schema.py [paths...]   (default: BENCH_*.json)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import math
+import sys
+
+
+def _walk(node, path, errs):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _walk(v, f"{path}.{k}", errs)
+            if k.startswith("pass_") and not isinstance(v, bool):
+                errs.append(f"{path}.{k}: pass flag must be bool, got {v!r}")
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk(v, f"{path}[{i}]", errs)
+    elif isinstance(node, bool):
+        pass
+    elif isinstance(node, (int, float)):
+        if not math.isfinite(node):
+            errs.append(f"{path}: non-finite number {node!r}")
+        key = path.rsplit(".", 1)[-1]
+        if (key.endswith("_seconds") or key.endswith("_qps")
+                or key == "speedup") and node <= 0:
+            errs.append(f"{path}: {key} must be positive, got {node!r}")
+
+
+def check(path: str) -> list:
+    errs: list = []
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(rec, dict):
+        return [f"{path}: top level must be an object"]
+    graph = rec.get("graph")
+    if not isinstance(graph, dict):
+        errs.append(f"{path}: missing 'graph' object")
+    else:
+        for k in ("n_nodes", "n_edges"):
+            if not isinstance(graph.get(k), int) or graph.get(k) <= 0:
+                errs.append(f"{path}: graph.{k} must be a positive int")
+    _walk(rec, path, errs)
+    return errs
+
+
+def main(argv=None) -> int:
+    paths = (argv if argv else None) or sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("[bench_schema] no BENCH_*.json records found")
+        return 0
+    all_errs = []
+    for p in paths:
+        errs = check(p)
+        status = "OK" if not errs else f"{len(errs)} problem(s)"
+        print(f"[bench_schema] {p}: {status}")
+        all_errs.extend(errs)
+    for e in all_errs:
+        print(f"[bench_schema]   {e}")
+    return 1 if all_errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

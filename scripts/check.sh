@@ -1,11 +1,15 @@
 #!/usr/bin/env bash
-# Repo check: tier-1 tests + a short serving smoke.
+# Repo check: tier-1 tests + serving/streaming smokes + bench-record lint.
 #
 #   scripts/check.sh          # or: make check
 #
 # Tier-1 (ROADMAP.md): the full pytest suite, fail-fast.
 # Serving smoke: a few queries through the batched graph server on a small
 # generated graph — catches scheduler/engine wiring regressions in seconds.
+# Streaming smoke: queries with edge-update batches interleaved, every
+# completion verified against a from-scratch run on its graph version.
+# Bench schema: BENCH_*.json records must stay well-formed (pass flags are
+# bools, numbers finite — scripts/bench_schema.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,5 +20,12 @@ python -m pytest -x -q
 
 echo "== serving smoke =="
 python -m repro.launch.serve_graph --requests 8 --slots 4
+
+echo "== streaming smoke =="
+python -m repro.launch.stream_graph --requests 9 --slots 3 --scale 8 \
+    --update-every 4 --verify
+
+echo "== bench schema =="
+python scripts/bench_schema.py
 
 echo "== check OK =="

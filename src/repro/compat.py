@@ -59,6 +59,14 @@ def make_mesh(axis_shapes, axis_names, *, devices=None, axis_types=None):
     return jax.make_mesh(axis_shapes, axis_names, devices=devices)
 
 
+#: whether this jax carries varying-manual-axes (VMA) types through autodiff.
+#: With VMA, shard_map inserts the cross-rank psums for cotangents of
+#: replicated values automatically; without it (old shard_map, replication
+#: checker off) those psums must be placed by hand — see
+#: `distributed/pipeline_tp.py` for the manual-TP instance.
+HAS_VMA = hasattr(jax.lax, "pvary")
+
+
 def pvary(x, axis_name):
     """`jax.lax.pvary` when available; identity on pre-VMA jax (where carries
     have no varying-manual-axes type to weaken, so the hint is unnecessary)."""
@@ -80,4 +88,4 @@ def cost_analysis(compiled) -> dict:
     return cost or {}
 
 
-__all__ = ["shard_map", "AxisType", "make_mesh", "cost_analysis"]
+__all__ = ["shard_map", "AxisType", "make_mesh", "cost_analysis", "HAS_VMA"]

@@ -56,6 +56,21 @@ class EngineConfig:
     #: static buffers dedupe keeps count == #vertices and avoids spurious
     #: overflow. False reproduces the paper's redundant-list behaviour.
     dedupe_online: bool = True
+    #: frontier-aware masked pull (batched serving engine only): recompute an
+    #: ELL row's partial only when one of its gathered senders is in some live
+    #: lane's frontier, serving every other row from a loop-carried partial
+    #: cache. Rows-to-recompute are stream-compacted into a bounded buffer of
+    #: `ceil(rows * masked_pull_frac)` per slice; overflow falls back to the
+    #: dense pull for that slice (the same static-buffer + overflow-bit
+    #: resource accounting as the push edge budget, DESIGN.md §2/§8). Exact
+    #: for min/max programs; for tol-thresholded programs (PPR) sub-tolerance
+    #: drift outside the frontier is frozen, matching push-mode semantics.
+    masked_pull: bool = False
+    #: active-row buffer size per ELL slice, as a fraction of the slice's
+    #: rows. Power-law graphs keep hub senders active deep into a run, so a
+    #: generous budget (matching the measured hot-row tail) beats a tight one
+    #: that overflows to dense every iteration.
+    masked_pull_frac: float = 0.65
 
 
 class EngineState(NamedTuple):

@@ -35,6 +35,25 @@ import jax
 import jax.numpy as jnp
 
 
+def mask_from_ids(ids: jnp.ndarray, n_nodes: int, q: int = 0) -> jnp.ndarray:
+    """Dense frontier mask from a vertex-id list (sentinel/out-of-range ids are
+    dropped; the scratch row stays False).
+
+    With `q == 0` returns an (n+1,) bool mask; with `q > 0` returns the
+    vertex-major (n+1, q) mask with the SAME seed set in every query lane —
+    the shape the batched serving engine carries.  Used by the streaming
+    subsystem to seed incremental recomputation from the endpoints of an
+    update batch (DESIGN.md §8).
+    """
+    ids = jnp.asarray(ids, jnp.int32)
+    base = jnp.zeros((n_nodes + 1,), bool)
+    base = base.at[ids].set(True, mode="drop")
+    base = base.at[-1].set(False)
+    if q == 0:
+        return base
+    return jnp.broadcast_to(base[:, None], (n_nodes + 1, q))
+
+
 def compact_mask(mask: jnp.ndarray, cap: int, fill: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Stream-compact indices of True lanes of `mask` (any length) into a
     (cap,) buffer. Returns (ids, count, overflow). Sorted & unique when `mask`

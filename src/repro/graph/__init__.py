@@ -1,17 +1,38 @@
-"""Graph substrate: CSR structure, generators, ELL packing, partitioning, sampling."""
+"""Graph substrate: CSR structure, generators, ELL packing, partitioning,
+sampling, and the streaming delta-overlay building blocks (DESIGN.md §8)."""
 
-from repro.graph.csr import CSR, Graph, from_edges, to_undirected
-from repro.graph.packing import EllSlice, EllPack, pack_ell, DEFAULT_BUCKETS
+from repro.graph.csr import (
+    CSR,
+    EdgeDelta,
+    Graph,
+    delta_from_edges,
+    empty_delta,
+    from_edges,
+    to_undirected,
+)
+from repro.graph.packing import (
+    DEFAULT_BUCKETS,
+    EllPack,
+    EllSlice,
+    delta_ell_slice,
+    pack_ell,
+    pack_ell_with_positions,
+)
 from repro.graph import generators, partition, sampler
 
 __all__ = [
     "CSR",
+    "EdgeDelta",
     "Graph",
+    "delta_from_edges",
+    "empty_delta",
     "from_edges",
     "to_undirected",
     "EllSlice",
     "EllPack",
+    "delta_ell_slice",
     "pack_ell",
+    "pack_ell_with_positions",
     "DEFAULT_BUCKETS",
     "generators",
     "partition",

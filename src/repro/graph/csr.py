@@ -86,6 +86,60 @@ class Graph:
         return cls(*children)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """Static-capacity COO overlay of inserted edges (push direction).
+
+    The streaming subsystem (repro.streaming, DESIGN.md §8) keeps edge
+    insertions out-of-line in this buffer instead of rebuilding the CSR:
+    unused lanes are padded with the scratch sentinel `n` (src == dst == n,
+    w == 0) so engines can append all `cap` lanes to their edge buffers
+    unconditionally — fill level changes never change shapes or recompile.
+    """
+
+    src: jnp.ndarray  # (cap,) int32; sentinel n when unused
+    dst: jnp.ndarray  # (cap,) int32; sentinel n when unused
+    w: jnp.ndarray    # (cap,) float32; 0 when unused
+
+    @property
+    def cap(self) -> int:
+        return self.src.shape[0]
+
+    def tree_flatten(self):
+        return (self.src, self.dst, self.w), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def empty_delta(n_nodes: int, cap: int) -> EdgeDelta:
+    """All-sentinel delta (no insertions yet)."""
+    return EdgeDelta(
+        src=jnp.full((cap,), n_nodes, jnp.int32),
+        dst=jnp.full((cap,), n_nodes, jnp.int32),
+        w=jnp.zeros((cap,), jnp.float32),
+    )
+
+
+def delta_from_edges(
+    src: np.ndarray, dst: np.ndarray, w: np.ndarray, n_nodes: int, cap: int
+) -> EdgeDelta:
+    """Pack host insertion arrays into a sentinel-padded :class:`EdgeDelta`."""
+    k = int(np.asarray(src).shape[0])
+    assert k <= cap, f"{k} inserted edges exceed delta capacity {cap}"
+    s = np.full((cap,), n_nodes, dtype=np.int32)
+    d = np.full((cap,), n_nodes, dtype=np.int32)
+    ww = np.zeros((cap,), dtype=np.float32)
+    if k:
+        s[:k] = np.asarray(src, np.int32)
+        d[:k] = np.asarray(dst, np.int32)
+        ww[:k] = np.asarray(w, np.float32)
+    return EdgeDelta(jnp.asarray(s), jnp.asarray(d), jnp.asarray(ww))
+
+
 # ---------------------------------------------------------------------------
 # host-side construction
 # ---------------------------------------------------------------------------

@@ -102,11 +102,30 @@ def pack_ell(
     of `split` slots each.  Row counts are padded up to `min_rows` (TPU sublane
     multiple) with all-sentinel rows mapped to the n_nodes scratch slot.
     """
+    return pack_ell_with_positions(csr, buckets, split, min_rows)[0]
+
+
+def pack_ell_with_positions(
+    csr: CSR,
+    buckets: Sequence[int] = DEFAULT_BUCKETS,
+    split: int = DEFAULT_SPLIT,
+    min_rows: int = 8,
+) -> tuple[EllPack, np.ndarray]:
+    """`pack_ell` plus the CSR-edge -> ELL-slot map.
+
+    Returns (pack, pos) where `pos` is an (m, 3) int64 host array: CSR edge
+    position e landed in `pack.slices[pos[e, 0]].nbr[pos[e, 1], pos[e, 2]]`.
+    The streaming delta overlay (repro.streaming, DESIGN.md §8) uses this to
+    neutralize deleted edges in the packed representation with one device
+    scatter instead of a full host repack.
+    """
     rp = np.asarray(csr.row_ptr)
     ci = np.asarray(csr.col_idx)
     w = np.asarray(csr.weights)
     n = rp.shape[0] - 1
+    m = ci.shape[0]
     deg = rp[1:] - rp[:-1]
+    pos = np.full((m, 3), -1, dtype=np.int64)
 
     bounds = list(buckets)
     slices: list[EllSlice] = []
@@ -114,7 +133,9 @@ def pack_ell(
     lo = 0
     for hi in bounds:
         sel = np.nonzero((deg > lo) & (deg <= hi))[0]
-        slices.append(_pack_bucket(sel, rp, ci, w, n, width=hi, min_rows=min_rows))
+        slices.append(_pack_bucket(
+            sel, rp, ci, w, n, width=hi, min_rows=min_rows,
+            pos=pos, slice_idx=len(slices)))
         lo = hi
 
     # huge bucket: split into virtual rows of `split` slots
@@ -131,23 +152,26 @@ def pack_ell(
         vstart = np.concatenate(vrows_start)
         vend = np.minimum(vstart + split, rp[vid + 1])
         slices.append(
-            _pack_rows(vid, vstart, vend, ci, w, n, width=split, min_rows=min_rows)
+            _pack_rows(vid, vstart, vend, ci, w, n, width=split,
+                       min_rows=min_rows, pos=pos, slice_idx=len(slices))
         )
     else:
         slices.append(_pack_rows(
             np.zeros(0, np.int64), np.zeros(0, np.int64), np.zeros(0, np.int64),
             ci, w, n, width=split, min_rows=min_rows))
 
-    return EllPack(slices=tuple(slices), n_nodes=int(n))
+    return EllPack(slices=tuple(slices), n_nodes=int(n)), pos
 
 
-def _pack_bucket(sel, rp, ci, w, n, width, min_rows) -> EllSlice:
+def _pack_bucket(sel, rp, ci, w, n, width, min_rows, pos=None, slice_idx=0) -> EllSlice:
     start = rp[sel]
     end = rp[sel + 1]
-    return _pack_rows(sel.astype(np.int64), start, end, ci, w, n, width, min_rows)
+    return _pack_rows(sel.astype(np.int64), start, end, ci, w, n, width,
+                      min_rows, pos=pos, slice_idx=slice_idx)
 
 
-def _pack_rows(row_ids, start, end, ci, w, n, width, min_rows) -> EllSlice:
+def _pack_rows(row_ids, start, end, ci, w, n, width, min_rows,
+               pos=None, slice_idx=0) -> EllSlice:
     r = row_ids.shape[0]
     rows = max(min_rows, _round_up(max(r, 1), min_rows))
     nbr = np.full((rows, width), n, dtype=np.int32)
@@ -165,6 +189,36 @@ def _pack_rows(row_ids, start, end, ci, w, n, width, min_rows) -> EllSlice:
         nbr[rr, cc] = ci[flat_src]
         wgt[rr, cc] = w[flat_src]
         rid[:r] = row_ids.astype(np.int32)
+        if pos is not None:
+            pos[flat_src, 0] = slice_idx
+            pos[flat_src, 1] = rr
+            pos[flat_src, 2] = cc
+    return EllSlice(jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(rid))
+
+
+def delta_ell_slice(
+    dst: np.ndarray, src: np.ndarray, w: np.ndarray, n: int, cap: int,
+    min_rows: int = 8,
+) -> EllSlice:
+    """Pack inserted in-edges as one STATIC-shape width-1 ELL slice.
+
+    One (virtual) row per inserted edge: `row_id = dst` (the receiver),
+    `nbr = src`, padded with the scratch sentinel up to `cap` rows — the
+    shape never changes with the fill level, so the pull engines that iterate
+    `pack.slices` absorb a mutating insertion set with zero recompiles.
+    Duplicate receivers are merged by the engine's per-vertex segment combine,
+    exactly like the split virtual rows of the huge bucket.
+    """
+    rows = max(min_rows, _round_up(max(cap, 1), min_rows))
+    k = int(dst.shape[0])
+    assert k <= cap, f"{k} delta edges exceed the delta capacity {cap}"
+    nbr = np.full((rows, 1), n, dtype=np.int32)
+    wgt = np.zeros((rows, 1), dtype=np.float32)
+    rid = np.full(rows, n, dtype=np.int32)
+    if k:
+        nbr[:k, 0] = np.asarray(src, np.int32)
+        wgt[:k, 0] = np.asarray(w, np.float32)
+        rid[:k] = np.asarray(dst, np.int32)
     return EllSlice(jnp.asarray(nbr), jnp.asarray(wgt), jnp.asarray(rid))
 
 

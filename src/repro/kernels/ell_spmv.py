@@ -71,6 +71,24 @@ def _ell_kernel(nbr_ref, wgt_ref, vals_ref, out_ref, *, compute_fn, combine):
     out_ref[...] = _ROWREDUCE[combine](upd)
 
 
+def _ell_kernel_overlay(nbr_ref, wgt_ref, dead_ref, vals_ref, out_ref, *,
+                        compute_fn, combine):
+    """Base ELL + deletion overlay in ONE pass: dead slots collapse to the
+    combine identity at gather time, so a streaming delta (DESIGN.md §8) needs
+    only an (R, W) int8 mask resident next to the slice instead of a
+    neutralized copy of nbr/wgt."""
+    nbr = nbr_ref[...]
+    wgt = wgt_ref[...]
+    dead = dead_ref[...]                    # (TR, W) int8: 1 = deleted slot
+    vals = vals_ref[...]
+    n_sent = vals.shape[0] - 1
+    gathered = jnp.take(vals, jnp.minimum(nbr, n_sent), axis=0)
+    upd = compute_fn(gathered, wgt)
+    ident = _IDENT[combine](vals.dtype)
+    upd = jnp.where((nbr == n_sent) | (dead != 0), ident, upd)
+    out_ref[...] = _ROWREDUCE[combine](upd)
+
+
 @functools.partial(
     jax.jit, static_argnames=("compute_fn", "combine", "tile_rows", "interpret")
 )
@@ -78,21 +96,42 @@ def ell_combine(
     nbr: jnp.ndarray,
     wgt: jnp.ndarray,
     vals: jnp.ndarray,
+    dead: jnp.ndarray | None = None,
     *,
     compute_fn: Callable,
     combine: str = "min",
     tile_rows: int | None = None,
     interpret: bool = True,
 ) -> jnp.ndarray:
-    """partial (R,) for one ELL slice. `vals` must carry the scratch slot."""
+    """partial (R,) for one ELL slice. `vals` must carry the scratch slot.
+
+    `dead` (optional, (R, W) int8/bool) is the streaming deletion overlay:
+    slots flagged dead contribute the combine identity, bit-identical to
+    running the plain kernel on a sentinel-neutralized copy of the slice.
+    """
     r, w = nbr.shape
     tr = tile_rows or tuning.ell_tile_rows(w, vals.shape[0])
     tr = _divisor_tile(r, tr)
     grid = (r // tr,)
+    if dead is None:
+        return pl.pallas_call(
+            functools.partial(_ell_kernel, compute_fn=compute_fn, combine=combine),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tr, w), lambda i: (i, 0)),
+                pl.BlockSpec((tr, w), lambda i: (i, 0)),
+                pl.BlockSpec((vals.shape[0],), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
+            interpret=interpret,
+        )(nbr, wgt, vals)
     return pl.pallas_call(
-        functools.partial(_ell_kernel, compute_fn=compute_fn, combine=combine),
+        functools.partial(
+            _ell_kernel_overlay, compute_fn=compute_fn, combine=combine),
         grid=grid,
         in_specs=[
+            pl.BlockSpec((tr, w), lambda i: (i, 0)),
             pl.BlockSpec((tr, w), lambda i: (i, 0)),
             pl.BlockSpec((tr, w), lambda i: (i, 0)),
             pl.BlockSpec((vals.shape[0],), lambda i: (0,)),
@@ -100,7 +139,7 @@ def ell_combine(
         out_specs=pl.BlockSpec((tr,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
         interpret=interpret,
-    )(nbr, wgt, vals)
+    )(nbr, wgt, dead.astype(jnp.int8), vals)
 
 
 # ---------------------------------------------------------------------------

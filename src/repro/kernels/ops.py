@@ -30,11 +30,16 @@ def default_interpret() -> bool:
 # -- ELL combine / SpMM ------------------------------------------------------
 
 
-def ell_combine(nbr, wgt, vals, compute_fn, combine="min", use_xla=False):
+def ell_combine(nbr, wgt, vals, compute_fn, combine="min", use_xla=False,
+                dead=None):
     if use_xla:
+        if dead is not None:  # fold the deletion overlay before the ref path
+            import jax.numpy as jnp
+
+            nbr = jnp.where(dead != 0, vals.shape[0] - 1, nbr)
         return _ref.ell_combine_ref(nbr, wgt, vals, compute_fn, combine)
     return _ell.ell_combine(
-        nbr, wgt, vals, compute_fn=compute_fn, combine=combine,
+        nbr, wgt, vals, dead, compute_fn=compute_fn, combine=combine,
         interpret=default_interpret(),
     )
 

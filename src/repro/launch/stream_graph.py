@@ -1,0 +1,145 @@
+"""Streaming graph serving driver: replay an update trace against queries.
+
+The dynamic-graph extension of `launch/serve_graph.py` (DESIGN.md §8): an
+irregular stream of point queries is served by the batched engine while the
+graph itself mutates underneath — every `--update-every` submitted queries,
+a batch of random edge insertions/deletions is applied through
+`GraphServer.apply_updates`, which swaps the delta overlay into the pools,
+selectively invalidates the result cache (clean sources keep their entries,
+dirty monotone entries are refreshed incrementally), and restarts dirtied
+in-flight queries.
+
+  PYTHONPATH=src python -m repro.launch.stream_graph --requests 24 --slots 4
+
+With `--verify`, every completion is checked against a from-scratch run on
+the graph version it was served under (slow; testing only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.serving import GraphServer, default_config, query_result, run_batch
+from repro.launch.serve_graph import build_graph
+
+
+def random_update_batch(rng, sg, n_ins, n_del):
+    """Inserts are uniform random pairs; deletes sample LIVE base edges."""
+    n = sg.n
+    ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)),
+            float(rng.integers(1, 65))) for _ in range(n_ins)]
+    live = np.nonzero(~sg._dead_out)[0]
+    dels = []
+    if live.size and n_del:
+        for e in rng.choice(live, size=min(n_del, live.size), replace=False):
+            dels.append((int(sg._base_src_host()[e]), int(sg._out_ci[e])))
+    return ins, dels
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--graph", default="rmat", choices=("rmat", "uniform", "road"))
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--algos", default="bfs,sssp,ppr")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--update-every", type=int, default=8,
+                    help="apply an update batch every N submitted queries")
+    ap.add_argument("--inserts", type=int, default=4, help="insertions per batch")
+    ap.add_argument("--deletes", type=int, default=2, help="deletions per batch")
+    ap.add_argument("--delta-cap", type=int, default=256)
+    ap.add_argument("--cache-cap", type=int, default=256)
+    ap.add_argument("--hot-frac", type=float, default=0.25)
+    ap.add_argument("--refresh", default="incremental",
+                    choices=("incremental", "drop"))
+    ap.add_argument("--verify", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
+    n = g.n_nodes
+    print(f"[stream_graph] {args.graph} scale={args.scale}: "
+          f"{n} nodes, {g.n_edges} directed edges, delta_cap={args.delta_cap}")
+
+    factories = {"bfs": alg.bfs, "sssp": alg.sssp, "ppr": alg.ppr}
+    algos = [a.strip() for a in args.algos.split(",") if a.strip()]
+    unknown = [a for a in algos if a not in factories]
+    if unknown or not algos:
+        ap.error(f"--algos must name algorithms from {sorted(factories)}; "
+                 f"got {unknown or args.algos!r}")
+    programs = {a: factories[a](0) for a in algos}
+
+    srv = GraphServer(
+        g, None, programs, slots=args.slots, cfg=default_config(g),
+        cache_capacity=args.cache_cap, delta_cap=args.delta_cap,
+        result_fields={"ppr": "rank"},
+    )
+    # version -> overlay views, for --verify of historical completions.
+    # Only kept under --verify: each version pins full-size device arrays,
+    # so an unbounded replay must not retain them.
+    snapshots = {0: (srv.sg.graph, srv.sg.pack, srv.sg.delta)} \
+        if args.verify else None
+
+    rng = np.random.default_rng(args.seed)
+    hot = rng.integers(0, n, size=max(1, args.requests // 8))
+    t0 = time.time()
+    for i in range(args.requests):
+        algo = algos[i % len(algos)]
+        src = int(rng.choice(hot)) if rng.random() < args.hot_frac \
+            else int(rng.integers(0, n))
+        rid = srv.submit(algo, src)
+        while rid is None:
+            srv.pump()
+            rid = srv.submit(algo, src)
+        srv.pump()                       # keep lanes busy while submitting
+        if (i + 1) % args.update_every == 0:
+            ins, dels = random_update_batch(
+                rng, srv.sg, args.inserts, args.deletes)
+            st = srv.apply_updates(ins, dels, refresh=args.refresh)
+            if snapshots is not None:
+                snapshots[st["version"]] = (
+                    srv.sg.graph, srv.sg.pack, srv.sg.delta)
+            print(f"[stream_graph] update v{st['version']}: "
+                  f"+{st['inserted']}/-{st['deleted']} edges, "
+                  f"cache retained {st['cache_retained']} "
+                  f"refreshed {st['cache_refreshed']} "
+                  f"dropped {st['cache_dropped']}, "
+                  f"re-enqueued {st['reenqueued_inflight']}, "
+                  f"rebuild={st['rebuild']}")
+    comps = srv.drain()
+    dt = time.time() - t0
+
+    stats = srv.stats()
+    print(f"[stream_graph] {len(comps)} completions in {dt:.2f}s "
+          f"({len(comps) / dt:.1f} q/s) across "
+          f"{stats['updates']} update batches "
+          f"(graph now v{stats['graph_version']}, "
+          f"{srv.sg.stats()['rebuilds']} rebuilds)")
+    cache = stats["cache"]
+    print(f"[stream_graph] cache: {cache['hits']} hits / {cache['misses']} "
+          f"misses (hit rate {cache['hit_rate']:.0%}), size {cache['size']}")
+
+    if args.verify:
+        fields = {"bfs": "dist", "sssp": "dist", "ppr": "rank"}
+        bad = 0
+        for c in comps:
+            ver = c.graph_version
+            gv, pv, dv = snapshots[ver]
+            ref, _ = run_batch(programs[c.algo], gv, pv,
+                               default_config(g), [c.source], delta=dv)
+            if not np.array_equal(
+                    c.result, np.asarray(query_result(ref, fields[c.algo], 0))):
+                bad += 1
+                print(f"  MISMATCH rid={c.rid} {c.algo}({c.source}) v{ver}")
+        print(f"[stream_graph] verify: {len(comps) - bad}/{len(comps)} exact")
+        return 1 if bad else 0
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

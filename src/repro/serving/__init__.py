@@ -20,6 +20,7 @@ from repro.serving.batch_engine import (  # noqa: F401
     query_result,
     run_batch,
     run_sequential,
+    run_state,
 )
 from repro.serving.cache import ResultCache, make_key  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
@@ -38,6 +39,7 @@ __all__ = [
     "query_result",
     "run_batch",
     "run_sequential",
+    "run_state",
     "ResultCache",
     "make_key",
     "AlgoPool",

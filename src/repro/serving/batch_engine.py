@@ -50,7 +50,8 @@ from __future__ import annotations
 
 import functools
 import inspect
-from typing import NamedTuple
+import math
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -58,7 +59,7 @@ import jax.numpy as jnp
 from repro.core import frontier as F
 from repro.core.acc import ACCProgram
 from repro.core.engine import PULL, PUSH, EngineConfig, expand_frontier
-from repro.graph.csr import CSR, Graph
+from repro.graph.csr import CSR, EdgeDelta, Graph
 from repro.graph.packing import EllPack
 
 
@@ -78,6 +79,12 @@ class BatchState(NamedTuple):
     switches: jnp.ndarray          # (Q,) int32
     mode_trace: jnp.ndarray        # (Q, trace_len) int8
     gmode: jnp.ndarray             # () int32 consensus PUSH/PULL
+    #: masked-pull partial cache (cfg.masked_pull only): one (R_s, Q) array
+    #: per ELL slice holding the slice's last computed row partials.
+    pseg: tuple = ()
+    #: () bool — next pull must run dense (init / admission / after a push
+    #: invalidated the partial cache). None when masked pull is off.
+    pull_dense: Optional[jnp.ndarray] = None
 
 
 def _ident(program: ACCProgram, m: dict):
@@ -119,15 +126,27 @@ def _union_volume(csr: CSR, cfg: EngineConfig, mask: jnp.ndarray):
 # ---------------------------------------------------------------------------
 
 
-def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState) -> BatchState:
+def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState,
+               delta: Optional[EdgeDelta] = None) -> BatchState:
     """Union-frontier push: ONE compaction + ONE balanced edge expansion for
     the whole batch (shared src/dst/w streams), per-query masking on the
-    (E, Q) update matrix, one leading-axis segment combine."""
+    (E, Q) update matrix, one leading-axis segment combine.
+
+    With a streaming `delta` (DESIGN.md §8), the inserted-edge COO lanes are
+    appended to the expanded edge buffer unconditionally — base CSR + delta
+    overlay feed ONE segment combine, and sentinel padding keeps unused lanes
+    inert — so the push path sees the overlaid graph without a CSR rebuild.
+    """
     n = csr.n_nodes
     comb = program.combiner
     union = jnp.any(st.active, axis=-1)
     uids, ucount, _uovf = F.compact_mask(union[:n], cfg.frontier_cap, fill=n)
     src, dst, w, valid_e, _total = expand_frontier(csr, uids, ucount, cfg.edge_cap)
+    if delta is not None:
+        src = jnp.concatenate([src, delta.src])
+        dst = jnp.concatenate([dst, delta.dst])
+        w = jnp.concatenate([w, delta.w])
+        valid_e = jnp.concatenate([valid_e, delta.src < n])
 
     sender = {k: v[src] for k, v in st.m.items()}        # (E, Q) row gathers
     receiver = {k: v[dst] for k, v in st.m.items()}
@@ -139,7 +158,54 @@ def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState)
     seg = comb.segment(upd, dst, n + 1)                  # (n+1, Q)
 
     new = _apply_and_refilter(program, cfg, csr, st, seg)
-    return _advance(st, *new, was_mode=PUSH)
+    return _advance(st, *new, was_mode=PUSH, cfg=cfg)
+
+
+def _slice_partial_dense(program, comb, m, s, n, ident):
+    """One ELL slice's (R, Q) row partials, every row recomputed."""
+    sender = {k: v[s.nbr] for k, v in m.items()}                 # (R, W, Q)
+    recv = {k: v[s.row_id][:, None, :] for k, v in m.items()}
+    upd = program.compute(sender, s.wgt[..., None], recv)
+    upd = jnp.where(s.nbr[..., None] == n, ident, upd)
+    return comb.reduce_axis_tree(upd, axis=1)                    # (R, Q)
+
+
+def _slice_partial_masked(program, comb, m, s, n, ident, hot_v, prev,
+                          force_dense, cfg):
+    """Frontier-aware masked pull for one slice (cfg.masked_pull).
+
+    A row's partial can only change if one of its gathered senders changed
+    last iteration (`hot_v`, the union frontier mask) — everything else is
+    served from the loop-carried cache `prev`. Hot rows are stream-compacted
+    into a bounded `capR` row buffer (the pull analogue of the push edge
+    budget); overflow or an invalidated cache falls back to the dense pull
+    for this slice. Exact for min/max programs, whose `active` masks capture
+    every value change; for tol-thresholded programs sub-tolerance drift
+    outside the frontier stays frozen (push-mode semantics).
+    """
+    r, w = s.nbr.shape
+    capR = min(r, max(8, int(math.ceil(r * cfg.masked_pull_frac))))
+    hot = jnp.any(hot_v[s.nbr], axis=1)                          # (R,)
+    ids, cnt, ovf = F.compact_mask(hot, capR, fill=r)
+
+    def dense(_prev):
+        return _slice_partial_dense(program, comb, m, s, n, ident)
+
+    def sparse(prev):
+        safe = jnp.minimum(ids, r - 1)
+        nbr_sel = s.nbr[safe]                                    # (capR, W)
+        rid_sel = s.row_id[safe]
+        sender = {k: v[nbr_sel] for k, v in m.items()}           # (capR, W, Q)
+        recv = {k: v[rid_sel][:, None, :] for k, v in m.items()}
+        upd = program.compute(sender, s.wgt[safe][..., None], recv)
+        upd = jnp.where(nbr_sel[..., None] == n, ident, upd)
+        p_sel = comb.reduce_axis_tree(upd, axis=1)               # (capR, Q)
+        # invalid lanes land on a dummy row; `ids` are unique by construction
+        tgt = jnp.where(jnp.arange(capR, dtype=jnp.int32) < cnt, ids, r)
+        buf = jnp.concatenate([prev, jnp.zeros((1, prev.shape[1]), prev.dtype)])
+        return buf.at[tgt].set(p_sel)[:r]
+
+    return jax.lax.cond(ovf | force_dense, dense, sparse, prev)
 
 
 def _pull_step(
@@ -147,25 +213,33 @@ def _pull_step(
 ) -> BatchState:
     """Full-graph pull over the degree-bucketed ELL slices, all queries at
     once: each slice's neighbor gather is (R, W, Q) with a contiguous query
-    inner dim, reduced along the width then segment-combined per vertex."""
+    inner dim, reduced along the width then segment-combined per vertex.
+    A streaming delta rides along as one more (static-shape) slice appended
+    to the pack, so insertions need no special casing here."""
     n = pack.n_nodes
     comb = program.combiner
     q = st.it.shape[0]
     ident = _ident(program, st.m)
     seg = jnp.full((n + 1, q), ident)
-    for s in pack.slices:
-        sender = {k: v[s.nbr] for k, v in st.m.items()}          # (R, W, Q)
-        recv = {k: v[s.row_id][:, None, :] for k, v in st.m.items()}
-        upd = program.compute(sender, s.wgt[..., None], recv)
-        upd = jnp.where(s.nbr[..., None] == n, ident, upd)
-        partial = comb.reduce_axis_tree(upd, axis=1)             # (R, Q)
+    hot_v = jnp.any(st.active, axis=-1) if cfg.masked_pull else None
+    pseg_new = []
+    for si, s in enumerate(pack.slices):
+        if cfg.masked_pull:
+            partial = _slice_partial_masked(
+                program, comb, st.m, s, n, ident, hot_v, st.pseg[si],
+                st.pull_dense, cfg)
+            pseg_new.append(partial)
+        else:
+            partial = _slice_partial_dense(program, comb, st.m, s, n, ident)
         seg = comb.pair(seg, comb.segment(partial, s.row_id, n + 1))
 
     new = _apply_and_refilter(program, cfg, csr_for_deg, st, seg)
-    return _advance(st, *new, was_mode=PULL)
+    return _advance(st, *new, was_mode=PULL, cfg=cfg,
+                    pseg=tuple(pseg_new) if cfg.masked_pull else None)
 
 
-def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode) -> BatchState:
+def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode, cfg=None,
+             pseg=None) -> BatchState:
     live = ~st.done
     it = st.it + jnp.where(live, 1, 0)
     q = it.shape[0]
@@ -174,6 +248,10 @@ def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode) -> BatchState:
     tr = st.mode_trace.at[jnp.arange(q), tr_col].set(tr_val)
     keep = st.done[None, :]
     m_merged = {k: jnp.where(keep, st.m[k], m_new[k]) for k in st.m}
+    # a pull leaves fresh partial caches; a push invalidates them
+    pull_dense = st.pull_dense
+    if cfg is not None and cfg.masked_pull:
+        pull_dense = jnp.asarray(was_mode == PUSH)
     return st._replace(
         m=m_merged,
         active=nxt,
@@ -184,6 +262,8 @@ def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode) -> BatchState:
         push_iters=st.push_iters + jnp.where(live & (was_mode == PUSH), 1, 0),
         pull_iters=st.pull_iters + jnp.where(live & (was_mode == PULL), 1, 0),
         mode_trace=tr,
+        pseg=st.pseg if pseg is None else pseg,
+        pull_dense=pull_dense,
     )
 
 
@@ -221,20 +301,23 @@ def _policy(program: ACCProgram, cfg: EngineConfig, n_edges: int, st: BatchState
     )
 
 
-def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack, cfg: EngineConfig):
+def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack,
+                      cfg: EngineConfig, delta: Optional[EdgeDelta] = None):
     """Per-iteration batched step (BatchState -> BatchState) — used by
-    `run_batch`'s fused loop and by the scheduler's host-stepped loop."""
+    `run_batch`'s fused loop and by the scheduler's host-stepped loop.
+    `delta` is the streaming insertion overlay for the push path; the pull
+    path reads insertions from the delta slice appended to `pack`."""
 
     def step(st: BatchState) -> BatchState:
         if program.modes == "push":
-            new = _push_step(program, g.out, cfg, st)
+            new = _push_step(program, g.out, cfg, st, delta)
         elif program.modes == "pull":
             new = _pull_step(program, pack, cfg, st, g.out)
         else:
             new = jax.lax.cond(
                 st.gmode == PULL,
                 lambda s: _pull_step(program, pack, cfg, s, g.out),
-                lambda s: _push_step(program, g.out, cfg, s),
+                lambda s: _push_step(program, g.out, cfg, s, delta),
                 st,
             )
         return _policy(program, cfg, g.n_edges, new)
@@ -248,11 +331,12 @@ def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack, cfg: EngineC
 
 
 def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
-               sources, done=None) -> BatchState:
+               sources, done=None, pack: Optional[EllPack] = None) -> BatchState:
     """Stack Q fresh query states (one per source), vertex-major.
 
     `done` marks lanes to create as empty/inactive (the scheduler starts
-    pools fully inactive and admits into lanes later).
+    pools fully inactive and admits into lanes later). `pack` is required
+    when `cfg.masked_pull` is set (the partial caches are sized per slice).
     """
     sources = jnp.asarray(sources, jnp.int32)
     q = sources.shape[0]
@@ -285,6 +369,13 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     mask = mask & ~done[None, :]
     count = jnp.sum(mask, axis=0).astype(jnp.int32)
     union_fe, overflow = _union_volume(g.out, cfg, mask)
+    if cfg.masked_pull and pack is not None:
+        dt = m[program.primary].dtype
+        ident = program.combiner.identity(dt)
+        pseg = tuple(jnp.full((s.nbr.shape[0], q), ident) for s in pack.slices)
+        pull_dense = jnp.asarray(True)
+    else:
+        pseg, pull_dense = (), None
     st = BatchState(
         m=m, active=mask, count=count, union_fe=union_fe, overflow=overflow,
         mode=jnp.full((q,), PUSH, jnp.int32),
@@ -295,6 +386,8 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
         switches=jnp.zeros((q,), jnp.int32),
         mode_trace=jnp.full((q, cfg.trace_len), -1, jnp.int8),
         gmode=jnp.asarray(PUSH, jnp.int32),
+        pseg=pseg,
+        pull_dense=pull_dense,
     )
     return st._replace(gmode=_consensus_mode(program, cfg, g.n_edges, st),
                        mode=jnp.where(st.done, st.mode,
@@ -302,28 +395,28 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3))
-def _run_fused(program, g, pack, cfg, st0):
-    step = make_batched_step(program, g, pack, cfg)
+def _run_fused(program, g, pack, cfg, st0, delta=None):
+    step = make_batched_step(program, g, pack, cfg, delta)
     return jax.lax.while_loop(lambda s: jnp.any(~s.done), step, st0)
 
 
-def run_batch(
+def run_state(
     program: ACCProgram,
     g: Graph,
     pack: EllPack,
     cfg: EngineConfig,
-    sources,
+    st0: BatchState,
+    delta: Optional[EdgeDelta] = None,
     fusion: str = "all",
 ):
-    """Run Q point queries of `program` (one per entry of `sources`) to
-    convergence as one batch. Returns (metadata dict, field -> (n+1, Q),
-    stats). `cfg.pull_impl`/`cfg.sparse_combine` are single-query fast paths
-    and are ignored here."""
-    st0 = init_batch(program, g, cfg, sources)
+    """Advance an existing :class:`BatchState` to convergence. The streaming
+    subsystem enters here with a state seeded from a previous fixpoint
+    (incremental recomputation, DESIGN.md §8); `run_batch` enters with a
+    fresh state. Returns (metadata dict, stats)."""
     if fusion == "all":
-        final = _run_fused(program, g, pack, cfg, st0)
+        final = _run_fused(program, g, pack, cfg, st0, delta)
     elif fusion == "none":
-        step = jax.jit(make_batched_step(program, g, pack, cfg))
+        step = jax.jit(make_batched_step(program, g, pack, cfg, delta))
         final = st0
         while bool(jnp.any(~final.done)):
             final = step(final)
@@ -338,6 +431,23 @@ def run_batch(
         "final_count": final.count,
     }
     return final.m, stats
+
+
+def run_batch(
+    program: ACCProgram,
+    g: Graph,
+    pack: EllPack,
+    cfg: EngineConfig,
+    sources,
+    fusion: str = "all",
+    delta: Optional[EdgeDelta] = None,
+):
+    """Run Q point queries of `program` (one per entry of `sources`) to
+    convergence as one batch. Returns (metadata dict, field -> (n+1, Q),
+    stats). `cfg.pull_impl`/`cfg.sparse_combine` are single-query fast paths
+    and are ignored here."""
+    st0 = init_batch(program, g, cfg, sources, pack=pack)
+    return run_state(program, g, pack, cfg, st0, delta=delta, fusion=fusion)
 
 
 def query_result(m: dict, field: str, lane: int) -> jnp.ndarray:

@@ -67,6 +67,19 @@ class ResultCache:
     def invalidate(self, key: Hashable) -> bool:
         return self._entries.pop(key, None) is not None
 
+    def take_version(self, graph_version: int) -> list:
+        """Remove and return every entry keyed to `graph_version`, in recency
+        order (stalest first), as (key, value) pairs.
+
+        This is the mechanism under SELECTIVE invalidation on a streaming
+        graph update (DESIGN.md §8): the caller re-`put`s the entries whose
+        source survives the affected-region test under the new version
+        (preserving relative recency), refreshes or drops the rest — instead
+        of the wholesale version-bump invalidation."""
+        keys = [k for k in self._entries
+                if isinstance(k, tuple) and k and k[0] == graph_version]
+        return [(k, self._entries.pop(k)) for k in keys]
+
     def clear(self) -> None:
         self._entries.clear()
 

@@ -25,6 +25,20 @@ push/pull decisions influenced by its batch-mates, so its mode *sequence*
 can differ from a solo run; results are still bit-identical for the
 idempotent/min programs and pull-only programs served here (see
 batch_engine's module docstring for the argument).
+
+Admission fairness: requests queue PER ALGORITHM and each queue owns a
+weighted share of the total queue budget (weighted fair queuing at the
+admission edge) — a hot algorithm can exhaust its own share and its own
+lanes, never another algorithm's (ROADMAP "query admission fairness").
+Lanes are per-pool too, so no cross-algorithm arbitration is needed past
+the queue shares.
+
+Streaming graphs: constructed with `delta_cap > 0` the server owns a
+`repro.streaming.StreamingGraph`; `apply_updates` absorbs an edge-update
+batch, swaps the overlaid views into every pool (traced args — no
+recompile), selectively invalidates the LRU by the reverse-reachability
+test (optionally refreshing dirty monotone entries incrementally), and
+restarts dirtied in-flight lanes on the new graph (DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -39,7 +53,7 @@ import numpy as np
 
 from repro.core.acc import ACCProgram
 from repro.core.engine import EngineConfig
-from repro.graph.csr import Graph
+from repro.graph.csr import EdgeDelta, Graph
 from repro.graph.packing import EllPack
 from repro.serving import batch_engine as B
 from repro.serving.cache import ResultCache, make_key
@@ -64,6 +78,10 @@ class Completion:
     result: np.ndarray          # (n,) primary metadata field
     iterations: int
     from_cache: bool
+    #: graph version the result is valid for (the version at completion —
+    #: a query queued across an update executes on the newer graph; a clean
+    #: lane spanning an update is bitwise valid for both end versions).
+    graph_version: int = 0
 
 
 def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
@@ -81,13 +99,15 @@ class AlgoPool:
     """Fixed query slots for one ACC program over one graph."""
 
     def __init__(self, name: str, program: ACCProgram, g: Graph, pack: EllPack,
-                 cfg: EngineConfig, slots: int, result_field: Optional[str] = None):
+                 cfg: EngineConfig, slots: int, result_field: Optional[str] = None,
+                 delta: Optional[EdgeDelta] = None):
         assert slots >= 1
         self.name = name
         self.program = program
         self.result_field = result_field or program.primary
         self.g = g
         self.pack = pack
+        self.delta = delta
         self.cfg = cfg
         self.slots = slots
         self.lane_rid: List[Optional[int]] = [None] * slots
@@ -96,12 +116,15 @@ class AlgoPool:
             program, g, cfg,
             jnp.zeros((slots,), jnp.int32),
             done=jnp.ones((slots,), bool),
+            pack=pack,
         )
-        # graph/pack are TRACED pytree args (not closure constants), so the
-        # CSR/ELL arrays are not baked into each pool's executable — pools
-        # over the same graph share the device buffers.
+        # graph/pack/delta are TRACED pytree args (not closure constants), so
+        # the CSR/ELL/overlay arrays are not baked into each pool's
+        # executable — pools over the same graph share the device buffers,
+        # and a streaming update swaps views in without a recompile.
         self._step = jax.jit(
-            lambda st, g_, pack_: B.make_batched_step(program, g_, pack_, cfg)(st)
+            lambda st, g_, pack_, delta_: B.make_batched_step(
+                program, g_, pack_, cfg, delta_)(st)
         )
         self._admit = jax.jit(
             lambda st, source, lane, g_: _admit_lane(program, g_, cfg, st, source, lane)
@@ -128,7 +151,7 @@ class AlgoPool:
 
     def step(self) -> None:
         if self.live():
-            self.state = self._step(self.state, self.g, self.pack)
+            self.state = self._step(self.state, self.g, self.pack, self.delta)
             self.steps += 1
 
     def harvest(self) -> List[tuple]:
@@ -144,6 +167,33 @@ class AlgoPool:
             out.append((lane, rid, res, int(self.state.it[lane])))
             self.lane_rid[lane] = None
         return out
+
+    # -- streaming support ---------------------------------------------------
+
+    def set_graph(self, g: Graph, pack: EllPack,
+                  delta: Optional[EdgeDelta]) -> None:
+        """Swap in updated overlay views; masked-pull partial caches were
+        computed against the old graph, so rebuild them at identity (an
+        overflow rebuild can change slice ROW COUNTS — stale pseg shapes
+        would type-mismatch the next step) and force the next pull dense."""
+        self.g, self.pack, self.delta = g, pack, delta
+        if self.cfg.masked_pull and self.state.pull_dense is not None:
+            ident = self.program.combiner.identity(
+                self.state.m[self.program.primary].dtype)
+            pseg = tuple(jnp.full((s.nbr.shape[0], self.slots), ident)
+                         for s in pack.slices)
+            self.state = self.state._replace(
+                pseg=pseg, pull_dense=jnp.asarray(True))
+
+    def readmit(self, lane: int, source: int) -> None:
+        """Re-initialize a LIVE lane's query from scratch on the current
+        graph (same rid, same lane — used when a streaming update dirties an
+        in-flight query)."""
+        assert self.lane_rid[lane] is not None
+        self.state = self._admit(
+            self.state, jnp.int32(source), jnp.int32(lane), self.g
+        )
+        self.engine_queries += 1
 
 
 def _admit_lane(program, g, cfg, st: B.BatchState, source, lane) -> B.BatchState:
@@ -163,13 +213,16 @@ def _admit_lane(program, g, cfg, st: B.BatchState, source, lane) -> B.BatchState
         switches=st.switches.at[lane].set(0),
         mode_trace=st.mode_trace.at[lane].set(one.mode_trace[0]),
     )
+    if cfg.masked_pull and st.pull_dense is not None:
+        # the new lane has no valid partial cache yet
+        st = st._replace(pull_dense=jnp.asarray(True))
     union_fe, overflow = B._union_volume(g.out, cfg, active)
     st = st._replace(union_fe=union_fe, overflow=overflow)
     return st._replace(gmode=B._consensus_mode(program, cfg, g.n_edges, st))
 
 
 class GraphServer:
-    """Batched multi-query graph serving: cache -> queue -> slot pools."""
+    """Batched multi-query serving: cache -> weighted fair queues -> pools."""
 
     def __init__(
         self,
@@ -182,11 +235,21 @@ class GraphServer:
         cache_capacity: int = 1024,
         graph_version: int = 0,
         result_fields: Optional[Dict[str, str]] = None,
+        weights: Optional[Dict[str, float]] = None,
+        delta_cap: int = 0,
     ):
         cfg = cfg or default_config(g)
+        self.cfg = cfg
+        delta = None
+        self.sg = None
+        if delta_cap > 0:
+            from repro.streaming import StreamingGraph
+
+            self.sg = StreamingGraph(g, delta_cap=delta_cap)
+            self.sg.version = graph_version
+            g, pack, delta = self.sg.graph, self.sg.pack, self.sg.delta
         self.g = g
         self.graph_version = graph_version
-        self.queue: deque = deque()
         self.queue_cap = queue_cap
         self.cache = ResultCache(cache_capacity)
         self.pools: Dict[str, AlgoPool] = {}
@@ -196,17 +259,31 @@ class GraphServer:
             self.pools[name] = AlgoPool(
                 name, prog, g, pack, cfg, s,
                 result_field=result_fields.get(name),
+                delta=delta,
             )
+        # weighted fair queuing at the admission edge: per-algorithm queues,
+        # each owning a weighted share of the total queue budget
+        weights = weights or {}
+        self.weights = {name: float(weights.get(name, 1.0)) for name in programs}
+        total_w = sum(self.weights.values())
+        self.queue_quota = {
+            name: max(1, int(queue_cap * w / total_w))
+            for name, w in self.weights.items()
+        }
+        self.queues: Dict[str, deque] = {name: deque() for name in programs}
         self._next_rid = 0
         self._inflight_sources: Dict[int, int] = {}
         self.completions: List[Completion] = []
         self.rejected = 0
+        self.update_log: List[dict] = []
 
     # -- request side --------------------------------------------------------
 
     def submit(self, algo: str, source: int, strict: bool = False) -> Optional[int]:
-        """Enqueue a query; returns its rid, or None when the queue is full
-        (backpressure — caller sheds or retries; `strict=True` raises)."""
+        """Enqueue a query; returns its rid, or None when the algorithm's
+        queue share is full (backpressure — caller sheds or retries;
+        `strict=True` raises). One algorithm flooding its share leaves every
+        other algorithm's share untouched."""
         if algo not in self.pools:
             raise KeyError(f"no pool for algorithm {algo!r}")
         rid = self._next_rid
@@ -217,79 +294,207 @@ class GraphServer:
             self.completions.append(Completion(
                 rid=rid, algo=algo, source=int(source), result=hit,
                 iterations=0, from_cache=True,
+                graph_version=self.graph_version,
             ))
             return rid
-        if len(self.queue) >= self.queue_cap:
+        if len(self.queues[algo]) >= self.queue_quota[algo]:
             self.rejected += 1
             if strict:
-                raise QueueFull(f"queue at capacity {self.queue_cap}")
+                raise QueueFull(
+                    f"queue for {algo!r} at its share "
+                    f"{self.queue_quota[algo]} of capacity {self.queue_cap}")
             return None
         self._next_rid += 1
-        self.queue.append(Request(rid=rid, algo=algo, source=int(source)))
+        self.queues[algo].append(Request(rid=rid, algo=algo, source=int(source)))
         return rid
 
     # -- serving loop --------------------------------------------------------
 
+    def _queued(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
     def pump(self) -> List[Completion]:
-        """One scheduling round: admit from the queue into free lanes, one
-        batched step per live pool, harvest converged lanes. Returns the
-        completions produced this round."""
-        # admission (FIFO per algorithm; requests for saturated pools wait)
-        free = {name: deque(pool.free_lanes()) for name, pool in self.pools.items()}
-        still_waiting: deque = deque()
-        while self.queue:
-            req = self.queue.popleft()
-            lanes = free[req.algo]
-            if lanes:
-                self.pools[req.algo].admit(lanes.popleft(), req.rid, req.source)
+        """One scheduling round: admit each algorithm's queue into its own
+        free lanes (fairness comes from the weighted queue shares enforced
+        at submit — lanes and queues are per-algorithm, so admission order
+        across pools has no cross-algorithm effect), one batched step per
+        live pool, harvest converged lanes. Returns this round's
+        completions."""
+        for name, pool in self.pools.items():
+            qd = self.queues[name]
+            lanes = deque(pool.free_lanes())
+            while qd and lanes:
+                req = qd.popleft()
+                pool.admit(lanes.popleft(), req.rid, req.source)
                 self._inflight_sources[req.rid] = req.source
-            else:
-                still_waiting.append(req)
-        self.queue = still_waiting
 
         new: List[Completion] = []
         for name, pool in self.pools.items():
             pool.step()
-            for _lane, rid, result, iters in pool.harvest():
-                # rid -> source lookup: completions carry it forward
-                comp = Completion(
-                    rid=rid, algo=name, source=self._source_of(rid, name, result),
-                    result=result, iterations=iters, from_cache=False,
-                )
-                new.append(comp)
-        # cache fill
-        for comp in new:
+            new.extend(self._harvest_pool(name, pool))
+        self.completions.extend(new)
+        return new
+
+    def _harvest_pool(self, name: str, pool: AlgoPool) -> List[Completion]:
+        out = []
+        for _lane, rid, result, iters in pool.harvest():
+            comp = Completion(
+                rid=rid, algo=name, source=self._source_of(rid, name, result),
+                result=result, iterations=iters, from_cache=False,
+                graph_version=self.graph_version,
+            )
             self.cache.put(
                 make_key(self.graph_version, comp.algo, comp.source), comp.result
             )
-        self.completions.extend(new)
-        return new
+            out.append(comp)
+        return out
 
     def _source_of(self, rid: int, algo: str, result) -> int:
         return self._inflight_sources.pop(rid)
 
     def drain(self, max_rounds: int = 100000) -> List[Completion]:
-        """Pump until the queue and every pool are empty; returns ALL
+        """Pump until the queues and every pool are empty; returns ALL
         completions accumulated so far (cache hits included)."""
         rounds = 0
-        while self.queue or any(p.live() for p in self.pools.values()):
+        while self._queued() or any(p.live() for p in self.pools.values()):
             self.pump()
             rounds += 1
             if rounds >= max_rounds:
                 raise RuntimeError("drain did not converge")
         return self.completions
 
+    # -- streaming updates ---------------------------------------------------
+
+    def apply_updates(self, inserts=(), deletes=(), refresh: str = "incremental") -> dict:
+        """Absorb one edge-update batch into the served graph (DESIGN.md §8).
+
+        1. Harvest finished lanes under the OLD version (their results are
+           valid for it and cache-fill there).
+        2. Apply the batch to the StreamingGraph; swap the overlaid views
+           into every pool (traced args — no recompile off the rebuild path).
+        3. Selectively invalidate the LRU: entries whose source cannot reach
+           a touched endpoint are RE-KEYED to the new version; dirty entries
+           of monotone programs are refreshed incrementally from their cached
+           fixpoint when `refresh='incremental'`, else dropped.
+        4. Restart dirtied in-flight lanes from scratch on the new graph
+           (clean in-flight lanes continue — their trajectories cannot see
+           the updated edges).
+
+        Returns a stats dict (also appended to `self.update_log`).
+        """
+        assert self.sg is not None, "GraphServer built without delta_cap"
+        assert refresh in ("incremental", "drop")
+        # (1) don't let finished old-graph results leak into the new version
+        for name, pool in self.pools.items():
+            self.completions.extend(self._harvest_pool(name, pool))
+
+        old_version = self.graph_version
+        report = self.sg.apply(inserts, deletes)
+        self.graph_version = report.version
+        self.g = self.sg.graph
+        for pool in self.pools.values():
+            pool.set_graph(self.sg.graph, self.sg.pack, self.sg.delta)
+
+        # (3) selective cache invalidation / refresh
+        retained = dropped = refreshed = 0
+        dirty_entries: Dict[str, list] = {name: [] for name in self.pools}
+        for key, value in self.cache.take_version(old_version):
+            _v, algo, source, params = key
+            if algo in self.pools and not report.dirty_src[source]:
+                self.cache.put(
+                    make_key(self.graph_version, algo, source, params), value)
+                retained += 1
+            elif algo in self.pools and params == ():
+                dirty_entries[algo].append((source, value))
+            else:
+                dropped += 1
+        if refresh == "incremental":
+            refreshed, dropped2 = self._refresh_cached(dirty_entries)
+            dropped += dropped2
+        else:
+            dropped += sum(len(v) for v in dirty_entries.values())
+
+        # (4) dirtied in-flight queries restart on the new graph
+        re_enqueued_rids = []
+        for name, pool in self.pools.items():
+            for lane, rid in enumerate(pool.lane_rid):
+                if rid is None:
+                    continue
+                source = self._inflight_sources[rid]
+                if report.dirty_src[source]:
+                    pool.readmit(lane, source)
+                    re_enqueued_rids.append(rid)
+
+        stats = {
+            "version": self.graph_version,
+            "inserted": report.n_inserted,
+            "deleted": report.n_deleted,
+            "ignored": report.n_ignored,
+            "rebuild": report.rebuild,
+            "cache_retained": retained,
+            "cache_refreshed": refreshed,
+            "cache_dropped": dropped,
+            "reenqueued_inflight": len(re_enqueued_rids),
+            "reenqueued_rids": re_enqueued_rids,
+        }
+        self.update_log.append(stats)
+        return stats
+
+    def _refresh_cached(self, dirty_entries: Dict[str, list],
+                        chunk: int = 64) -> tuple:
+        """Incrementally recompute dirty cached fixpoints of monotone
+        single-field programs (BFS/SSSP); others are dropped. The cached
+        (n,) primary IS the full metadata for these programs, so the
+        previous fixpoint is reconstructible without re-running anything."""
+        from repro.streaming import incremental_batch, is_monotone
+
+        refreshed = dropped = 0
+        n = self.sg.n
+        for algo, entries in dirty_entries.items():
+            if not entries:
+                continue
+            pool = self.pools[algo]
+            program = pool.program
+            reconstructible = (
+                is_monotone(program)
+                and set(pool.state.m.keys()) == {program.primary}
+                and pool.result_field == program.primary
+            )
+            if not reconstructible:
+                dropped += len(entries)
+                continue
+            ident = np.asarray(program.combiner.identity(jnp.float32))
+            for i in range(0, len(entries), chunk):
+                part = entries[i:i + chunk]
+                sources = np.asarray([s for s, _v in part], np.int64)
+                cols = [np.concatenate([v, ident[None]]) for _s, v in part]
+                prev_m = {program.primary: np.stack(cols, axis=1)}
+                m, _info = incremental_batch(
+                    program, self.sg, self.cfg, sources, prev_m)
+                res = np.asarray(m[program.primary])
+                for j, s in enumerate(sources):
+                    self.cache.put(
+                        make_key(self.graph_version, algo, int(s)),
+                        res[:n, j])
+                refreshed += len(part)
+        return refreshed, dropped
+
     def stats(self) -> dict:
         return {
             "completed": len(self.completions),
-            "queued": len(self.queue),
+            "queued": self._queued(),
             "rejected": self.rejected,
             "cache": self.cache.stats(),
+            "graph_version": self.graph_version,
+            "updates": len(self.update_log),
             "pools": {
                 name: {
                     "slots": p.slots,
                     "engine_queries": p.engine_queries,
                     "steps": p.steps,
+                    "queued": len(self.queues[name]),
+                    "queue_quota": self.queue_quota[name],
+                    "weight": self.weights[name],
                 }
                 for name, p in self.pools.items()
             },

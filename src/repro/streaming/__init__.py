@@ -1,0 +1,32 @@
+"""Streaming graph updates with incremental recomputation (DESIGN.md §8).
+
+The dynamic-graph layer over the serving stack: batches of edge
+insertions/deletions are absorbed into a STATIC-shape delta overlay
+(deletion masks on the base CSR/ELL + a bounded insertion buffer), and
+queries are refreshed incrementally instead of from scratch:
+
+  delta.py       -- StreamingGraph: host-side update log + device overlay
+                    materialization (neutralized CSR/ELL copies, delta ELL
+                    slice, push COO buffer), overflow-triggered rebuild,
+                    affected-region / reverse-reachability sweeps
+  incremental.py -- incremental recomputation: monotone programs converge
+                    from the previous fixpoint seeded at update endpoints;
+                    non-monotone programs re-run only dirty queries
+
+Entry points: `StreamingGraph` + `incremental_batch` for direct use,
+`GraphServer.apply_updates` (repro.serving) for the serving integration,
+`launch/stream_graph.py` for the trace-replay driver.
+"""
+
+from repro.streaming.delta import StreamingGraph, UpdateReport  # noqa: F401
+from repro.streaming.incremental import (  # noqa: F401
+    incremental_batch,
+    is_monotone,
+)
+
+__all__ = [
+    "StreamingGraph",
+    "UpdateReport",
+    "incremental_batch",
+    "is_monotone",
+]

@@ -1,0 +1,386 @@
+"""Host-side dynamic-graph manager: delta overlay over a static base CSR.
+
+SIMD-X's central move — absorb an irregular stream into bounded static
+structure, with an overflow bit routing to a fallback — applied to graph
+MUTATION (DESIGN.md §8):
+
+  * **Deletions** neutralize base-edge slots in place: the CSR copy's
+    `col_idx` becomes the scratch sentinel `n` (weight 0), and the packed ELL
+    slot likewise — every engine gather already treats sentinel slots as the
+    combine identity, so a deleted edge simply stops contributing. Shapes
+    never change; deletions are unbounded.
+  * **Insertions** land in two bounded static buffers: a width-1 delta ELL
+    slice appended to the pull pack (`graph/packing.delta_ell_slice`) and a
+    COO :class:`EdgeDelta` appended to the push edge buffer
+    (`serving/batch_engine._push_step`). Base CSR + delta overlay are read in
+    ONE pass by both directions.
+  * **Overflow** of the insertion budget triggers the host-side analogue of
+    the paper's fallback path: a full CSR rebuild + ELL repack (compaction),
+    clearing the overlay. This is the Eq.-1-style resource accounting of
+    DESIGN.md §2 lifted to graph storage: a compile-time capacity, a data-
+    dependent fill level, and a well-defined (expensive but rare) escape.
+
+The manager also computes the two host sweeps the incremental layer needs:
+the forward affected region of a deletion batch and the reverse-reachable
+"dirty sources" set used for selective cache invalidation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.csr import CSR, EdgeDelta, Graph, delta_from_edges, from_edges
+from repro.graph.packing import (
+    DEFAULT_BUCKETS,
+    DEFAULT_SPLIT,
+    EllPack,
+    EllSlice,
+    delta_ell_slice,
+    pack_ell_with_positions,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateReport:
+    """What one `apply` batch did, plus the sweeps downstream layers consume."""
+
+    version: int                 # graph version AFTER the batch
+    n_inserted: int              # directed insertions absorbed (post-expansion)
+    n_deleted: int               # directed deletions applied
+    n_ignored: int               # duplicate inserts / missing deletes skipped
+    rebuild: bool                # overlay overflowed -> CSR rebuild + repack
+    touched: np.ndarray          # endpoint vertex ids of this batch's edges
+    #: (n,) bool — source s is DIRTY iff s can reach a touched endpoint
+    #: (reverse-reachability over the union of old and new edges): any
+    #: single-source result from a clean source is bitwise unaffected.
+    dirty_src: np.ndarray
+    #: (n,) bool — vertices whose monotone fixpoint values may need repair
+    #: after a DELETION (forward-reachable from deleted-edge heads). Empty
+    #: for insert-only batches.
+    affected_del: np.ndarray
+    #: inserted directed edges' source endpoints (monotone re-seed set)
+    ins_src: np.ndarray
+    #: clean (not in affected_del) vertices with a live edge into the
+    #: affected region — the boundary that re-pushes final values into it.
+    boundary: np.ndarray
+
+    @property
+    def insert_only(self) -> bool:
+        return self.n_deleted == 0
+
+
+def _find_edges(rp: np.ndarray, ci: np.ndarray, u: np.ndarray, v: np.ndarray):
+    """Positions of directed edges (u, v) in a CSR with sorted row segments;
+    -1 where absent. Vectorized binary search per edge."""
+    lo = rp[u]
+    hi = rp[u + 1]
+    pos = np.full(u.shape[0], -1, dtype=np.int64)
+    for i in range(u.shape[0]):          # update batches are small
+        s = np.searchsorted(ci[lo[i]:hi[i]], v[i]) + lo[i]
+        if s < hi[i] and ci[s] == v[i]:
+            pos[i] = s
+    return pos
+
+
+def _csr_expand(rp: np.ndarray, ci: np.ndarray, frontier: np.ndarray):
+    lens = rp[frontier + 1] - rp[frontier]
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=ci.dtype)
+    starts = np.repeat(rp[frontier], lens)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.concatenate([[0], np.cumsum(lens)[:-1]]), lens)
+    return ci[starts + offs]
+
+
+def _reach(rp, ci, xsrc, xdst, n, seeds) -> np.ndarray:
+    """(n,) bool forward-reachable set (seeds included) over CSR + extra COO
+    edges. Conservative union sweep for the invalidation tests."""
+    reach = np.zeros(n, dtype=bool)
+    seeds = np.asarray(seeds, dtype=np.int64)
+    seeds = seeds[(seeds >= 0) & (seeds < n)]
+    if seeds.size == 0:
+        return reach
+    reach[seeds] = True
+    frontier = np.unique(seeds)
+    while frontier.size:
+        nxt = _csr_expand(rp, ci, frontier)
+        if xsrc.size:
+            in_f = np.zeros(n, dtype=bool)
+            in_f[frontier] = True
+            nxt = np.concatenate([nxt, xdst[in_f[xsrc]]])
+        nxt = np.unique(nxt.astype(np.int64))
+        nxt = nxt[~reach[nxt]]
+        reach[nxt] = True
+        frontier = nxt
+    return reach
+
+
+class StreamingGraph:
+    """Mutable graph = immutable base + bounded overlay, host-managed.
+
+    Device-facing views (`graph`, `pack`, `delta`) keep STATIC shapes across
+    update batches, so jitted engines that take them as traced arguments
+    never recompile on an update; only an overflow rebuild (which re-buckets
+    the ELL pack) pays a recompile.
+    """
+
+    def __init__(
+        self,
+        g: Graph,
+        delta_cap: int = 256,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        split: int = DEFAULT_SPLIT,
+        min_rows: int = 8,
+    ):
+        assert delta_cap >= 1
+        self.n = g.n_nodes
+        self.delta_cap = delta_cap
+        self._buckets = tuple(buckets)
+        self._split = split
+        self._min_rows = min_rows
+        #: storage sharing (out/in CSR are the same arrays) — affects how
+        #: deletions locate packed slots; a rebuild separates the storage.
+        self.symmetric = g.inc is g.out
+        #: logical directedness — an undirected edge update always expands to
+        #: both directions, even after a rebuild separated the storage.
+        self.undirected = g.inc is g.out
+        self.version = 0
+        self.rebuilds = 0
+        self.last_report: Optional[UpdateReport] = None
+        self._install_base(g)
+
+    # -- base installation / rebuild ------------------------------------
+
+    def _install_base(self, g: Graph) -> None:
+        self._base = g
+        # pristine host copies (deletions neutralize COPIES, never these)
+        self._out_rp = np.asarray(g.out.row_ptr)
+        self._out_ci = np.asarray(g.out.col_idx)
+        self._out_w = np.asarray(g.out.weights)
+        self._inc_rp = np.asarray(g.inc.row_ptr)
+        self._inc_ci = np.asarray(g.inc.col_idx)
+        self._inc_w = np.asarray(g.inc.weights)
+        self._dead_out = np.zeros(self._out_ci.shape[0], dtype=bool)
+        self._dead_inc = np.zeros(self._inc_ci.shape[0], dtype=bool)
+        # pending insertions, directed view: (src, dst, w) triples
+        self._ins: list[Tuple[int, int, float]] = []
+        base_pack, pos = pack_ell_with_positions(
+            g.inc, self._buckets, self._split, self._min_rows)
+        self._pack_pos = pos                     # inc-edge -> (slice, row, col)
+        self._pack_nbr = [np.asarray(s.nbr).copy() for s in base_pack.slices]
+        self._pack_wgt = [np.asarray(s.wgt).copy() for s in base_pack.slices]
+        self._pack_rid = [np.asarray(s.row_id) for s in base_pack.slices]
+        self._materialize(dirty_slices=set(range(len(base_pack.slices))))
+
+    def _materialize(self, dirty_slices: Iterable[int] = ()) -> None:
+        n = self.n
+        col = np.where(self._dead_out, n, self._out_ci).astype(np.int32)
+        w = np.where(self._dead_out, 0.0, self._out_w).astype(np.float32)
+        out = CSR(self._base.out.row_ptr, jnp.asarray(col), jnp.asarray(w),
+                  self._base.out.src_idx)
+        if self.symmetric:
+            inc = out
+        else:
+            coli = np.where(self._dead_inc, n, self._inc_ci).astype(np.int32)
+            wi = np.where(self._dead_inc, 0.0, self._inc_w).astype(np.float32)
+            inc = CSR(self._base.inc.row_ptr, jnp.asarray(coli),
+                      jnp.asarray(wi), self._base.inc.src_idx)
+        self.graph = Graph(out=out, inc=inc)
+
+        if not hasattr(self, "_slices_dev"):
+            self._slices_dev = [None] * len(self._pack_nbr)
+        for si in dirty_slices:
+            self._slices_dev[si] = EllSlice(
+                jnp.asarray(self._pack_nbr[si]),
+                jnp.asarray(self._pack_wgt[si]),
+                jnp.asarray(self._pack_rid[si]),
+            )
+        ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
+        # pull-side delta slice: receivers are rows (inc direction)
+        dslice = delta_ell_slice(
+            dst=ins[:, 1], src=ins[:, 0], w=ins[:, 2], n=n,
+            cap=self.delta_cap, min_rows=self._min_rows)
+        self.pack = EllPack(
+            slices=tuple(self._slices_dev) + (dslice,), n_nodes=n)
+        self.delta = delta_from_edges(
+            ins[:, 0], ins[:, 1], ins[:, 2], n, self.delta_cap)
+
+    def compact(self) -> None:
+        """Fold the overlay into a fresh base CSR + ELL pack (the overflow
+        escape path; also callable explicitly, e.g. off-peak)."""
+        live = ~self._dead_out
+        src = self._base_src_host()[live]
+        dst = self._out_ci[live]
+        w = self._out_w[live]
+        if self._ins:
+            ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
+            src = np.concatenate([src, ins[:, 0].astype(np.int64)])
+            dst = np.concatenate([dst, ins[:, 1].astype(np.int64)])
+            w = np.concatenate([w, ins[:, 2].astype(np.float32)])
+        g2 = from_edges(src, dst, self.n, w, directed=True, dedupe=False)
+        self.rebuilds += 1
+        self.symmetric = False       # rebuilt graphs carry separate in-CSR
+        self._install_base(g2)
+
+    def _base_src_host(self) -> np.ndarray:
+        return np.asarray(self._base.out.src_idx, dtype=np.int64)
+
+    # -- the update batch ------------------------------------------------
+
+    def apply(self, inserts: Iterable = (), deletes: Iterable = ()) -> UpdateReport:
+        """Absorb one batch of edge updates; returns the :class:`UpdateReport`
+        consumed by incremental recomputation and cache invalidation.
+
+        `inserts`: iterables of (u, v) or (u, v, w); `deletes`: (u, v).
+        On a symmetric base both directions are updated. Inserting a live
+        edge or deleting a missing one is counted in `n_ignored`.
+        """
+        ins_d, del_d, ignored = self._expand_directed(inserts, deletes)
+
+        n_del = 0
+        dirty_slices: set[int] = set()
+        for (u, v) in del_d:
+            if self._delete_one(u, v, dirty_slices):
+                n_del += 1
+            else:
+                ignored += 1
+
+        n_ins = 0
+        for (u, v, w) in ins_d:
+            if self._edge_live(u, v) or any(
+                    (u, v) == (iu, iv) for (iu, iv, _w) in self._ins):
+                ignored += 1
+                continue
+            self._ins.append((u, v, w))
+            n_ins += 1
+
+        touched = np.unique(np.asarray(
+            [e[0] for e in ins_d] + [e[1] for e in ins_d]
+            + [e[0] for e in del_d] + [e[1] for e in del_d],
+            dtype=np.int64))
+        del_heads = np.unique(np.asarray(
+            [v for (_u, v) in del_d], dtype=np.int64))
+        ins_src = np.unique(np.asarray(
+            [u for (u, _v, _w) in ins_d], dtype=np.int64))
+
+        # sweeps run over the UNION graph (deleted edges still present in the
+        # pristine base arrays; insertions as extra COO) — conservative
+        xsrc, xdst = self._ins_coo()
+        dirty_src = _reach(
+            self._inc_rp, self._inc_ci,
+            xdst, xsrc,                 # reverse sweep: flip the extra edges
+            self.n, touched)
+        if del_heads.size:
+            affected = _reach(self._out_rp, self._out_ci, xsrc, xdst,
+                              self.n, del_heads)
+        else:
+            affected = np.zeros(self.n, dtype=bool)
+
+        rebuild = len(self._ins) > self.delta_cap
+        if rebuild:
+            self.compact()
+        else:
+            self._materialize(dirty_slices)
+        self.version += 1
+        boundary = self._boundary_of(affected)
+        self.last_report = UpdateReport(
+            version=self.version, n_inserted=n_ins, n_deleted=n_del,
+            n_ignored=ignored, rebuild=rebuild, touched=touched,
+            dirty_src=dirty_src, affected_del=affected, ins_src=ins_src,
+            boundary=boundary,
+        )
+        return self.last_report
+
+    # -- helpers ---------------------------------------------------------
+
+    def _expand_directed(self, inserts, deletes):
+        ins_d, del_d = [], []
+        ignored = 0
+        for e in inserts:
+            u, v = int(e[0]), int(e[1])
+            w = float(e[2]) if len(e) > 2 else 1.0
+            if u == v or not (0 <= u < self.n and 0 <= v < self.n):
+                ignored += 1
+                continue
+            ins_d.append((u, v, w))
+            if self.undirected:
+                ins_d.append((v, u, w))
+        for e in deletes:
+            u, v = int(e[0]), int(e[1])
+            if u == v or not (0 <= u < self.n and 0 <= v < self.n):
+                ignored += 1
+                continue
+            del_d.append((u, v))
+            if self.undirected:
+                del_d.append((v, u))
+        return ins_d, del_d, ignored
+
+    def _edge_live(self, u: int, v: int) -> bool:
+        pos = _find_edges(self._out_rp, self._out_ci,
+                          np.asarray([u]), np.asarray([v]))[0]
+        return pos >= 0 and not self._dead_out[pos]
+
+    def _delete_one(self, u: int, v: int, dirty_slices: set) -> bool:
+        # a pending insert just gets dropped from the buffer
+        for i, (iu, iv, _w) in enumerate(self._ins):
+            if (iu, iv) == (u, v):
+                self._ins.pop(i)
+                return True
+        pos = _find_edges(self._out_rp, self._out_ci,
+                          np.asarray([u]), np.asarray([v]))[0]
+        if pos < 0 or self._dead_out[pos]:
+            return False
+        self._dead_out[pos] = True
+        # neutralize the packed slot of the matching in-edge (v <- u)
+        ipos = pos if self.symmetric else _find_edges(
+            self._inc_rp, self._inc_ci, np.asarray([v]), np.asarray([u]))[0]
+        if ipos >= 0:
+            self._dead_inc[ipos] = True
+            si, r, c = self._pack_pos[ipos]
+            if si >= 0:
+                self._pack_nbr[si][r, c] = self.n
+                self._pack_wgt[si][r, c] = 0.0
+                dirty_slices.add(int(si))
+        return True
+
+    def _ins_coo(self):
+        if not self._ins:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z
+        ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
+        return ins[:, 0].astype(np.int64), ins[:, 1].astype(np.int64)
+
+    def _boundary_of(self, affected: np.ndarray) -> np.ndarray:
+        """Clean vertices with a LIVE out-edge into the affected region."""
+        if not affected.any():
+            return np.zeros(0, dtype=np.int64)
+        live = ~self._dead_out
+        src = self._base_src_host()[live]
+        dst = self._out_ci[live].astype(np.int64)
+        xsrc, xdst = self._ins_coo()
+        src = np.concatenate([src, xsrc])
+        dst = np.concatenate([dst, xdst])
+        sel = affected[dst] & ~affected[src]
+        return np.unique(src[sel])
+
+    # -- reporting -------------------------------------------------------
+
+    def n_live_edges(self) -> int:
+        return int((~self._dead_out).sum()) + len(self._ins)
+
+    def stats(self) -> dict:
+        return {
+            "version": self.version,
+            "n_nodes": self.n,
+            "base_edges": int(self._out_ci.shape[0]),
+            "deleted": int(self._dead_out.sum()),
+            "inserted": len(self._ins),
+            "delta_cap": self.delta_cap,
+            "delta_fill": len(self._ins) / self.delta_cap,
+            "rebuilds": self.rebuilds,
+        }

@@ -1,0 +1,129 @@
+"""Incremental recomputation over a streaming delta overlay (DESIGN.md §8).
+
+Two regimes, chosen per program:
+
+  * **Monotone** programs (min/max combiner, default apply — BFS, SSSP, WCC):
+    the previous fixpoint is a valid state to resume from. Insertions can
+    only improve values, so the batched engine is re-entered with the OLD
+    metadata and a frontier seeded at just the inserted edges' sources;
+    deletions first reset the (conservatively swept) affected region to its
+    init values and additionally seed the region's clean boundary, which
+    re-pushes final values inward. Monotone fixpoints are unique, and every
+    realized value is the same left-to-right path sum a from-scratch run
+    produces, so the result is BIT-IDENTICAL to full recomputation on the
+    updated graph.
+
+  * **Non-monotone** programs (PPR/PageRank power iteration): restarting the
+    iteration from a perturbed state computes a different (wrong) trajectory,
+    so the unit of reuse is the whole QUERY: a source that cannot reach any
+    touched endpoint (`report.dirty_src`) is bitwise unaffected and keeps its
+    previous result; only dirty sources re-run, batched, from scratch.
+
+Both paths run against the SAME overlaid (graph, pack, delta) views, so
+"full recompute on the updated graph" is a well-defined bitwise reference
+(tests/test_streaming.py pins it for BFS/SSSP/PPR).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frontier as F
+from repro.core.acc import ACCProgram
+from repro.core.engine import EngineConfig
+from repro.serving import batch_engine as B
+from repro.streaming.delta import StreamingGraph, UpdateReport
+
+
+def is_monotone(program: ACCProgram) -> bool:
+    """Safe to resume from a previous fixpoint: idempotent min/max combiner
+    with the default (monoid) apply — any valid upper(min)/lower(max) bound
+    converges to the unique fixpoint."""
+    return program.combiner.idempotent and program.apply is None
+
+
+def _seed_state(program, sg, cfg, sources, prev_m, report) -> B.BatchState:
+    """BatchState resuming Q lanes from `prev_m` with update-batch seeds."""
+    g = sg.graph
+    n = g.n_nodes
+    sources = jnp.asarray(sources, jnp.int32)
+    q = int(sources.shape[0])
+    st = B.init_batch(program, g, cfg, sources, pack=sg.pack)
+
+    affected = np.concatenate([report.affected_del, [False]])    # (n+1,)
+    aff = jnp.asarray(affected)
+    # affected rows fall back to their per-lane INIT values (source row
+    # included: a reset source re-inits to distance 0 in its own lane)
+    m = {k: jnp.where(aff[:, None], st.m[k], jnp.asarray(prev_m[k]))
+         for k in st.m}
+
+    seeds = np.unique(np.concatenate(
+        [report.ins_src, report.boundary]).astype(np.int64))
+    active = F.mask_from_ids(jnp.asarray(seeds, jnp.int32), n, q=q)
+    # lanes whose source sits inside the affected region restart from it
+    lanes = jnp.arange(q)
+    lane_src_reset = aff[sources]                                 # (Q,)
+    active = active.at[sources, lanes].set(
+        active[sources, lanes] | lane_src_reset)
+
+    count = jnp.sum(active, axis=0).astype(jnp.int32)
+    union_fe, overflow = B._union_volume(g.out, cfg, active)
+    st = st._replace(
+        m=m, active=active, count=count, union_fe=union_fe,
+        overflow=overflow, done=count == 0,
+    )
+    return st._replace(
+        gmode=B._consensus_mode(program, cfg, g.n_edges, st),
+        mode=jnp.where(st.done, st.mode,
+                       B._consensus_mode(program, cfg, g.n_edges, st)),
+    )
+
+
+def incremental_batch(
+    program: ACCProgram,
+    sg: StreamingGraph,
+    cfg: EngineConfig,
+    sources,
+    prev_m: dict,
+    report: Optional[UpdateReport] = None,
+    fusion: str = "all",
+):
+    """Refresh Q previous fixpoints after `sg.apply(...)`.
+
+    `prev_m` is the vertex-major metadata dict {field: (n+1, Q)} a previous
+    `run_batch`/`incremental_batch` over the SAME `sources` returned (for
+    min programs a {primary: ...} dict reconstructed from cached results is
+    enough). Returns (metadata, info): bit-identical to
+    `run_batch(program, sg.graph, sg.pack, cfg, sources, delta=sg.delta)`.
+    """
+    report = report if report is not None else sg.last_report
+    assert report is not None, "apply an update batch before recomputing"
+    sources_np = np.asarray(sources, dtype=np.int64)
+    q = int(sources_np.shape[0])
+
+    if is_monotone(program):
+        st0 = _seed_state(program, sg, cfg, sources_np, prev_m, report)
+        m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
+                               delta=sg.delta, fusion=fusion)
+        info = {"mode": "monotone-incremental", "reran": q,
+                "iterations": int(stats["iterations"]),
+                "per_query_iters": stats["per_query_iters"]}
+        return m, info
+
+    dirty = report.dirty_src[np.clip(sources_np, 0, sg.n - 1)]
+    dirty_idx = np.nonzero(dirty)[0]
+    m = {k: jnp.asarray(v) for k, v in prev_m.items()}
+    iters = 0
+    if dirty_idx.size:
+        sub, stats = B.run_batch(
+            program, sg.graph, sg.pack, cfg, sources_np[dirty_idx],
+            fusion=fusion, delta=sg.delta)
+        cols = jnp.asarray(dirty_idx, jnp.int32)
+        m = {k: m[k].at[:, cols].set(sub[k]) for k in m}
+        iters = int(stats["iterations"])
+    info = {"mode": "selective-rerun", "reran": int(dirty_idx.size),
+            "retained": q - int(dirty_idx.size), "iterations": iters}
+    return m, info

@@ -55,13 +55,10 @@ SCRIPT = textwrap.dedent("""
 
 
 @pytest.mark.slow
-@pytest.mark.skipif(
-    not hasattr(__import__("jax").lax, "pvary"),
-    reason="manual-TP pipeline grads need VMA/pvary autodiff semantics "
-           "(old shard_map skips the cross-shard psum on replicated-param "
-           "cotangents when the static replication checker is off)",
-)
 def test_pipeline_tp_matches_reference():
+    """Runs on every jax: with VMA/pvary the cotangent psums for replicated
+    params come from shard_map's type system; without it pipeline_tp places
+    them explicitly (compat.HAS_VMA gate) — same numerics either way."""
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=4",
                PYTHONPATH="src")

@@ -144,6 +144,35 @@ def test_scheduler_drains_oversubscribed_stream(served_graph):
         )
 
 
+def test_weighted_fairness_hot_algo_cannot_starve(served_graph):
+    """Weighted fair admission: each algorithm owns a weighted share of the
+    queue budget, so a flood of one algorithm cannot push another's
+    requests out (ROADMAP 'query admission fairness')."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack, {"bfs": alg.bfs(0), "sssp": alg.sssp(0)},
+        slots=2, cfg=cfg, queue_cap=8, cache_capacity=0,
+        weights={"bfs": 1.0, "sssp": 3.0},
+    )
+    assert srv.queue_quota == {"bfs": 2, "sssp": 6}
+    # hot bfs floods: only its own share fills, the rest bounces
+    bfs_rids = [srv.submit("bfs", s) for s in range(10)]
+    assert sum(r is not None for r in bfs_rids) == 2
+    assert srv.rejected == 8
+    # sssp still has its full share available
+    sssp_rids = [srv.submit("sssp", s) for s in range(6)]
+    assert all(r is not None for r in sssp_rids)
+    comps = srv.drain()
+    assert len(comps) == 8                       # 2 bfs + 6 sssp all complete
+    assert {c.algo for c in comps} == {"bfs", "sssp"}
+    for c in comps:
+        ref = run_sequential(
+            lambda: alg.bfs(0) if c.algo == "bfs" else alg.sssp(0),
+            g, pack, cfg, [c.source])[0]
+        assert np.array_equal(c.result, np.asarray(ref["dist"][:-1]))
+
+
 def test_scheduler_backpressure(served_graph):
     g, pack = served_graph
     cfg = default_config(g, max_iters=64)
