@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming bench-serving bench-streaming bench-schema
+.PHONY: check test smoke smoke-streaming smoke-sharded bench-serving bench-streaming bench-sharded bench-schema
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -15,9 +15,19 @@ smoke-streaming:
 	PYTHONPATH=src python -m repro.launch.stream_graph --requests 9 --slots 3 \
 		--scale 8 --update-every 4 --verify
 
+# sharded serving smoke on a forced 8-device host mesh
+smoke-sharded:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+		python -m repro.launch.serve_graph --requests 8 --slots 8 \
+		--scale 8 --mesh 8x1
+
 # full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
 bench-serving:
 	PYTHONPATH=src python benchmarks/serving_bench.py
+
+# sharded q/s-vs-shard-count benchmark (writes BENCH_sharded.json)
+bench-sharded:
+	PYTHONPATH=src python benchmarks/sharded_bench.py
 
 # streaming incremental-vs-full benchmark (writes BENCH_streaming.json)
 bench-streaming:

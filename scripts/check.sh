@@ -25,6 +25,14 @@ echo "== streaming smoke =="
 python -m repro.launch.stream_graph --requests 9 --slots 3 --scale 8 \
     --update-every 4 --verify
 
+echo "== sharded serving smoke (forced 8-device host mesh) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve_graph --requests 8 --slots 8 --scale 8 \
+    --mesh 8x1
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve_graph --requests 6 --slots 4 --scale 8 \
+    --mesh 2x4 --placement edge_sharded
+
 echo "== bench schema =="
 python scripts/bench_schema.py
 

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import frontier as F
 from repro.core.acc import ACCProgram, Meta, gather_meta
-from repro.graph.csr import CSR, Graph
+from repro.graph.csr import CSR, EdgeDelta, Graph
 from repro.graph.packing import EllPack
 
 PUSH, PULL = jnp.int32(0), jnp.int32(1)
@@ -179,10 +179,21 @@ def _sparse_combine_apply(program, comb, m, upd, dst, n):
     return out
 
 
-def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: EngineState) -> EngineState:
+def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: EngineState,
+               delta: Optional[EdgeDelta] = None) -> EngineState:
     n = csr.n_nodes
     comb = program.combiner
     src, dst, w, valid_e, _total = expand_frontier(csr, st.frontier, st.count, cfg.edge_cap)
+    if delta is not None:
+        # streaming insertion overlay (DESIGN.md §8): the COO lanes are
+        # appended to the expanded edge buffer unconditionally — sentinel
+        # padding keeps unused lanes inert, so the solo push sees the
+        # overlaid graph with zero shape changes (the pull path reads the
+        # insertions from the delta slice appended to the ELL pack).
+        src = jnp.concatenate([src, delta.src])
+        dst = jnp.concatenate([dst, delta.dst])
+        w = jnp.concatenate([w, delta.w])
+        valid_e = jnp.concatenate([valid_e, delta.src < n])
 
     sender = gather_meta(st.m, src)
     receiver = gather_meta(st.m, dst)
@@ -331,11 +342,11 @@ def init_state(program: ACCProgram, g: Graph, cfg: EngineConfig, **init_kw) -> E
     return _policy(program, cfg, g.n_edges, st)
 
 
-def _make_step(program, g, pack, cfg, pull_slice_fn=None):
+def _make_step(program, g, pack, cfg, pull_slice_fn=None, delta=None):
     def step(st: EngineState) -> EngineState:
         st = jax.lax.cond(
             st.mode == PUSH,
-            lambda s: _push_step(program, g.out, cfg, s),
+            lambda s: _push_step(program, g.out, cfg, s, delta),
             lambda s: _pull_step(program, pack, cfg, s, g.out, pull_slice_fn),
             st,
         )
@@ -371,18 +382,33 @@ def run(
     pack: EllPack,
     cfg: EngineConfig,
     pull_slice_fn: Optional[Callable] = None,
+    delta=None,
     **init_kw,
 ):
-    """Run an ACC program to convergence. Returns (metadata, stats dict)."""
+    """Run an ACC program to convergence. Returns (metadata, stats dict).
+
+    `delta` is a streaming :class:`~repro.graph.csr.EdgeDelta` insertion
+    overlay (DESIGN.md §8): its COO lanes ride along the push edge buffer,
+    so a solo run over a `StreamingGraph`'s views
+    (`run(p, sg.graph, sg.pack, cfg, delta=sg.delta, ...)`) sees insertions
+    without a CSR rebuild — bit-identical to the rebuilt graph for the
+    monotone programs (tests/test_streaming.py pins it). Delta lanes
+    contribute every push iteration regardless of the frontier — the same
+    contract the pull path's delta ELL slice already imposes: an ACC
+    program's inactive senders must message the combine identity or be
+    absorbed idempotently (true for the whole suite: min/max relaxations,
+    thresholded `send` fields, zero-when-stable aggregations).
+    """
     if pull_slice_fn is None and cfg.pull_impl == "pallas":
         pull_slice_fn = make_pallas_pull(program)
     st0 = init_state(program, g, cfg, **init_kw)
     if cfg.fusion == "all":
-        final = _run_fused_all(program, g, pack, cfg, st0, pull_slice_fn)
+        final = _run_fused_all(program, g, pack, cfg, st0, pull_slice_fn, delta)
     elif cfg.fusion == "pushpull":
-        final = _run_fused_pushpull(program, g, pack, cfg, st0, pull_slice_fn)
+        final = _run_fused_pushpull(program, g, pack, cfg, st0, pull_slice_fn,
+                                    delta)
     elif cfg.fusion == "none":
-        final = _run_unfused(program, g, pack, cfg, st0, pull_slice_fn)
+        final = _run_unfused(program, g, pack, cfg, st0, pull_slice_fn, delta)
     else:
         raise ValueError(cfg.fusion)
     stats = {
@@ -397,19 +423,19 @@ def run(
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 5))
-def _run_fused_all(program, g, pack, cfg, st0, pull_slice_fn):
+def _run_fused_all(program, g, pack, cfg, st0, pull_slice_fn, delta=None):
     """One `lax.while_loop`, push+pull both resident ('all fusion')."""
-    step = _make_step(program, g, pack, cfg, pull_slice_fn)
+    step = _make_step(program, g, pack, cfg, pull_slice_fn, delta)
     return jax.lax.while_loop(lambda s: ~s.done, step, st0)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 5))
-def _run_fused_pushpull(program, g, pack, cfg, st0, pull_slice_fn):
+def _run_fused_pushpull(program, g, pack, cfg, st0, pull_slice_fn, delta=None):
     """Outer loop of two *specialized* inner loops (the paper's selective
     push-pull fusion): each inner body contains only one direction's code."""
 
     def push_only(st):
-        st = _push_step(program, g.out, cfg, st)
+        st = _push_step(program, g.out, cfg, st, delta)
         return _policy(program, cfg, g.n_edges, st)
 
     def pull_only(st):
@@ -428,15 +454,15 @@ def _run_fused_pushpull(program, g, pack, cfg, st0, pull_slice_fn):
     return jax.lax.while_loop(lambda s: ~s.done, outer_body, st0)
 
 
-def _run_unfused(program, g, pack, cfg, st0, pull_slice_fn):
+def _run_unfused(program, g, pack, cfg, st0, pull_slice_fn, delta=None):
     """No fusion: one device dispatch per kernel per iteration (the paper's
     multi-kernel baseline, up to 40k launches)."""
-    push = jax.jit(lambda s: _policy(program, cfg, g.n_edges,
-                                     _push_step(program, g.out, cfg, s)))
+    push = jax.jit(lambda s, d: _policy(program, cfg, g.n_edges,
+                                        _push_step(program, g.out, cfg, s, d)))
     pull = jax.jit(lambda s: _policy(program, cfg, g.n_edges,
                                      _pull_step(program, pack, cfg, s, g.out,
                                                 pull_slice_fn)))
     st = st0
     while not bool(st.done):
-        st = push(st) if int(st.mode) == 0 else pull(st)
+        st = push(st, delta) if int(st.mode) == 0 else pull(st)
     return st

@@ -34,6 +34,10 @@ RULES: dict[str, tuple[str, ...]] = {
     "table_rows": ("model",),      # recsys embedding-table row sharding
     "candidates": ("model",),      # retrieval candidate sharding
     "nodes": ("data",),            # GNN node-feature sharding
+    # batched graph serving (DESIGN.md §9): the trailing Q axis of the
+    # vertex-major (n+1, Q) state shards over 'data' (query-parallel
+    # replicas); the vertex axis stays replicated (pass None for it)
+    "queries": ("data",),
 }
 
 _ACTIVE: list[Mesh] = []

@@ -74,6 +74,32 @@ def shard_edges(g: Graph, n_shards: int, pad_multiple: int = 128) -> EdgeShards:
     )
 
 
+def shard_delta(delta, n_shards: int, n_nodes: int = None):
+    """Split a streaming :class:`~repro.graph.csr.EdgeDelta` COO overlay into
+    per-shard slices: (cap,) lanes -> (n_shards, ceil(cap/n_shards)) with the
+    real (prefix) lanes round-robined across shards and sentinel padding for
+    the rest. Each inserted edge lands on exactly ONE shard, so the
+    edge-partitioned scan's cross-shard monoid merge counts it once. The
+    per-shard capacity depends only on (cap, n_shards) — update batches never
+    change shapes (DESIGN.md §9)."""
+    from repro.graph.csr import EdgeDelta
+
+    src = np.asarray(delta.src)
+    if n_nodes is None:
+        n_nodes = int(src.max(initial=0))  # sentinel is the max by contract
+    cap = src.shape[0]
+    per = -(-cap // n_shards)
+    tot = per * n_shards
+    s = np.full(tot, n_nodes, dtype=np.int32)
+    d = np.full(tot, n_nodes, dtype=np.int32)
+    w = np.zeros(tot, dtype=np.float32)
+    s[:cap] = src
+    d[:cap] = np.asarray(delta.dst)
+    w[:cap] = np.asarray(delta.w)
+    rr = lambda a: jnp.asarray(a.reshape(per, n_shards).T)  # noqa: E731
+    return EdgeDelta(src=rr(s), dst=rr(d), w=rr(w))
+
+
 def shard_nodes(n_nodes: int, n_shards: int, pad_multiple: int = 8) -> int:
     """Padded per-shard node count for node-sharded state."""
     per = -(-n_nodes // n_shards)

@@ -7,6 +7,13 @@ admitted into fixed per-algorithm query slots and served by the batched
 multi-query engine (`repro.serving`).
 
   PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 --slots 4
+
+`--mesh DxS` serves through SHARDED pools on a ('data', 'model') device
+mesh (DESIGN.md §9) — D query shards x S edge shards; needs D*S jax
+devices, e.g. a forced host mesh:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  PYTHONPATH=src python -m repro.launch.serve_graph --mesh 8x1 --slots 8
 """
 
 from __future__ import annotations
@@ -18,7 +25,7 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.graph import generators, pack_ell
-from repro.serving import GraphServer, default_config
+from repro.serving import GraphServer, Placement, default_config, make_serving_mesh
 
 
 def build_graph(kind: str, scale: int, edge_factor: int, seed: int):
@@ -46,6 +53,13 @@ def main(argv=None):
     ap.add_argument("--hot-frac", type=float, default=0.25,
                     help="fraction of requests drawn from a small hot source set")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="serve through sharded pools on a DxS ('data' x "
+                         "'model') mesh, e.g. 8x1 (query-sharded) or 1x4 "
+                         "(edge-partitioned); empty = single-device pools")
+    ap.add_argument("--placement", default="replicated",
+                    choices=("replicated", "edge_sharded"),
+                    help="pool placement on the --mesh")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -62,10 +76,26 @@ def main(argv=None):
                  f"got {unknown or args.algos!r}")
     programs = {a: factories[a] for a in algos}
 
+    mesh = None
+    placements = None
+    if args.mesh:
+        try:
+            d, s = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh must look like DxS (e.g. 8x1), got {args.mesh!r}")
+        mesh = make_serving_mesh(d, s)
+        n_shards = d if args.placement == "replicated" else s
+        placements = {a: Placement(args.placement, n_shards) for a in algos}
+        if args.slots % d:
+            ap.error(f"--slots {args.slots} must divide over {d} query shards")
+        print(f"[serve_graph] sharded pools: mesh {d}x{s}, "
+              f"placement={args.placement}")
+
     srv = GraphServer(
         g, pack, programs, slots=args.slots, cfg=default_config(g),
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
         result_fields={"ppr": "rank"},
+        mesh=mesh, placements=placements,
     )
 
     rng = np.random.default_rng(args.seed)
@@ -96,8 +126,9 @@ def main(argv=None):
     print(f"[serve_graph] cache: {cache['hits']} hits / {cache['misses']} misses "
           f"(hit rate {cache['hit_rate']:.0%})")
     for name, p in stats["pools"].items():
+        place = "" if p["placement"] == "single" else f" [{p['placement']}]"
         print(f"[serve_graph]   pool {name}: {p['engine_queries']} engine queries, "
-              f"{p['steps']} batched steps x {p['slots']} slots")
+              f"{p['steps']} batched steps x {p['slots']} slots{place}")
     for c in comps[:3]:
         head = np.array2string(c.result[:4], precision=3)
         print(f"  rid {c.rid} {c.algo}(src={c.source}) iters={c.iterations} "

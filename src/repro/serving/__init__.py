@@ -8,9 +8,14 @@ The layer between the single-query ACC engine and serving traffic:
   scheduler.py    -- slot pools + bounded request queue with backpressure;
                      continuous batching with mid-flight lane recycling
   cache.py        -- graph-version-keyed LRU so hot queries short-circuit
+  sharded.py      -- the batched loop under shard_map on a ('data','model')
+                     mesh: query-sharded replicas or 1-D edge partitions,
+                     with a psum'd global consensus controller (DESIGN.md §9)
+  placement.py    -- pool placement layer: sharded pools behind GraphServer
 
-Entry points: `GraphServer` for request streams, `run_batch` for one
-fixed batch, `launch/serve_graph.py` for the CLI driver.
+Entry points: `GraphServer` for request streams (pass `mesh`/`placements`
+for sharded pools), `run_batch` / `run_sharded` for one fixed batch,
+`launch/serve_graph.py --mesh DxS` for the CLI driver.
 """
 
 from repro.serving.batch_engine import (  # noqa: F401
@@ -31,8 +36,24 @@ from repro.serving.scheduler import (  # noqa: F401
     Request,
     default_config,
 )
+from repro.serving.placement import (  # noqa: F401
+    Placement,
+    ShardedAlgoPool,
+    make_serving_mesh,
+)
+from repro.serving.sharded import (  # noqa: F401
+    ShardedBatchEngine,
+    run_sharded,
+    shard_sources,
+)
 
 __all__ = [
+    "Placement",
+    "ShardedAlgoPool",
+    "ShardedBatchEngine",
+    "make_serving_mesh",
+    "run_sharded",
+    "shard_sources",
     "BatchState",
     "init_batch",
     "make_batched_step",

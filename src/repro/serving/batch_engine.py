@@ -112,13 +112,18 @@ def _apply_and_refilter(program, cfg, csr, st, seg):
     return m_new, nxt, count, union_fe, overflow
 
 
-def _union_volume(csr: CSR, cfg: EngineConfig, mask: jnp.ndarray):
-    """Out-edge volume of the union frontier + would-the-union-overflow."""
+def _union_volume_deg(deg: jnp.ndarray, cfg: EngineConfig, mask: jnp.ndarray):
+    """`_union_volume` from a bare (n,) out-degree vector — the form shared
+    with the sharded engines, which carry degrees instead of a full CSR."""
     union = jnp.any(mask, axis=-1)                   # (n+1,)
-    deg = csr.row_ptr[1:] - csr.row_ptr[:-1]         # (n,)
     fe = jnp.sum(jnp.where(union[:-1], deg, 0)).astype(jnp.int32)
     ucount = jnp.sum(union[:-1]).astype(jnp.int32)
     return fe, ucount > cfg.frontier_cap
+
+
+def _union_volume(csr: CSR, cfg: EngineConfig, mask: jnp.ndarray):
+    """Out-edge volume of the union frontier + would-the-union-overflow."""
+    return _union_volume_deg(csr.row_ptr[1:] - csr.row_ptr[:-1], cfg, mask)
 
 
 # ---------------------------------------------------------------------------
@@ -331,17 +336,22 @@ def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack,
 
 
 def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
-               sources, done=None, pack: Optional[EllPack] = None) -> BatchState:
+               sources, done=None, pack: Optional[EllPack] = None,
+               check_caps: bool = True) -> BatchState:
     """Stack Q fresh query states (one per source), vertex-major.
 
     `done` marks lanes to create as empty/inactive (the scheduler starts
     pools fully inactive and admits into lanes later). `pack` is required
     when `cfg.masked_pull` is set (the partial caches are sized per slice).
+    `check_caps=False` skips the push-only no-overflow assertion for
+    engines whose push path cannot truncate (the edge-partitioned scan,
+    serving/sharded.py, is dense over each partition and never consults the
+    frontier/edge budgets).
     """
     sources = jnp.asarray(sources, jnp.int32)
     q = sources.shape[0]
     n = g.n_nodes
-    if program.modes == "push":
+    if program.modes == "push" and check_caps:
         # same no-overflow contract as engine.init_state: a push-only program
         # has no pull fallback, so a truncated union expansion would silently
         # drop updates (the consensus controller only reroutes modes='both').
@@ -429,6 +439,7 @@ def run_state(
         "pull_iters": final.pull_iters,
         "switches": final.switches,
         "final_count": final.count,
+        "mode_trace": final.mode_trace,
     }
     return final.m, stats
 

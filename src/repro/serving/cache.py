@@ -17,10 +17,14 @@ def make_key(graph_version: int, algo: str, source: int,
              params: Tuple = ()) -> Tuple:
     """Canonical cache key: (graph version, algorithm, source, extra params).
 
-    `params` must be hashable; `GraphServer` passes () (each pool serves one
-    parameterization — its algo name identifies it). Callers serving several
-    parameterizations of one algorithm (e.g. two PPR dampings as separate
-    pools) put the distinguishing (name, value) pairs here.
+    `params` must be hashable; `GraphServer` passes each pool's
+    `cache_params` — () for single-device and replicated pools (their
+    results are the bitwise reference), and (('placement', 'edge_sharded'),)
+    for edge-partitioned pools of sum-combiner programs, whose results
+    differ from the reference by one cross-shard reassociation (DESIGN.md
+    §9) and must never be served under the bit-exact key. Callers serving
+    several parameterizations of one algorithm (e.g. two PPR dampings as
+    separate pools) put the distinguishing (name, value) pairs here too.
     """
     return (int(graph_version), str(algo), int(source), tuple(params))
 

@@ -1,0 +1,178 @@
+"""Pool placement: sharded serving pools behind the GraphServer (DESIGN.md §9).
+
+`GraphServer` pools declare WHERE they run: unplaced pools stay the
+single-device `AlgoPool`; placed pools wrap a
+:class:`~repro.serving.sharded.ShardedBatchEngine` on the server's
+('data', 'model') mesh:
+
+    Placement('replicated', 8)    # query-sharded: Q over 8 'data' shards,
+                                  # graph/pack/delta broadcast to replicas
+    Placement('edge_sharded', 4)  # 1-D edge partition over 4 'model' shards
+
+The scheduler's contract is unchanged — free_lanes / admit / step / harvest
+/ set_graph / readmit — so admission, continuous batching, backpressure and
+`apply_updates` (overlay swap + selective LRU invalidation) run through
+sharded pools untouched. Two placement-specific behaviors:
+
+  * **shard-local lane routing**: lane l of a Q-lane pool lives on 'data'
+    shard l // (Q/D) (jax shards the trailing axis in contiguous blocks), so
+    `free_lanes` orders free lanes round-robin ACROSS shards — admissions
+    spread over the mesh instead of piling onto shard 0.
+  * **cache keys**: edge-sharded pools of sum-combiner programs produce
+    results that differ from the replicated/single-device bit pattern by one
+    cross-shard reassociation, so their cache entries carry a
+    ('placement', 'edge_sharded') param — a placement change can never serve
+    a bitwise-foreign cached result.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.acc import ACCProgram
+from repro.core.engine import EngineConfig
+from repro.graph.csr import EdgeDelta, Graph
+from repro.graph.packing import EllPack
+from repro.serving.scheduler import _admit_lane, _LanePool
+from repro.serving.sharded import (
+    DATA_AXIS,
+    MODEL_AXIS,
+    ShardedBatchEngine,
+    make_serving_mesh,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Where one pool's lanes and edges live on the serving mesh."""
+
+    kind: str                     # 'replicated' | 'edge_sharded'
+    n_shards: int = 1
+    consensus: str = "global"     # pools step collectively -> global only
+
+    def __post_init__(self):
+        assert self.kind in ("replicated", "edge_sharded"), self.kind
+        assert self.n_shards >= 1
+
+    @classmethod
+    def of(cls, spec) -> "Placement":
+        """Coerce ('replicated'|'edge_sharded', n) tuples / bare kind strings
+        (n_shards=1) / Placement instances."""
+        if isinstance(spec, Placement):
+            return spec
+        if isinstance(spec, str):
+            return cls(spec)
+        kind, n_shards = spec
+        return cls(kind, int(n_shards))
+
+    def check_mesh(self, mesh) -> None:
+        d = int(mesh.shape[DATA_AXIS])
+        s = int(mesh.shape[MODEL_AXIS])
+        if self.kind == "replicated":
+            assert self.n_shards == d, (
+                f"replicated placement wants {self.n_shards} query shards, "
+                f"mesh 'data' axis has {d}")
+        else:
+            assert self.n_shards == s, (
+                f"edge_sharded placement wants {self.n_shards} edge shards, "
+                f"mesh 'model' axis has {s}")
+
+
+class ShardedAlgoPool(_LanePool):
+    """Fixed query slots for one ACC program, sharded across a mesh.
+
+    Shares `scheduler._LanePool`'s lane bookkeeping with the single-device
+    `AlgoPool`, so the GraphServer drives both kinds through one loop.
+    `slots` is the TOTAL lane count across query shards (must divide by the
+    mesh 'data' axis)."""
+
+    def __init__(self, name: str, program: ACCProgram, g: Graph,
+                 pack: EllPack, cfg: EngineConfig, slots: int, mesh,
+                 placement, result_field: Optional[str] = None,
+                 delta: Optional[EdgeDelta] = None):
+        self.placement = Placement.of(placement)
+        self.placement.check_mesh(mesh)
+        self.name = name
+        self.program = program
+        self.result_field = result_field or program.primary
+        self.cfg = cfg
+        self.slots = slots
+        self.n_query_shards = int(mesh.shape[DATA_AXIS])
+        assert slots % self.n_query_shards == 0, (
+            f"{slots} lanes do not divide over {self.n_query_shards} "
+            "query shards")
+        self.engine = ShardedBatchEngine(
+            program, g, pack, cfg, mesh, placement=self.placement.kind,
+            consensus=self.placement.consensus, delta=delta)
+        self.g, self.pack, self.delta = (
+            self.engine.g, self.engine.pack, self.engine.delta)
+        self.lane_rid: List[Optional[int]] = [None] * slots
+        self.state = self.engine.init(
+            jnp.zeros((slots,), jnp.int32),
+            done=jnp.ones((slots,), bool))
+        # admission reuses the single-device lane write under plain jit:
+        # GSPMD partitions the column update over the sharded state, and the
+        # out_shardings pin keeps the state's layout stable across admits
+        # (the edge-sharded scan never truncates, so its push-only capacity
+        # check is skipped)
+        check_caps = self.placement.kind != "edge_sharded"
+        self._admit = jax.jit(
+            lambda st, source, lane, g_: _admit_lane(
+                program, g_, cfg, st, source, lane, check_caps=check_caps),
+            out_shardings=self.engine.state_shardings,
+        )
+        #: extra cache-key params (see module docstring)
+        self.cache_params = (
+            (("placement", "edge_sharded"),)
+            if (self.placement.kind == "edge_sharded"
+                and program.combiner.name == "sum")
+            else ())
+        self.engine_queries = 0
+        self.steps = 0
+
+    # -- scheduling interface: live/admit/harvest/readmit from _LanePool ----
+
+    def free_lanes(self) -> List[int]:
+        """Free lanes ordered round-robin across query shards, so successive
+        admissions land on different shards (shard-local slot routing)."""
+        per = self.slots // self.n_query_shards
+        return sorted(super().free_lanes(),
+                      key=lambda lane: (lane % per, lane // per))
+
+    def step(self) -> None:
+        if self.live():
+            self.state = self.engine.step(self.state)
+            self.steps += 1
+
+    # -- streaming support ---------------------------------------------------
+
+    def set_graph(self, g: Graph, pack: EllPack,
+                  delta: Optional[EdgeDelta]) -> None:
+        """Swap updated overlay views into every shard: replicated pools
+        broadcast the new views to the replicas, edge-sharded pools re-slice
+        the edge partition and the per-shard delta (same shapes — no
+        recompile). Masked-pull partial caches rebuild at identity exactly
+        like the single-device pool, placed on the mesh."""
+        self.engine.set_graph(g, pack, delta)
+        self.g, self.pack, self.delta = (
+            self.engine.g, self.engine.pack, self.engine.delta)
+        self._reset_masked_pull_cache()
+
+    def _place_pseg(self, pseg: tuple) -> tuple:
+        return tuple(
+            jax.device_put(p, sh)
+            for p, sh in zip(pseg, self.engine.state_shardings.pseg))
+
+
+__all__ = [
+    "Placement",
+    "ShardedAlgoPool",
+    "make_serving_mesh",
+    "DATA_AXIS",
+    "MODEL_AXIS",
+]

@@ -26,12 +26,18 @@ can differ from a solo run; results are still bit-identical for the
 idempotent/min programs and pull-only programs served here (see
 batch_engine's module docstring for the argument).
 
-Admission fairness: requests queue PER ALGORITHM and each queue owns a
-weighted share of the total queue budget (weighted fair queuing at the
-admission edge) — a hot algorithm can exhaust its own share and its own
-lanes, never another algorithm's (ROADMAP "query admission fairness").
-Lanes are per-pool too, so no cross-algorithm arbitration is needed past
-the queue shares.
+Admission fairness: requests queue per (TENANT, ALGORITHM) and each queue
+owns a weighted share of the total queue budget (weighted fair queuing at
+the admission edge, `weights=` per algorithm x `tenant_weights=` per
+tenant) — a hot algorithm exhausts only its own share, and within an
+algorithm a hot tenant exhausts only its tenant share, never another's
+(ROADMAP "per-tenant quotas"). Lanes are per-pool; free lanes are dealt
+round-robin across that algorithm's tenant queues.
+
+Sharded pools: constructed with a `mesh` + per-algorithm `placements`, a
+pool's lanes shard across the mesh ('replicated' query sharding or
+'edge_sharded' graph partitioning — `serving/placement.py`); the scheduler
+drives both pool kinds through the same admit/step/harvest loop.
 
 Streaming graphs: constructed with `delta_cap > 0` the server owns a
 `repro.streaming.StreamingGraph`; `apply_updates` absorbs an edge-update
@@ -68,6 +74,7 @@ class Request:
     rid: int
     algo: str
     source: int
+    tenant: str = "default"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +89,7 @@ class Completion:
     #: a query queued across an update executes on the newer graph; a clean
     #: lane spanning an update is bitwise valid for both end versions).
     graph_version: int = 0
+    tenant: str = "default"
 
 
 def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
@@ -95,7 +103,75 @@ def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
     )
 
 
-class AlgoPool:
+class _LanePool:
+    """Lane bookkeeping shared by the single-device and sharded pools — the
+    scheduler drives both kinds through exactly this contract. Subclasses
+    provide `state`, `lane_rid`, `slots`, `program`, `result_field`, `cfg`,
+    `pack`, and a jitted `_admit(st, source, lane, graph)`."""
+
+    def free_lanes(self) -> List[int]:
+        done = np.asarray(self.state.done)
+        return [i for i in range(self.slots)
+                if self.lane_rid[i] is None and done[i]]
+
+    def live(self) -> bool:
+        return any(r is not None for r in self.lane_rid)
+
+    def admit(self, lane: int, rid: int, source: int) -> None:
+        assert self.lane_rid[lane] is None
+        self.state = self._admit(
+            self.state, jnp.int32(source), jnp.int32(lane), self._admit_graph()
+        )
+        self.lane_rid[lane] = rid
+        self.engine_queries += 1
+
+    def readmit(self, lane: int, source: int) -> None:
+        """Re-initialize a LIVE lane's query from scratch on the current
+        graph (same rid, same lane — used when a streaming update dirties an
+        in-flight query)."""
+        assert self.lane_rid[lane] is not None
+        self.state = self._admit(
+            self.state, jnp.int32(source), jnp.int32(lane), self._admit_graph()
+        )
+        self.engine_queries += 1
+
+    def harvest(self) -> List[tuple]:
+        """(lane, rid, result, iterations) for every lane that converged."""
+        if not self.live():
+            return []
+        done = np.asarray(self.state.done)
+        out = []
+        for lane, rid in enumerate(self.lane_rid):
+            if rid is None or not done[lane]:
+                continue
+            res = np.asarray(self.state.m[self.result_field][:-1, lane])
+            out.append((lane, rid, res, int(self.state.it[lane])))
+            self.lane_rid[lane] = None
+        return out
+
+    def _admit_graph(self):
+        return self.g
+
+    def _place_pseg(self, pseg: tuple) -> tuple:
+        return pseg
+
+    def _reset_masked_pull_cache(self) -> None:
+        """Masked-pull partial caches were computed against the old graph,
+        so rebuild them at identity (an overflow rebuild can change slice
+        ROW COUNTS — stale pseg shapes would type-mismatch the next step)
+        and force the next pull dense."""
+        if not (self.cfg.masked_pull and self.state.pull_dense is not None):
+            return
+        ident = self.program.combiner.identity(
+            self.state.m[self.program.primary].dtype)
+        pseg = self._place_pseg(tuple(
+            jnp.full((s.nbr.shape[0], self.slots), ident)
+            for s in self.pack.slices))
+        self.state = self.state._replace(
+            pseg=pseg, pull_dense=jnp.asarray(True))
+
+
+class AlgoPool(_LanePool):
     """Fixed query slots for one ACC program over one graph."""
 
     def __init__(self, name: str, program: ACCProgram, g: Graph, pack: EllPack,
@@ -131,74 +207,31 @@ class AlgoPool:
         )
         self.engine_queries = 0
         self.steps = 0
+        #: extra cache-key params; single-device results are the bitwise
+        #: reference, so no distinguishing params (see serving/placement.py)
+        self.cache_params: tuple = ()
 
-    # -- scheduling interface ------------------------------------------------
-
-    def free_lanes(self) -> List[int]:
-        done = np.asarray(self.state.done)
-        return [i for i in range(self.slots) if self.lane_rid[i] is None and done[i]]
-
-    def live(self) -> bool:
-        return any(r is not None for r in self.lane_rid)
-
-    def admit(self, lane: int, rid: int, source: int) -> None:
-        assert self.lane_rid[lane] is None
-        self.state = self._admit(
-            self.state, jnp.int32(source), jnp.int32(lane), self.g
-        )
-        self.lane_rid[lane] = rid
-        self.engine_queries += 1
+    # -- scheduling interface: free_lanes/live/admit/harvest/readmit from
+    # _LanePool ---------------------------------------------------------------
 
     def step(self) -> None:
         if self.live():
             self.state = self._step(self.state, self.g, self.pack, self.delta)
             self.steps += 1
 
-    def harvest(self) -> List[tuple]:
-        """(lane, rid, result, iterations) for every lane that converged."""
-        if not self.live():
-            return []
-        done = np.asarray(self.state.done)
-        out = []
-        for lane, rid in enumerate(self.lane_rid):
-            if rid is None or not done[lane]:
-                continue
-            res = np.asarray(self.state.m[self.result_field][:-1, lane])
-            out.append((lane, rid, res, int(self.state.it[lane])))
-            self.lane_rid[lane] = None
-        return out
-
     # -- streaming support ---------------------------------------------------
 
     def set_graph(self, g: Graph, pack: EllPack,
                   delta: Optional[EdgeDelta]) -> None:
-        """Swap in updated overlay views; masked-pull partial caches were
-        computed against the old graph, so rebuild them at identity (an
-        overflow rebuild can change slice ROW COUNTS — stale pseg shapes
-        would type-mismatch the next step) and force the next pull dense."""
+        """Swap in updated overlay views (see `_reset_masked_pull_cache`)."""
         self.g, self.pack, self.delta = g, pack, delta
-        if self.cfg.masked_pull and self.state.pull_dense is not None:
-            ident = self.program.combiner.identity(
-                self.state.m[self.program.primary].dtype)
-            pseg = tuple(jnp.full((s.nbr.shape[0], self.slots), ident)
-                         for s in pack.slices)
-            self.state = self.state._replace(
-                pseg=pseg, pull_dense=jnp.asarray(True))
-
-    def readmit(self, lane: int, source: int) -> None:
-        """Re-initialize a LIVE lane's query from scratch on the current
-        graph (same rid, same lane — used when a streaming update dirties an
-        in-flight query)."""
-        assert self.lane_rid[lane] is not None
-        self.state = self._admit(
-            self.state, jnp.int32(source), jnp.int32(lane), self.g
-        )
-        self.engine_queries += 1
+        self._reset_masked_pull_cache()
 
 
-def _admit_lane(program, g, cfg, st: B.BatchState, source, lane) -> B.BatchState:
+def _admit_lane(program, g, cfg, st: B.BatchState, source, lane,
+                check_caps: bool = True) -> B.BatchState:
     """Write one freshly initialized query into lane `lane` (jitted)."""
-    one = B.init_batch(program, g, cfg, source[None])
+    one = B.init_batch(program, g, cfg, source[None], check_caps=check_caps)
     m = {k: st.m[k].at[:, lane].set(one.m[k][:, 0]) for k in st.m}
     active = st.active.at[:, lane].set(one.active[:, 0])
     st = st._replace(
@@ -236,7 +269,10 @@ class GraphServer:
         graph_version: int = 0,
         result_fields: Optional[Dict[str, str]] = None,
         weights: Optional[Dict[str, float]] = None,
+        tenant_weights: Optional[Dict[str, float]] = None,
         delta_cap: int = 0,
+        mesh=None,
+        placements: Optional[Dict[str, object]] = None,
     ):
         cfg = cfg or default_config(g)
         self.cfg = cfg
@@ -252,17 +288,31 @@ class GraphServer:
         self.graph_version = graph_version
         self.queue_cap = queue_cap
         self.cache = ResultCache(cache_capacity)
+        self.mesh = mesh
+        placements = placements or {}
+        assert not placements or mesh is not None, (
+            "placements require a serving mesh "
+            "(serving.placement.make_serving_mesh)")
         self.pools: Dict[str, AlgoPool] = {}
         result_fields = result_fields or {}
         for name, prog in programs.items():
             s = slots[name] if isinstance(slots, dict) else slots
-            self.pools[name] = AlgoPool(
-                name, prog, g, pack, cfg, s,
-                result_field=result_fields.get(name),
-                delta=delta,
-            )
-        # weighted fair queuing at the admission edge: per-algorithm queues,
-        # each owning a weighted share of the total queue budget
+            if name in placements:
+                from repro.serving.placement import ShardedAlgoPool
+
+                self.pools[name] = ShardedAlgoPool(
+                    name, prog, g, pack, cfg, s, mesh, placements[name],
+                    result_field=result_fields.get(name),
+                    delta=delta,
+                )
+            else:
+                self.pools[name] = AlgoPool(
+                    name, prog, g, pack, cfg, s,
+                    result_field=result_fields.get(name),
+                    delta=delta,
+                )
+        # weighted fair queuing at the admission edge: per-(tenant, algo)
+        # queues, each owning (algo share) x (tenant share) of the budget
         weights = weights or {}
         self.weights = {name: float(weights.get(name, 1.0)) for name in programs}
         total_w = sum(self.weights.values())
@@ -270,63 +320,88 @@ class GraphServer:
             name: max(1, int(queue_cap * w / total_w))
             for name, w in self.weights.items()
         }
-        self.queues: Dict[str, deque] = {name: deque() for name in programs}
+        self.tenants = (
+            {t: float(w) for t, w in tenant_weights.items()}
+            if tenant_weights else {"default": 1.0}
+        )
+        total_t = sum(self.tenants.values())
+        self.tenant_quota = {
+            (name, t): max(1, int(self.queue_quota[name] * tw / total_t))
+            for name in programs for t, tw in self.tenants.items()
+        }
+        self.queues: Dict[str, Dict[str, deque]] = {
+            name: {t: deque() for t in self.tenants} for name in programs
+        }
         self._next_rid = 0
         self._inflight_sources: Dict[int, int] = {}
+        self._inflight_tenants: Dict[int, str] = {}
         self.completions: List[Completion] = []
         self.rejected = 0
         self.update_log: List[dict] = []
 
     # -- request side --------------------------------------------------------
 
-    def submit(self, algo: str, source: int, strict: bool = False) -> Optional[int]:
-        """Enqueue a query; returns its rid, or None when the algorithm's
+    def submit(self, algo: str, source: int, strict: bool = False,
+               tenant: str = "default") -> Optional[int]:
+        """Enqueue a query; returns its rid, or None when the (tenant, algo)
         queue share is full (backpressure — caller sheds or retries;
-        `strict=True` raises). One algorithm flooding its share leaves every
-        other algorithm's share untouched."""
+        `strict=True` raises). One tenant flooding one algorithm exhausts
+        only its own share of that algorithm's budget; every other
+        (tenant, algo) share is untouched."""
         if algo not in self.pools:
             raise KeyError(f"no pool for algorithm {algo!r}")
+        if tenant not in self.tenants:
+            raise KeyError(
+                f"unknown tenant {tenant!r} (declared: {sorted(self.tenants)})")
         rid = self._next_rid
-        key = make_key(self.graph_version, algo, source)
+        key = make_key(self.graph_version, algo, source,
+                       self.pools[algo].cache_params)
         hit = self.cache.get(key)
         if hit is not None:
             self._next_rid += 1
             self.completions.append(Completion(
                 rid=rid, algo=algo, source=int(source), result=hit,
                 iterations=0, from_cache=True,
-                graph_version=self.graph_version,
+                graph_version=self.graph_version, tenant=tenant,
             ))
             return rid
-        if len(self.queues[algo]) >= self.queue_quota[algo]:
+        if len(self.queues[algo][tenant]) >= self.tenant_quota[(algo, tenant)]:
             self.rejected += 1
             if strict:
                 raise QueueFull(
-                    f"queue for {algo!r} at its share "
-                    f"{self.queue_quota[algo]} of capacity {self.queue_cap}")
+                    f"queue for tenant {tenant!r} of {algo!r} at its share "
+                    f"{self.tenant_quota[(algo, tenant)]} of capacity "
+                    f"{self.queue_cap}")
             return None
         self._next_rid += 1
-        self.queues[algo].append(Request(rid=rid, algo=algo, source=int(source)))
+        self.queues[algo][tenant].append(
+            Request(rid=rid, algo=algo, source=int(source), tenant=tenant))
         return rid
 
     # -- serving loop --------------------------------------------------------
 
     def _queued(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        return sum(len(q) for qs in self.queues.values() for q in qs.values())
 
     def pump(self) -> List[Completion]:
-        """One scheduling round: admit each algorithm's queue into its own
-        free lanes (fairness comes from the weighted queue shares enforced
-        at submit — lanes and queues are per-algorithm, so admission order
-        across pools has no cross-algorithm effect), one batched step per
-        live pool, harvest converged lanes. Returns this round's
-        completions."""
+        """One scheduling round: admit each algorithm's tenant queues into
+        its own free lanes, dealt round-robin across tenants (fairness
+        across algorithms comes from the weighted queue shares enforced at
+        submit; round-robin dealing keeps one deep tenant queue from
+        monopolizing a burst of freed lanes), one batched step per live
+        pool, harvest converged lanes. Returns this round's completions."""
         for name, pool in self.pools.items():
-            qd = self.queues[name]
+            qs = self.queues[name]
             lanes = deque(pool.free_lanes())
-            while qd and lanes:
-                req = qd.popleft()
-                pool.admit(lanes.popleft(), req.rid, req.source)
-                self._inflight_sources[req.rid] = req.source
+            while lanes and any(qs.values()):
+                for t in self.tenants:
+                    if not lanes:
+                        break
+                    if qs[t]:
+                        req = qs[t].popleft()
+                        pool.admit(lanes.popleft(), req.rid, req.source)
+                        self._inflight_sources[req.rid] = req.source
+                        self._inflight_tenants[req.rid] = req.tenant
 
         new: List[Completion] = []
         for name, pool in self.pools.items():
@@ -342,9 +417,12 @@ class GraphServer:
                 rid=rid, algo=name, source=self._source_of(rid, name, result),
                 result=result, iterations=iters, from_cache=False,
                 graph_version=self.graph_version,
+                tenant=self._inflight_tenants.pop(rid, "default"),
             )
             self.cache.put(
-                make_key(self.graph_version, comp.algo, comp.source), comp.result
+                make_key(self.graph_version, comp.algo, comp.source,
+                         pool.cache_params),
+                comp.result,
             )
             out.append(comp)
         return out
@@ -492,9 +570,18 @@ class GraphServer:
                     "slots": p.slots,
                     "engine_queries": p.engine_queries,
                     "steps": p.steps,
-                    "queued": len(self.queues[name]),
+                    "queued": sum(len(q) for q in self.queues[name].values()),
                     "queue_quota": self.queue_quota[name],
                     "weight": self.weights[name],
+                    "placement": (
+                        p.placement.kind if hasattr(p, "placement") else "single"
+                    ),
+                    "tenant_queued": {
+                        t: len(q) for t, q in self.queues[name].items()
+                    },
+                    "tenant_quota": {
+                        t: self.tenant_quota[(name, t)] for t in self.tenants
+                    },
                 }
                 for name, p in self.pools.items()
             },

@@ -1,0 +1,464 @@
+"""Sharded multi-device batched serving engine (DESIGN.md §9).
+
+The batched vertex-major engine (`serving/batch_engine.py`) runs Q point
+queries in one fused loop on ONE device. This module lifts that loop onto a
+('data', 'model') device mesh with `shard_map`, along the two scaling axes
+the repo already has layouts for (Gunrock's multi-GPU split, GraphBLAST's
+SpMM view):
+
+  * **query-sharded** (`placement='replicated'`): queries are embarrassingly
+    parallel, so the Q axis splits over the 'data' mesh axis and the
+    graph/pack/delta views replicate. Each shard runs the unmodified batched
+    push/pull iteration on its Q/D lanes; the only cross-shard state is the
+    JIT controller's input: per-shard union masks are `psum`-reduced over
+    'data' into the exact global union, so the one scalar push/pull decision
+    per iteration is a pure function of the same volumes the single-device
+    consensus controller sees — the global mode sequence (and hence the mode
+    trace) is identical to the single-device batched engine's.
+
+  * **edge-partitioned** (`placement='edge_sharded'`): for graphs whose edge
+    set outgrows one device, `graph/partition.py`'s 1-D edge shards split
+    over the 'model' axis while metadata replicates within each mesh row.
+    Each shard scans ITS edge partition per iteration (frontier-masked for
+    push-semantics programs, unmasked for pull-only programs — the SpMM
+    formulation), segment-combines locally into an (n+1, Q) partial, and the
+    partials merge across shards with the combine monoid's all-reduce
+    (`psum` for sum — implementable as psum_scatter+all_gather — and
+    pmin/pmax for the idempotent monoids). Per-iteration device state
+    touches only the shard's E/S edge triples + O(n·Q) metadata.
+
+Exactness (§7 argument, unchanged): per-query metadata is a pure function
+of per-query frontier trajectories; batch-mates and shard layout influence
+only the mode sequence, and for idempotent min/max programs a push and a
+pull iteration produce bit-identical metadata. Query-sharded results are
+therefore bit-identical to the single-device batched engine for the whole
+served suite (pull-only sum programs trivially so: identical iteration
+structure, pinned reduction trees). Edge-partitioned results are bit-exact
+for min/max programs (min/max are reassociation-free across the shard
+merge); sum programs see one extra reassociation (the cross-shard psum) and
+match to FP tolerance.
+
+Consensus flavors:
+
+  * `consensus='global'` (default): the psum'd controller above. Shards run
+    in lockstep (the fused loop carries the psum'd live count so every shard
+    exits the `while_loop` on the same trip); the mode trace equals the
+    single-device trace (tests/test_sharded.py pins this on RMAT-12).
+  * `consensus='local'`: each shard decides modes from its own union — NO
+    collectives at all in replicated placement, so shards converge fully
+    independently (results still bit-identical by idempotence; mode traces
+    may diverge per shard — the regression test demonstrates the divergence
+    the psum reduction exists to prevent). Fused runs only.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.core.acc import ACCProgram, Combiner
+from repro.core.engine import PULL, PUSH, EngineConfig
+from repro.graph import partition
+from repro.graph.csr import EdgeDelta, Graph
+from repro.graph.packing import EllPack
+from repro.serving import batch_engine as B
+
+DATA_AXIS = "data"     # query shards
+MODEL_AXIS = "model"   # edge shards
+
+_SPEC_LEAF = lambda x: isinstance(x, P) or x is None  # noqa: E731
+
+
+def make_serving_mesh(n_query_shards: int = 1, n_edge_shards: int = 1):
+    """('data', 'model') mesh for sharded pools. Needs
+    `n_query_shards * n_edge_shards` jax devices (force host devices with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N for CPU meshes)."""
+    devs = jax.devices()
+    need = n_query_shards * n_edge_shards
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh ({n_query_shards}, {n_edge_shards}) needs {need} devices, "
+            f"have {len(devs)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return compat.make_mesh(
+        (n_query_shards, n_edge_shards), (DATA_AXIS, MODEL_AXIS),
+        devices=devs[:need],
+        axis_types=(compat.AxisType.Auto, compat.AxisType.Auto),
+    )
+
+
+def state_specs(st: B.BatchState, mesh=None) -> B.BatchState:
+    """PartitionSpec tree for a BatchState: Q axis over 'data', vertex axis
+    and consensus scalars replicated (the global controller keeps the
+    scalars bitwise-equal across shards). With a mesh, the specs come from
+    the logical-axis layer (`distributed/sharding.py`'s 'queries' rule), so
+    the state layout collapses gracefully on meshes without a 'data' axis."""
+    if mesh is not None:
+        from repro.distributed import sharding as SH
+
+        with SH.activate(mesh):
+            qv = SH.spec(None, "queries")   # (n+1, Q) vertex-major
+            ql = SH.spec("queries")         # (Q,) per-lane
+            tr = SH.spec("queries", None)   # (Q, trace_len)
+    else:
+        qv, ql, tr = P(None, DATA_AXIS), P(DATA_AXIS), P(DATA_AXIS, None)
+    return B.BatchState(
+        m={k: qv for k in st.m},
+        active=qv, count=ql, union_fe=P(), overflow=P(),
+        mode=ql, it=ql, done=ql,
+        push_iters=ql, pull_iters=ql, switches=ql,
+        mode_trace=tr, gmode=P(),
+        pseg=tuple(qv for _ in st.pseg),
+        pull_dense=None if st.pull_dense is None else P(),
+    )
+
+
+def _replicated_specs(tree):
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _monoid_all_reduce(comb: Combiner, x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """All-reduce `x` across `axis` in the combine monoid. The idempotent
+    monoids use pmin/pmax (reassociation-free -> bit-exact merge); sum uses
+    psum (the psum_scatter + all_gather decomposition when XLA tiles it)."""
+    if comb.name == "sum":
+        return jax.lax.psum(x, axis)
+    if comb.name == "min":
+        return jax.lax.pmin(x, axis)
+    if comb.name == "max":
+        return jax.lax.pmax(x, axis)
+    raise ValueError(comb.name)
+
+
+def _global_union_volume(deg, cfg, mask, axis):
+    """The single-device controller's (union_fe, overflow) reconstructed
+    exactly across query shards: psum the per-shard union masks (union of
+    unions, NOT a sum of volumes — overlapping frontiers must not double
+    count), then measure the global union's out-edge volume."""
+    local = jnp.any(mask, axis=-1).astype(jnp.int32)      # (n+1,)
+    union = jax.lax.psum(local, axis) > 0
+    fe = jnp.sum(jnp.where(union[:-1], deg, 0)).astype(jnp.int32)
+    ucount = jnp.sum(union[:-1]).astype(jnp.int32)
+    return fe, ucount > cfg.frontier_cap
+
+
+def _live_count(st, axes) -> jnp.ndarray:
+    live = jnp.sum(~st.done).astype(jnp.int32)
+    for ax in axes:
+        live = jax.lax.psum(live, ax)
+    return live
+
+
+def _normalize_scalars(st, comb_gmode_axes):
+    """Deterministic consensus scalars at loop exit for flavors whose shards
+    carry shard-local values (local consensus / per-row edge shards):
+    aggregate volume, any-overflow, max mode — replicated by construction so
+    the P() out_specs hold."""
+    fe = jax.lax.psum(st.union_fe, comb_gmode_axes)
+    ovf = jax.lax.psum(st.overflow.astype(jnp.int32), comb_gmode_axes) > 0
+    gmode = jax.lax.pmax(st.gmode, comb_gmode_axes)
+    return st._replace(union_fe=fe, overflow=ovf, gmode=gmode)
+
+
+# ---------------------------------------------------------------------------
+# per-shard step bodies
+# ---------------------------------------------------------------------------
+
+
+def _make_replicated_step(program: ACCProgram, cfg: EngineConfig,
+                          n_edges: int, consensus: str):
+    """One query-shard iteration: the unmodified single-device batched step
+    on the shard's lanes, with the controller inputs globalized by psum when
+    `consensus='global'`."""
+
+    def step(st: B.BatchState, g: Graph, pack: EllPack,
+             delta: Optional[EdgeDelta]) -> B.BatchState:
+        if program.modes == "push":
+            new = B._push_step(program, g.out, cfg, st, delta)
+        elif program.modes == "pull":
+            new = B._pull_step(program, pack, cfg, st, g.out)
+        else:
+            new = jax.lax.cond(
+                st.gmode == PULL,
+                lambda s: B._pull_step(program, pack, cfg, s, g.out),
+                lambda s: B._push_step(program, g.out, cfg, s, delta),
+                st,
+            )
+        if consensus == "global":
+            # the psum sits OUTSIDE the push/pull cond: every shard executes
+            # it unconditionally, so the collective schedule is uniform
+            deg = g.out.row_ptr[1:] - g.out.row_ptr[:-1]
+            fe, ovf = _global_union_volume(deg, cfg, new.active, DATA_AXIS)
+            new = new._replace(union_fe=fe, overflow=ovf)
+        return B._policy(program, cfg, n_edges, new)
+
+    return step
+
+
+def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
+                            n: int, n_edges: int):
+    """One edge-shard iteration: scan the shard's COO partition (masked by
+    the union frontier for push-semantics programs, unmasked for pull-only
+    programs), segment-combine locally, monoid-all-reduce across 'model'.
+
+    No frontier compaction, no edge budget, no overflow: the scan covers
+    every shard edge each iteration, so nothing can truncate — push-only
+    programs run without the no-overflow capacity assertion, and the mode
+    controller degenerates (one scan kind per program).
+    """
+    comb = program.combiner
+    masked = program.modes != "pull"      # push semantics for both/push
+    was_mode = PUSH if masked else PULL
+
+    def step(st: B.BatchState, esrc, edst, ewgt, deg,
+             dsrc, ddst, dwgt) -> B.BatchState:
+        src = esrc.reshape(-1)
+        dst = edst.reshape(-1)
+        w = ewgt.reshape(-1)
+        if dsrc is not None:              # per-shard streaming delta slice
+            src = jnp.concatenate([src, dsrc.reshape(-1)])
+            dst = jnp.concatenate([dst, ddst.reshape(-1)])
+            w = jnp.concatenate([w, dwgt.reshape(-1)])
+        valid = (src < n) & (dst < n)     # sentinel pads / neutralized slots
+
+        sender = {k: v[src] for k, v in st.m.items()}        # (E_s, Q) rows
+        receiver = {k: v[dst] for k, v in st.m.items()}
+        upd = program.compute(sender, w[:, None], receiver)
+        ident = comb.identity(upd.dtype)
+        if masked:
+            eactive = st.active[src] & valid[:, None]
+        else:
+            eactive = jnp.broadcast_to(valid[:, None], upd.shape)
+        upd = jnp.where(eactive, upd, ident)
+        seg = comb.segment(upd, dst, n + 1)                  # shard partial
+        seg = _monoid_all_reduce(comb, seg, MODEL_AXIS)      # cross-shard merge
+
+        m_new = program.run_apply(st.m, seg, st.it)
+        nxt = program.active(m_new, st.m, st.it)
+        nxt = nxt.at[-1].set(False)
+        nxt = nxt & ~st.done[None, :]
+        count = jnp.sum(nxt, axis=0).astype(jnp.int32)
+        fe, ovf = B._union_volume_deg(deg, cfg, nxt)
+        new = B._advance(st, m_new, nxt, count, fe, ovf,
+                         was_mode=was_mode, cfg=cfg)
+        max_it = (program.fixed_iters if program.fixed_iters is not None
+                  else cfg.max_iters)
+        done = new.done | (new.count == 0) | (new.it >= max_it)
+        return new._replace(done=done)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ShardedBatchEngine:
+    """The batched ACC loop under shard_map on a ('data', 'model') mesh.
+
+    `placement='replicated'` query-shards Q over 'data' with the graph
+    replicated; `placement='edge_sharded'` splits the edge list over 'model'
+    (queries still shard over 'data' when it is >1). Graph views are traced
+    args placed once per `set_graph` — streaming updates swap views without
+    recompiling, exactly like the single-device pools.
+    """
+
+    def __init__(self, program: ACCProgram, g: Graph, pack: EllPack,
+                 cfg: EngineConfig, mesh, *, placement: str = "replicated",
+                 consensus: str = "global",
+                 delta: Optional[EdgeDelta] = None):
+        assert placement in ("replicated", "edge_sharded"), placement
+        assert consensus in ("global", "local"), consensus
+        if placement == "edge_sharded":
+            assert not cfg.masked_pull, (
+                "masked pull's per-slice caches assume a replicated pack")
+        self.program = program
+        self.cfg = cfg
+        self.mesh = mesh
+        self.placement = placement
+        self.consensus = consensus
+        self.n = g.n_nodes
+        self.n_edges = g.n_edges
+        self.n_query_shards = int(mesh.shape[DATA_AXIS])
+        self.n_edge_shards = int(mesh.shape[MODEL_AXIS])
+        self._specs = None          # built on first init (needs a template)
+        self._shardings = None
+        self._step_j = None
+        self._run_j = None
+        self.set_graph(g, pack, delta)
+
+    # -- device views --------------------------------------------------------
+
+    def set_graph(self, g: Graph, pack: EllPack,
+                  delta: Optional[EdgeDelta]) -> None:
+        """(Re)place the graph views on the mesh. Replicated placement
+        broadcasts all three views to every shard; edge-sharded placement
+        re-partitions the (possibly overlay-neutralized) edge list over
+        'model' and round-robins the insertion delta into per-shard slices.
+        Shapes are update-invariant, so pools swap views with no recompile
+        (an overflow rebuild changes m and pays one, as on one device)."""
+        if self._specs is not None:
+            # the step closures' in_specs were built for this delta-ness;
+            # an EdgeDelta appearing/vanishing changes the arg pytree
+            assert (delta is None) == (self.delta is None), (
+                "set_graph cannot change whether a delta overlay exists — "
+                "construct the engine with the (possibly empty) delta")
+        rep = NamedSharding(self.mesh, P())
+        put_rep = lambda t: jax.tree.map(  # noqa: E731
+            lambda x: jax.device_put(x, rep), t)
+        self.g = put_rep(g)
+        self.pack = put_rep(pack)
+        self.delta = put_rep(delta) if delta is not None else None
+        if self.placement == "edge_sharded":
+            esh = partition.shard_edges(g, self.n_edge_shards)
+            s_edges = NamedSharding(self.mesh, P(MODEL_AXIS, None))
+            self.esrc = jax.device_put(esh.src, s_edges)
+            self.edst = jax.device_put(esh.dst, s_edges)
+            self.ewgt = jax.device_put(esh.wgt, s_edges)
+            self.deg = jax.device_put(g.out.degrees(), rep)
+            if delta is not None:
+                dsh = partition.shard_delta(delta, self.n_edge_shards, self.n)
+                self.dsrc = jax.device_put(dsh.src, s_edges)
+                self.ddst = jax.device_put(dsh.dst, s_edges)
+                self.dwgt = jax.device_put(dsh.w, s_edges)
+            else:
+                self.dsrc = self.ddst = self.dwgt = None
+
+    def _views(self) -> tuple:
+        if self.placement == "replicated":
+            return (self.g, self.pack, self.delta)
+        return (self.esrc, self.edst, self.ewgt, self.deg,
+                self.dsrc, self.ddst, self.dwgt)
+
+    # -- state construction --------------------------------------------------
+
+    def init(self, sources, done=None) -> B.BatchState:
+        """Sharded initial state for Q = len(sources) lanes (Q must divide by
+        the 'data' axis). `init_batch` computes the GLOBAL consensus inputs
+        before the state is scattered, so iteration 0's decision is already
+        the single-device one."""
+        sources = jnp.asarray(sources, jnp.int32)
+        q = int(sources.shape[0])
+        assert q % self.n_query_shards == 0, (q, self.n_query_shards)
+        pack = self.pack if self.cfg.masked_pull else None
+        st = B.init_batch(self.program, self.g, self.cfg, sources,
+                          done=done, pack=pack,
+                          check_caps=self.placement != "edge_sharded")
+        if self._specs is None:
+            self._build(st)
+        return jax.device_put(st, self._shardings)
+
+    def _build(self, st: B.BatchState) -> None:
+        self._specs = state_specs(st, self.mesh)
+        self._shardings = jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self._specs,
+            is_leaf=_SPEC_LEAF)
+        if self.placement == "replicated":
+            view_specs = (
+                _replicated_specs(self.g),
+                _replicated_specs(self.pack),
+                _replicated_specs(self.delta) if self.delta is not None
+                else None,
+            )
+            body = _make_replicated_step(
+                self.program, self.cfg, self.n_edges, self.consensus)
+        else:
+            es = P(MODEL_AXIS, None)
+            dspec = es if self.dsrc is not None else None
+            view_specs = (es, es, es, P(), dspec, dspec, dspec)
+            body = _make_edge_sharded_step(
+                self.program, self.cfg, self.n, self.n_edges)
+        self._step_j = jax.jit(compat.shard_map(
+            body, mesh=self.mesh, in_specs=(self._specs,) + view_specs,
+            out_specs=self._specs))
+        self._run_j = jax.jit(compat.shard_map(
+            self._make_run(body), mesh=self.mesh,
+            in_specs=(self._specs,) + view_specs, out_specs=self._specs))
+
+    def _make_run(self, body):
+        """Fused convergence loop around the per-shard step.
+
+        Global consensus carries the psum'd live count so every shard runs
+        the same trip count (required: the body contains collectives) and the
+        iteration schedule matches the single-device fused loop. Local
+        consensus / edge shards loop on shard-local liveness — edge-shard
+        rows are bitwise-identical within a 'model' group, so their psums
+        stay in lockstep without a carried global.
+        """
+        placement, consensus = self.placement, self.consensus
+
+        def run(st, *views):
+            if placement == "replicated" and consensus == "global":
+                def cond(c):
+                    return c[1] > 0
+
+                def it(c):
+                    s = body(c[0], *views)
+                    return s, _live_count(s, (DATA_AXIS,))
+
+                st, _ = jax.lax.while_loop(
+                    cond, it, (st, _live_count(st, (DATA_AXIS,))))
+                return st
+            st = jax.lax.while_loop(
+                lambda s: jnp.any(~s.done), lambda s: body(s, *views), st)
+            return _normalize_scalars(st, (DATA_AXIS, MODEL_AXIS))
+
+        return run
+
+    # -- execution -----------------------------------------------------------
+
+    def step(self, st: B.BatchState) -> B.BatchState:
+        """One batched iteration across every shard (the scheduler's
+        host-stepped path). Requires the global controller — per-shard local
+        decisions would leave the carried consensus scalars shard-local."""
+        assert self.consensus == "global" or self.placement == "edge_sharded"
+        return self._step_j(st, *self._views())
+
+    def run(self, st: B.BatchState):
+        """Advance `st` to convergence; returns (metadata, stats)."""
+        final = self._run_j(st, *self._views())
+        stats = {
+            "iterations": jnp.max(final.it),
+            "per_query_iters": final.it,
+            "push_iters": final.push_iters,
+            "pull_iters": final.pull_iters,
+            "switches": final.switches,
+            "final_count": final.count,
+            "mode_trace": final.mode_trace,
+        }
+        return final.m, stats
+
+    @property
+    def state_shardings(self):
+        assert self._shardings is not None, "call init() first"
+        return self._shardings
+
+
+def run_sharded(program: ACCProgram, g: Graph, pack: EllPack,
+                cfg: EngineConfig, mesh, sources, *,
+                placement: str = "replicated", consensus: str = "global",
+                delta: Optional[EdgeDelta] = None):
+    """`run_batch`, sharded: Q point queries to convergence on `mesh`.
+    Returns (metadata dict — field -> global (n+1, Q) —, stats)."""
+    eng = ShardedBatchEngine(program, g, pack, cfg, mesh,
+                             placement=placement, consensus=consensus,
+                             delta=delta)
+    st0 = eng.init(sources)
+    return eng.run(st0)
+
+
+def shard_sources(sources, n_shards: int) -> list:
+    """The per-shard source slices a ('data'=n_shards) mesh assigns: shard d
+    owns the contiguous block sources[d*Q/D : (d+1)*Q/D] (jax shards the
+    trailing Q axis in contiguous blocks)."""
+    sources = np.asarray(sources)
+    q = sources.shape[0]
+    assert q % n_shards == 0, (q, n_shards)
+    per = q // n_shards
+    return [sources[d * per:(d + 1) * per] for d in range(n_shards)]

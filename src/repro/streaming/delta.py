@@ -28,8 +28,10 @@ the forward affected region of a deletion batch and the reverse-reachable
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -97,6 +99,33 @@ def _csr_expand(rp: np.ndarray, ci: np.ndarray, frontier: np.ndarray):
     return ci[starts + offs]
 
 
+@functools.partial(jax.jit, static_argnums=(4,))
+def _reach_fixpoint_device(src_e: jnp.ndarray, dst_e: jnp.ndarray,
+                           xsrc: jnp.ndarray, xdst: jnp.ndarray, n: int,
+                           seed: jnp.ndarray) -> jnp.ndarray:
+    """Device counterpart of :func:`_reach`: a batched BFS over a static
+    (src, dst) edge list plus a sentinel-padded extra-COO overlay — ALL
+    seeds expand together, one full-edge scatter-max per level,
+    `lax.while_loop` to the fixpoint. The base edge arrays are cached device
+    residents (one upload per base install); only the delta-cap-sized extras
+    change per update batch. Sentinel lanes (src == dst == n) read/write the
+    inert slot n. O(edges x reached-depth) work with zero host round-trips
+    per level, vs the host sweep's per-level python loop — the win for big
+    graphs; tiny ones keep the host path (see `StreamingGraph._sweep`)."""
+
+    def body(carry):
+        reach, _ = carry
+        hop = (jnp.zeros((n + 1,), jnp.int32)
+               .at[dst_e].max(reach[src_e], mode="drop")
+               .at[xdst].max(reach[xsrc], mode="drop"))
+        new = jnp.maximum(reach, hop.at[-1].set(0))
+        return new, jnp.any(new != reach)
+
+    reach, _ = jax.lax.while_loop(
+        lambda c: c[1], body, (seed, jnp.asarray(True)))
+    return reach
+
+
 def _reach(rp, ci, xsrc, xdst, n, seeds) -> np.ndarray:
     """(n,) bool forward-reachable set (seeds included) over CSR + extra COO
     edges. Conservative union sweep for the invalidation tests."""
@@ -129,6 +158,10 @@ class StreamingGraph:
     the ELL pack) pays a recompile.
     """
 
+    #: edge count above which 'auto' sweeps run on device (below it the
+    #: host python loop wins: device fixpoints scan EVERY edge per level)
+    DEVICE_SWEEP_MIN_EDGES = 1 << 15
+
     def __init__(
         self,
         g: Graph,
@@ -136,10 +169,13 @@ class StreamingGraph:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         split: int = DEFAULT_SPLIT,
         min_rows: int = 8,
+        sweep: str = "auto",
     ):
         assert delta_cap >= 1
+        assert sweep in ("auto", "host", "device"), sweep
         self.n = g.n_nodes
         self.delta_cap = delta_cap
+        self.sweep = sweep
         self._buckets = tuple(buckets)
         self._split = split
         self._min_rows = min_rows
@@ -167,6 +203,10 @@ class StreamingGraph:
         self._inc_w = np.asarray(g.inc.weights)
         self._dead_out = np.zeros(self._out_ci.shape[0], dtype=bool)
         self._dead_inc = np.zeros(self._inc_ci.shape[0], dtype=bool)
+        # device-sweep edge residents, uploaded lazily on first device sweep
+        # (per-edge row ids for both directions over the PRISTINE arrays —
+        # deleted edges stay in the union sweep by design)
+        self._sweep_dev: dict = {}
         # pending insertions, directed view: (src, dst, w) triples
         self._ins: list[Tuple[int, int, float]] = []
         base_pack, pos = pack_ell_with_positions(
@@ -270,14 +310,9 @@ class StreamingGraph:
 
         # sweeps run over the UNION graph (deleted edges still present in the
         # pristine base arrays; insertions as extra COO) — conservative
-        xsrc, xdst = self._ins_coo()
-        dirty_src = _reach(
-            self._inc_rp, self._inc_ci,
-            xdst, xsrc,                 # reverse sweep: flip the extra edges
-            self.n, touched)
+        dirty_src = self._sweep("reverse", touched)
         if del_heads.size:
-            affected = _reach(self._out_rp, self._out_ci, xsrc, xdst,
-                              self.n, del_heads)
+            affected = self._sweep("forward", del_heads)
         else:
             affected = np.zeros(self.n, dtype=bool)
 
@@ -295,6 +330,52 @@ class StreamingGraph:
             boundary=boundary,
         )
         return self.last_report
+
+    # -- affected-region sweeps -----------------------------------------
+
+    def _sweep(self, direction: str, seeds: np.ndarray) -> np.ndarray:
+        """Forward/reverse reachable set over the union graph, routed to the
+        host python sweep or the device batched-BFS fixpoint
+        (:func:`_reach_fixpoint_device`) by the `sweep` policy: 'auto' takes
+        the device for graphs past `DEVICE_SWEEP_MIN_EDGES` — per-level
+        host round-trips dominate there — and the host below it, where the
+        device fixpoint's every-edge-per-level scans cost more than the
+        whole python sweep. Both return identical sets
+        (tests/test_streaming.py property-checks the equivalence)."""
+        xsrc, xdst = self._ins_coo()
+        if direction == "reverse":
+            rp, ci, xs, xd = self._inc_rp, self._inc_ci, xdst, xsrc
+        else:
+            rp, ci, xs, xd = self._out_rp, self._out_ci, xsrc, xdst
+        # an OVERFLOWING batch (pending insertions past delta_cap — the
+        # sweeps run before the rebuild decision) exceeds the device path's
+        # static extra-COO pad, so it takes the host sweep; the rebuild that
+        # follows clears the overlay either way
+        on_device = (self.sweep == "device" or (
+            self.sweep == "auto"
+            and ci.shape[0] >= self.DEVICE_SWEEP_MIN_EDGES)
+        ) and xs.shape[0] <= self.delta_cap
+        if not on_device:
+            return _reach(rp, ci, xs, xd, self.n, seeds)
+        if direction not in self._sweep_dev:
+            # per-edge row ids over the pristine CSR, resident on device
+            rows = np.repeat(np.arange(self.n, dtype=np.int32),
+                             rp[1:] - rp[:-1])
+            self._sweep_dev[direction] = (
+                jnp.asarray(rows), jnp.asarray(ci.astype(np.int32)))
+        src_e, dst_e = self._sweep_dev[direction]
+        k = xs.shape[0]
+        xpad = np.full((2, self.delta_cap), self.n, dtype=np.int32)
+        xpad[0, :k] = xs
+        xpad[1, :k] = xd
+        seeds = np.asarray(seeds, dtype=np.int64)
+        seeds = seeds[(seeds >= 0) & (seeds < self.n)]
+        seed = np.zeros(self.n + 1, dtype=np.int32)
+        seed[seeds] = 1
+        reach = _reach_fixpoint_device(
+            src_e, dst_e, jnp.asarray(xpad[0]), jnp.asarray(xpad[1]),
+            self.n, jnp.asarray(seed))
+        return np.asarray(reach[:self.n]).astype(bool)
 
     # -- helpers ---------------------------------------------------------
 
@@ -367,6 +448,16 @@ class StreamingGraph:
         dst = np.concatenate([dst, xdst])
         sel = affected[dst] & ~affected[src]
         return np.unique(src[sel])
+
+    def delta_shards(self, n_shards: int):
+        """Per-shard views of the insertion overlay for edge-partitioned
+        pools (serving/sharded.py): the (cap,) COO lanes round-robined into
+        (n_shards, ceil(cap/n_shards)) slices, each inserted edge owned by
+        exactly one shard. Shapes depend only on (delta_cap, n_shards), so
+        shard views stay recompile-free across update batches too."""
+        from repro.graph.partition import shard_delta
+
+        return shard_delta(self.delta, n_shards, self.n)
 
     # -- reporting -------------------------------------------------------
 

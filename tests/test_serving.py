@@ -173,6 +173,85 @@ def test_weighted_fairness_hot_algo_cannot_starve(served_graph):
         assert np.array_equal(c.result, np.asarray(ref["dist"][:-1]))
 
 
+def test_tenant_quota_hot_tenant_exhausts_only_its_share(served_graph):
+    """Per-tenant quotas (ROADMAP): the weighted fair admission extends to
+    (tenant, algo) keys — a hot tenant flooding one algorithm fills only its
+    own share of that algorithm's queue budget; every other tenant keeps its
+    full share and its requests complete."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack, {"bfs": alg.bfs(0)}, slots=2, cfg=cfg,
+        queue_cap=8, cache_capacity=0,
+        tenant_weights={"free": 1.0, "paid": 3.0},
+    )
+    assert srv.tenant_quota == {("bfs", "free"): 2, ("bfs", "paid"): 6}
+    # hot free tenant floods: only its own share fills, the rest bounces
+    free_rids = [srv.submit("bfs", s, tenant="free") for s in range(10)]
+    assert sum(r is not None for r in free_rids) == 2
+    assert srv.rejected == 8
+    # the paid tenant still has its full share available
+    paid_rids = [srv.submit("bfs", s, tenant="paid") for s in range(6)]
+    assert all(r is not None for r in paid_rids)
+    comps = srv.drain()
+    assert len(comps) == 8                      # 2 free + 6 paid all complete
+    assert {c.tenant for c in comps} == {"free", "paid"}
+    assert sum(c.tenant == "paid" for c in comps) == 6
+    for c in comps:
+        ref = run_sequential(lambda: alg.bfs(0), g, pack, cfg, [c.source])[0]
+        assert np.array_equal(c.result, np.asarray(ref["dist"][:-1]))
+
+
+def test_tenant_quota_composes_with_algo_weights(served_graph):
+    """(tenant, algo) shares = algo share x tenant share of it."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack, {"bfs": alg.bfs(0), "sssp": alg.sssp(0)}, slots=2, cfg=cfg,
+        queue_cap=16, cache_capacity=0,
+        weights={"bfs": 1.0, "sssp": 3.0},
+        tenant_weights={"a": 1.0, "b": 1.0},
+    )
+    assert srv.queue_quota == {"bfs": 4, "sssp": 12}
+    assert srv.tenant_quota == {
+        ("bfs", "a"): 2, ("bfs", "b"): 2,
+        ("sssp", "a"): 6, ("sssp", "b"): 6,
+    }
+
+
+def test_tenant_unknown_raises(served_graph):
+    g, pack = served_graph
+    srv = GraphServer(g, pack, {"bfs": alg.bfs(0)}, slots=2,
+                      cfg=default_config(g, max_iters=64),
+                      tenant_weights={"a": 1.0})
+    with pytest.raises(KeyError):
+        srv.submit("bfs", 0, tenant="nobody")
+    # default tenant only exists when no tenant_weights were declared
+    with pytest.raises(KeyError):
+        srv.submit("bfs", 0)
+
+
+def test_tenant_round_robin_admission(served_graph):
+    """Freed lanes are dealt round-robin across tenant queues, so one deep
+    queue cannot monopolize a burst of free lanes."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack, {"bfs": alg.bfs(0)}, slots=2, cfg=cfg,
+        queue_cap=16, cache_capacity=0,
+        tenant_weights={"a": 1.0, "b": 1.0},
+    )
+    for s in range(4):
+        assert srv.submit("bfs", s, tenant="a") is not None
+    assert srv.submit("bfs", 7, tenant="b") is not None
+    srv.pump()                                   # admits one lane per tenant
+    inflight = {srv._inflight_tenants[r] for r in srv._inflight_tenants}
+    assert inflight == {"a", "b"}, (
+        "round-robin dealing must admit both tenants while a's queue is deep")
+    comps = srv.drain()
+    assert len(comps) == 5
+
+
 def test_scheduler_backpressure(served_graph):
     g, pack = served_graph
     cfg = default_config(g, max_iters=64)

@@ -1,0 +1,480 @@
+"""Sharded serving subsystem (DESIGN.md §9): placement layer, consensus
+controller, and the multi-device engines.
+
+Contracts:
+  (a) query-sharded results are BIT-IDENTICAL to the single-device batched
+      engine for BFS/SSSP/PPR — including on directed RMAT-14 and across an
+      `apply_updates` overlay swap (the acceptance graph, in a subprocess
+      with forced host devices, like test_pipeline);
+  (b) the global consensus controller's mode trace equals the single-device
+      trace (its inputs are the psum-reconstructed exact union volumes),
+      while per-shard decisions WITHOUT the reduction diverge;
+  (c) edge-partitioned pools match the single-device engine bit-exactly for
+      min programs and to FP tolerance for sum programs;
+  (d) placement plumbing: lane round-robin across shards, mesh validation,
+      placement-tagged cache keys.
+
+Single-device tests run on a trivial (1, 1) mesh — shard_map with one shard
+must already reproduce the unsharded engine exactly.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from types import SimpleNamespace
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.engine import PULL, PUSH
+from repro.graph import generators, pack_ell
+from repro.graph.csr import EdgeDelta, from_edges
+from repro.graph.partition import shard_delta
+from repro.serving import (
+    Placement,
+    ShardedAlgoPool,
+    default_config,
+    make_serving_mesh,
+    run_batch,
+    run_sharded,
+    shard_sources,
+)
+from repro.serving import batch_engine as B
+
+
+CASES = [
+    ("bfs", alg.bfs, "dist"),
+    ("sssp", alg.sssp, "dist"),
+    ("ppr", alg.ppr, "rank"),
+]
+
+
+@pytest.fixture(scope="module")
+def served_graph():
+    g = generators.rmat(9, 8, seed=3, directed=True)
+    return g, pack_ell(g.inc)
+
+
+# ---------------------------------------------------------------------------
+# (a/c) single-shard meshes: shard_map must be an exact no-op wrapper
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,factory,field", CASES)
+def test_one_shard_mesh_bitmatches_unsharded(served_graph, name, factory, field):
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    sources = [0, 7, 101, g.n_nodes - 1]
+    m_ref, st_ref = run_batch(factory(0), g, pack, cfg, sources)
+    mesh = make_serving_mesh(1, 1)
+    for consensus in ("global", "local"):
+        m_sh, st_sh = run_sharded(factory(0), g, pack, cfg, mesh, sources,
+                                  placement="replicated", consensus=consensus)
+        assert np.array_equal(np.asarray(m_ref[field]),
+                              np.asarray(m_sh[field])), (name, consensus)
+        assert np.array_equal(np.asarray(st_ref["mode_trace"]),
+                              np.asarray(st_sh["mode_trace"])), (name, consensus)
+
+    m_es, _ = run_sharded(factory(0), g, pack, cfg, mesh, sources,
+                          placement="edge_sharded")
+    a, b = np.asarray(m_ref[field]), np.asarray(m_es[field])
+    if factory(0).combiner.name == "sum":
+        # one cross-shard reassociation (COO segment-sum vs the ELL tree)
+        assert np.allclose(a, b, rtol=1e-5, atol=1e-7), name
+    else:
+        assert np.array_equal(a, b), name
+
+
+# ---------------------------------------------------------------------------
+# (b) consensus controller: psum'd global decision vs per-shard decisions
+# ---------------------------------------------------------------------------
+
+
+def _star_path_graph():
+    """Deterministic divergence workload: a hub whose frontier is heavy (its
+    out-edge volume alone trips the alpha test -> PULL) plus a long path
+    whose frontiers are single vertices (stays PUSH)."""
+    hub_edges = [(0, i) for i in range(1, 201)]
+    path_edges = [(200 + i, 201 + i) for i in range(200)]
+    edges = np.asarray(hub_edges + path_edges, dtype=np.int64)
+    g = from_edges(edges[:, 0], edges[:, 1], 402, directed=True)
+    return g, pack_ell(g.inc)
+
+
+def test_per_shard_decisions_diverge_without_psum():
+    """Shard A (path sources) and shard B (hub source) pick OPPOSITE modes
+    from their local union volumes; the psum'd global union reproduces the
+    single-device decision. This is the divergence the global controller's
+    reduction exists to prevent."""
+    g, pack = _star_path_graph()
+    cfg = default_config(g, max_iters=64)
+    program = alg.sssp(0)
+    sources_a = [200, 250]     # path heads: frontier volume 1
+    sources_b = [0, 0]         # hub: frontier volume 200 > alpha * m
+
+    st_a = B.init_batch(program, g, cfg, jnp.asarray(sources_a))
+    st_b = B.init_batch(program, g, cfg, jnp.asarray(sources_b))
+    st_all = B.init_batch(program, g, cfg, jnp.asarray(sources_a + sources_b))
+    mode_a = int(B._consensus_mode(program, cfg, g.n_edges, st_a))
+    mode_b = int(B._consensus_mode(program, cfg, g.n_edges, st_b))
+    mode_all = int(B._consensus_mode(program, cfg, g.n_edges, st_all))
+    assert mode_a == int(PUSH) and mode_b == int(PULL)
+    assert mode_a != mode_b, "local controllers must diverge on this workload"
+
+    # the global union volume (what the psum reconstructs) = the volume of
+    # the OR of the shard masks, and its decision is the single-device one
+    union_mask = jnp.concatenate([st_a.active, st_b.active], axis=1)
+    fe, ovf = B._union_volume(g.out, cfg, union_mask)
+    assert int(fe) == int(st_all.union_fe) and bool(ovf) == bool(st_all.overflow)
+    st_glob = st_a._replace(union_fe=fe, overflow=ovf)
+    assert int(B._consensus_mode(program, cfg, g.n_edges, st_glob)) == mode_all
+
+
+def test_global_union_is_not_sum_of_volumes(served_graph):
+    """Overlapping shard frontiers must not double count: the controller
+    psums union MASKS, not scalar volumes."""
+    g, pack = served_graph
+    cfg = default_config(g)
+    program = alg.bfs(0)
+    # identical sources on both "shards" -> fully overlapping frontiers
+    st = B.init_batch(program, g, cfg, jnp.asarray([5, 5]))
+    fe_shard, _ = B._union_volume(g.out, cfg, st.active[:, :1])
+    fe_union, _ = B._union_volume(g.out, cfg, st.active)
+    assert int(fe_union) == int(fe_shard), "union of identical frontiers"
+    # a sum-of-volumes reduction would report 2x
+    assert 2 * int(fe_shard) != int(fe_union) or int(fe_shard) == 0
+
+
+# ---------------------------------------------------------------------------
+# (d) placement plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_placement_coercion_and_mesh_validation():
+    assert Placement.of("replicated") == Placement("replicated", 1)
+    assert Placement.of(("edge_sharded", 4)).n_shards == 4
+    assert Placement.of(Placement("replicated", 2)).kind == "replicated"
+    with pytest.raises(AssertionError):
+        Placement("diagonal", 2)
+    mesh = make_serving_mesh(1, 1)
+    with pytest.raises(AssertionError):
+        Placement("replicated", 2).check_mesh(mesh)
+    with pytest.raises(AssertionError):
+        Placement("edge_sharded", 4).check_mesh(mesh)
+    Placement("replicated", 1).check_mesh(mesh)
+
+
+def test_free_lanes_round_robin_across_shards():
+    """Lane l lives on shard l // (slots/D); free lanes must be dealt across
+    shards so admissions spread over the mesh."""
+    pool = object.__new__(ShardedAlgoPool)
+    pool.slots = 6
+    pool.n_query_shards = 2
+    pool.lane_rid = [None] * 6
+    pool.state = SimpleNamespace(done=np.ones(6, dtype=bool))
+    # shard 0 owns lanes 0-2, shard 1 owns 3-5: alternate between them
+    assert pool.free_lanes() == [0, 3, 1, 4, 2, 5]
+    pool.lane_rid[0] = 7       # busy lane drops out, order is preserved
+    assert pool.free_lanes() == [3, 1, 4, 2, 5]
+
+
+def test_edge_sharded_sum_pools_key_cache_by_placement(served_graph):
+    """Edge-sharded PPR results differ from the single-device bit pattern by
+    one reassociation, so their cache entries must not collide with
+    replicated/single-device keys."""
+    from repro.core import algorithms as a
+    from repro.serving import GraphServer
+
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(
+        g, pack, {"ppr": a.ppr(0), "bfs": a.bfs(0)}, slots=2, cfg=cfg,
+        cache_capacity=8, result_fields={"ppr": "rank"},
+        mesh=mesh, placements={"ppr": ("edge_sharded", 1),
+                               "bfs": ("edge_sharded", 1)},
+    )
+    assert srv.pools["ppr"].cache_params == ((("placement", "edge_sharded"),))
+    assert srv.pools["bfs"].cache_params == ()     # min programs are bit-exact
+    rid = srv.submit("ppr", 3)
+    srv.drain()
+    keys = list(srv.cache._entries)
+    assert any(k[1] == "ppr" and k[3] == (("placement", "edge_sharded"),)
+               for k in keys), keys
+    # and the tagged key is HIT by a repeat through the same pool
+    rid2 = srv.submit("ppr", 3)
+    comp = [c for c in srv.drain() if c.rid == rid2][0]
+    assert comp.from_cache
+    assert rid != rid2
+
+
+def test_shard_delta_round_robin_ownership():
+    n = 100
+    src = np.asarray([1, 2, 3, n, n], np.int32)
+    dst = np.asarray([4, 5, 6, n, n], np.int32)
+    w = np.asarray([1.0, 2.0, 3.0, 0.0, 0.0], np.float32)
+    d = EdgeDelta(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+    sh = shard_delta(d, 2, n)
+    s = np.asarray(sh.src)
+    assert s.shape == (2, 3)
+    # each real edge appears on exactly one shard; the rest is sentinel
+    flat = s.reshape(-1)
+    for v in (1, 2, 3):
+        assert (flat == v).sum() == 1
+    assert (flat == n).sum() == 3
+    # round-robin: shard 0 gets lanes 0,2,4 -> sources 1,3,sentinel
+    assert list(s[0]) == [1, 3, n]
+    assert list(s[1]) == [2, n, n]
+
+
+def test_streaming_delta_shards_keep_static_shapes(served_graph):
+    """Per-shard delta views must be recompile-free across update batches:
+    shapes depend only on (delta_cap, n_shards)."""
+    from repro.streaming import StreamingGraph
+
+    g, _ = served_graph
+    sg = StreamingGraph(g, delta_cap=12)
+    shapes0 = jnp.asarray(sg.delta_shards(3).src).shape
+    sg.apply(inserts=[(1, 2), (3, 4), (5, 6)])
+    sh = sg.delta_shards(3)
+    assert jnp.asarray(sh.src).shape == shapes0 == (3, 4)
+    flat = np.asarray(sh.src).reshape(-1)
+    assert (flat != g.n_nodes).sum() == 3     # each insert on exactly 1 shard
+
+
+def test_shard_sources_blocks():
+    srcs = np.arange(8)
+    blocks = shard_sources(srcs, 4)
+    assert [list(b) for b in blocks] == [[0, 1], [2, 3], [4, 5], [6, 7]]
+    with pytest.raises(AssertionError):
+        shard_sources(srcs, 3)
+
+
+# ---------------------------------------------------------------------------
+# multi-device subprocess suites (forced host devices, test_pipeline pattern)
+# ---------------------------------------------------------------------------
+
+
+def _run_forced(script: str, devices: int = 8, timeout: int = 1200) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+@pytest.mark.slow
+def test_query_sharded_rmat14_bit_identity_across_update():
+    """THE acceptance contract: on directed RMAT-14, query-sharded pool
+    results are bit-identical to the single-device batched engine for
+    BFS/SSSP/PPR — fixed batches AND a full server round-trip across an
+    `apply_updates` overlay swap."""
+    _run_forced(textwrap.dedent("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core import algorithms as alg
+        from repro.graph import generators, pack_ell
+        from repro.serving import (GraphServer, Placement, default_config,
+                                   make_serving_mesh, run_batch, run_sharded)
+
+        g = generators.rmat(14, 8, seed=2, directed=True)
+        pack = pack_ell(g.inc)
+        cfg = default_config(g, max_iters=256)
+        rng = np.random.default_rng(0)
+        sources = rng.integers(0, g.n_nodes, size=8)
+        mesh = make_serving_mesh(2, 1)
+
+        for name, fac, field in [("bfs", alg.bfs, "dist"),
+                                 ("sssp", alg.sssp, "dist"),
+                                 ("ppr", alg.ppr, "rank")]:
+            m_ref, st_ref = run_batch(fac(0), g, pack, cfg, sources)
+            m_sh, st_sh = run_sharded(fac(0), g, pack, cfg, mesh, sources)
+            assert np.array_equal(np.asarray(m_ref[field]),
+                                  np.asarray(m_sh[field])), name
+            assert np.array_equal(np.asarray(st_ref["mode_trace"]),
+                                  np.asarray(st_sh["mode_trace"])), name
+
+        def mk(mesh=None, placements=None):
+            return GraphServer(
+                g, pack, {"bfs": alg.bfs(0), "ppr": alg.ppr(0)}, slots=4,
+                cfg=cfg, cache_capacity=32, result_fields={"ppr": "rank"},
+                delta_cap=64, mesh=mesh, placements=placements)
+
+        srv = mk(mesh, {"bfs": Placement("replicated", 2),
+                        "ppr": Placement("replicated", 2)})
+        ref = mk()
+        reqs = ([("bfs", int(s)) for s in sources[:4]]
+                + [("ppr", int(s)) for s in sources[:4]])
+        for a, s in reqs:
+            assert srv.submit(a, s) is not None
+            assert ref.submit(a, s) is not None
+        c1 = {(c.algo, c.source): c.result for c in srv.drain()}
+        c2 = {(c.algo, c.source): c.result for c in ref.drain()}
+        for k in c2:
+            assert np.array_equal(c1[k], c2[k]), ("pre-update", k)
+
+        ins = [(int(sources[0]), int(sources[1])), (11, 13), (99, 7)]
+        dels = [(int(sources[2]), int(sources[3]))]
+        r1 = srv.apply_updates(inserts=ins, deletes=dels)
+        r2 = ref.apply_updates(inserts=ins, deletes=dels)
+        assert r1["version"] == r2["version"]
+        for a, s in reqs:
+            srv.submit(a, s); ref.submit(a, s)
+        c1 = {(c.algo, c.source): c.result for c in srv.drain()}
+        c2 = {(c.algo, c.source): c.result for c in ref.drain()}
+        for k in c2:
+            assert np.array_equal(c1[k], c2[k]), ("post-update", k)
+        print("rmat14 sharded bit-identity OK")
+    """), devices=8)
+
+
+@pytest.mark.slow
+def test_global_consensus_trace_matches_single_device_rmat12():
+    """Regression for the psum reduction: the sharded engine's consensus
+    mode trace equals the single-device batched trace on RMAT-12 (exact
+    global union volumes -> same pure function -> same mode sequence),
+    while shard-local controllers (consensus='local') diverge from it on a
+    mixed hub/path workload."""
+    _run_forced(textwrap.dedent("""
+        import numpy as np
+        from repro.core import algorithms as alg
+        from repro.graph import generators, pack_ell
+        from repro.graph.csr import from_edges
+        from repro.serving import (default_config, make_serving_mesh,
+                                   run_batch, run_sharded)
+
+        g = generators.rmat(12, 8, seed=5, directed=True)
+        pack = pack_ell(g.inc)
+        cfg = default_config(g, max_iters=256)
+        rng = np.random.default_rng(3)
+        sources = rng.integers(0, g.n_nodes, size=8)
+        mesh = make_serving_mesh(2, 1)
+
+        m_ref, st_ref = run_batch(alg.sssp(0), g, pack, cfg, sources)
+        m_sh, st_sh = run_sharded(alg.sssp(0), g, pack, cfg, mesh, sources,
+                                  consensus="global")
+        assert np.array_equal(np.asarray(st_ref["mode_trace"]),
+                              np.asarray(st_sh["mode_trace"])), \
+            "global controller must reproduce the single-device mode trace"
+        assert np.array_equal(np.asarray(m_ref["dist"]),
+                              np.asarray(m_sh["dist"]))
+
+        # without the reduction: a SUSTAINED heavy shard (a broom: a chain
+        # of 10 hubs, each fanning out 200 leaves, so the hub query's
+        # frontier volume exceeds the edge budget for ten iterations) holds
+        # its shard in PULL while the path shard's volume-1 frontiers want
+        # PUSH -> local traces diverge from the single-device trace (results
+        # stay bit-identical by min-idempotence; only the SCHEDULE differs)
+        from repro.core.engine import EngineConfig
+        broom = []
+        for i in range(10):
+            broom.append((i, i + 1))
+            broom += [(i, 2000 + 200 * i + j) for j in range(200)]
+        path = [(1000 + i, 1001 + i) for i in range(200)]
+        e = np.asarray(broom + path, dtype=np.int64)
+        n2 = 4001
+        g2 = from_edges(e[:, 0], e[:, 1], n2, directed=True)
+        pack2 = pack_ell(g2.inc)
+        # edge budget below the broom's 201-edge frontier volume -> the
+        # heavy test trips on fe > edge_cap for ten straight iterations
+        cfg2 = EngineConfig(frontier_cap=n2, edge_cap=128, max_iters=512)
+        srcs2 = [1000, 1000, 0, 0]         # shard 0: path, shard 1: broom
+        m_r2, st_r2 = run_batch(alg.sssp(0), g2, pack2, cfg2, srcs2)
+        m_l2, st_l2 = run_sharded(alg.sssp(0), g2, pack2, cfg2, mesh, srcs2,
+                                  consensus="local")
+        tr_r = np.asarray(st_r2["mode_trace"])
+        tr_l = np.asarray(st_l2["mode_trace"])
+        assert not np.array_equal(tr_r, tr_l), \
+            "local controllers should diverge on the broom/path workload"
+        # specifically: the path lanes' early iterations pull under the
+        # global union (the broom keeps it heavy) but push locally
+        assert tr_r[0, 1] == 1 and tr_l[0, 1] == 0, (tr_r[0, :6], tr_l[0, :6])
+        assert np.array_equal(np.asarray(m_r2["dist"]),
+                              np.asarray(m_l2["dist"])), \
+            "results must stay bit-identical even with divergent schedules"
+        print("consensus trace regression OK")
+    """), devices=8)
+
+
+@pytest.mark.slow
+def test_edge_sharded_multi_device_with_updates():
+    """Edge partition over a real 'model' axis: min programs bit-exact, sum
+    to tolerance, and the per-shard delta slices absorb a streaming update
+    through an edge-sharded server."""
+    _run_forced(textwrap.dedent("""
+        import numpy as np
+        from repro.core import algorithms as alg
+        from repro.graph import generators, pack_ell
+        from repro.serving import (GraphServer, default_config,
+                                   make_serving_mesh, run_batch, run_sharded)
+
+        g = generators.rmat(10, 8, seed=4, directed=True)
+        pack = pack_ell(g.inc)
+        cfg = default_config(g, max_iters=256)
+        rng = np.random.default_rng(0)
+        sources = rng.integers(0, g.n_nodes, size=4)
+        mesh = make_serving_mesh(1, 4)
+
+        for name, fac, field in [("bfs", alg.bfs, "dist"),
+                                 ("sssp", alg.sssp, "dist"),
+                                 ("ppr", alg.ppr, "rank")]:
+            m_ref, _ = run_batch(fac(0), g, pack, cfg, sources)
+            m_es, _ = run_sharded(fac(0), g, pack, cfg, mesh, sources,
+                                  placement="edge_sharded")
+            a, b = np.asarray(m_ref[field]), np.asarray(m_es[field])
+            if field == "rank":
+                assert np.allclose(a, b, rtol=1e-5, atol=1e-7), name
+            else:
+                assert np.array_equal(a, b), name
+
+        srv = GraphServer(
+            g, pack, {"sssp": alg.sssp(0)}, slots=2, cfg=cfg,
+            cache_capacity=16, delta_cap=32, mesh=mesh,
+            placements={"sssp": ("edge_sharded", 4)})
+        ref = GraphServer(
+            g, pack, {"sssp": alg.sssp(0)}, slots=2, cfg=cfg,
+            cache_capacity=16, delta_cap=32)
+        for s in sources:
+            srv.submit("sssp", int(s)); ref.submit("sssp", int(s))
+        srv.drain(); ref.drain()
+        srv.apply_updates(inserts=[(1, 2), (3, 4)], deletes=[(5, 6)])
+        ref.apply_updates(inserts=[(1, 2), (3, 4)], deletes=[(5, 6)])
+        for s in sources:
+            srv.submit("sssp", int(s)); ref.submit("sssp", int(s))
+        c1 = {c.source: c.result for c in srv.drain() if not c.from_cache}
+        c2 = {c.source: c.result for c in ref.drain() if not c.from_cache}
+        for k in c2:
+            assert np.array_equal(c1[k], c2[k]), k
+        print("edge-sharded multi-device OK")
+    """), devices=8)
+
+
+def test_edge_sharded_push_only_program_skips_capacity_assert(served_graph):
+    """REGRESSION: the edge-partitioned scan is dense over each shard (no
+    frontier/edge budgets, nothing truncates), so push-only programs must
+    run under lean caps that would trip the single-device no-overflow
+    assertion — and still match the full-cap single-device result."""
+    import dataclasses as dc
+
+    from repro.core.engine import EngineConfig
+
+    g, pack = served_graph
+    push_bfs = dc.replace(alg.bfs(0), modes="push")
+    lean = EngineConfig(frontier_cap=g.n_nodes, edge_cap=64, max_iters=64)
+    full = EngineConfig(frontier_cap=g.n_nodes, edge_cap=g.n_edges,
+                        max_iters=64)
+    mesh = make_serving_mesh(1, 1)
+    sources = [0, 7, 101]
+    with pytest.raises(AssertionError):
+        run_batch(push_bfs, g, pack, lean, sources)      # single device trips
+    m_es, _ = run_sharded(push_bfs, g, pack, lean, mesh, sources,
+                          placement="edge_sharded")
+    m_ref, _ = run_batch(push_bfs, g, pack, full, sources)
+    assert np.array_equal(np.asarray(m_ref["dist"]), np.asarray(m_es["dist"]))

@@ -297,3 +297,120 @@ def test_masked_pull(served_graph_masked, name, factory, field):
 def served_graph_masked():
     g = generators.rmat(9, 8, seed=3)
     return g, pack_ell(g.inc)
+
+
+# ---------------------------------------------------------------------------
+# (h) device affected-region sweeps == host sweeps (streaming round 2b)
+# ---------------------------------------------------------------------------
+
+
+def test_reach_sweeps_device_equals_host_property():
+    """PROPERTY: the on-device batched-BFS fixpoint sweeps produce exactly
+    the host python sweeps' dirty-source and affected-region sets, across
+    random graphs, random insert+delete batches, and chained batches."""
+    rng = np.random.default_rng(42)
+    for trial in range(4):
+        directed = bool(trial % 2)
+        g = generators.rmat(8 + trial % 2, 6, seed=trial, directed=directed)
+        sg_h = StreamingGraph(g, delta_cap=64, sweep="host")
+        sg_d = StreamingGraph(g, delta_cap=64, sweep="device")
+        for _batch in range(3):
+            ins, dels = _rand_updates(rng, sg_h.graph, n_ins=7, n_del=4)
+            rh = sg_h.apply(ins, dels)
+            rd = sg_d.apply(ins, dels)
+            assert np.array_equal(rh.dirty_src, rd.dirty_src), (
+                trial, _batch, "dirty_src")
+            assert np.array_equal(rh.affected_del, rd.affected_del), (
+                trial, _batch, "affected_del")
+            assert np.array_equal(rh.boundary, rd.boundary)
+
+
+def test_reach_sweep_auto_routes_by_size(rmat_graph):
+    """'auto' keeps small graphs on the host path and big ones on device."""
+    sg = StreamingGraph(rmat_graph, delta_cap=8)      # scale-9: host regime
+    assert rmat_graph.n_edges < sg.DEVICE_SWEEP_MIN_EDGES
+    sg.apply(inserts=[(1, 2)])
+    assert not sg._sweep_dev, "small graph must not upload sweep residents"
+    sg.sweep = "device"
+    sg.apply(inserts=[(3, 4)])
+    assert "reverse" in sg._sweep_dev
+
+
+# ---------------------------------------------------------------------------
+# (i) delta-aware single-query engine (ROADMAP item): solo push sees the
+#     insertion COO without a rebuild
+# ---------------------------------------------------------------------------
+
+
+def test_solo_engine_delta_bitwise_vs_rebuild():
+    """`core.engine.run(..., delta=sg.delta)` over the overlay views is
+    BIT-IDENTICAL to a from-scratch run on the compacted (rebuilt) graph for
+    the monotone programs — insertions reach the solo push path now, not
+    just the batched one."""
+    from repro.core import engine as E
+    from repro.graph.csr import from_edges
+
+    g = generators.rmat(10, 8, seed=7, directed=True)
+    rng = np.random.default_rng(1)
+    ins, dels = _rand_updates(rng, g, n_ins=12, n_del=6)
+
+    sg = StreamingGraph(g, delta_cap=64)
+    sg.apply(ins, dels)
+    # reference: fold live base + pending insertions into a fresh graph
+    live = ~sg._dead_out
+    src = sg._base_src_host()[live]
+    dst = sg._out_ci[live]
+    w = sg._out_w[live]
+    if sg._ins:
+        extra = np.asarray(sg._ins, dtype=np.float64).reshape(-1, 3)
+        src = np.concatenate([src, extra[:, 0].astype(np.int64)])
+        dst = np.concatenate([dst, extra[:, 1].astype(np.int64)])
+        w = np.concatenate([w, extra[:, 2].astype(np.float32)])
+    g_ref = from_edges(src, dst, g.n_nodes, w, directed=True, dedupe=False)
+    pack_ref = pack_ell(g_ref.inc)
+
+    cfg = default_config(g, max_iters=256)
+    for name, factory, field in CASES[:2]:        # monotone: bfs, sssp
+        for source in (0, 17, 333, g.n_nodes - 1):
+            m_ov, _ = E.run(factory(0), sg.graph, sg.pack, cfg,
+                            delta=sg.delta, source=jnp.int32(source))
+            m_rb, _ = E.run(factory(0), g_ref, pack_ref, cfg,
+                            source=jnp.int32(source))
+            assert np.array_equal(np.asarray(m_ov[field]),
+                                  np.asarray(m_rb[field])), (name, source)
+
+
+def test_solo_engine_delta_matches_batched_overlay(rmat_graph):
+    """Solo-with-delta and batched-with-delta agree lane for lane (the two
+    engines read the same overlay views)."""
+    from repro.core import engine as E
+
+    g = rmat_graph
+    sg = StreamingGraph(g, delta_cap=32)
+    sg.apply(inserts=[(0, 9), (9, 41), (200, 3)])
+    cfg = default_config(g, max_iters=64)
+    sources = [0, 9, 200]
+    m_b, _ = run_batch(alg.bfs(0), sg.graph, sg.pack, cfg, sources,
+                       delta=sg.delta)
+    for lane, s in enumerate(sources):
+        m_s, _ = E.run(alg.bfs(0), sg.graph, sg.pack, cfg, delta=sg.delta,
+                       source=jnp.int32(s))
+        assert np.array_equal(
+            np.asarray(query_result(m_b, "dist", lane)),
+            np.asarray(m_s["dist"][:-1])), s
+
+
+def test_device_sweep_survives_overflow_batch():
+    """REGRESSION: the sweeps run BEFORE the overflow-rebuild decision, so a
+    batch pushing pending insertions past delta_cap must route around the
+    device path's static extra-COO pad (host fallback), not crash — and the
+    report must equal the host-swept one."""
+    g = generators.rmat(9, 8, seed=11, directed=True)
+    ins = [(i, (3 * i + 7) % g.n_nodes) for i in range(1, 9)]   # 8 > cap 4
+    sg_d = StreamingGraph(g, delta_cap=4, sweep="device")
+    sg_h = StreamingGraph(g, delta_cap=4, sweep="host")
+    rd = sg_d.apply(inserts=ins)
+    rh = sg_h.apply(inserts=ins)
+    assert rd.rebuild and rh.rebuild
+    assert np.array_equal(rd.dirty_src, rh.dirty_src)
+    assert sg_d.stats()["rebuilds"] == 1
