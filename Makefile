@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded bench-serving bench-streaming bench-sharded bench-schema
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-ppr bench-serving bench-streaming bench-sharded bench-ppr bench-schema
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -21,9 +21,20 @@ smoke-sharded:
 		python -m repro.launch.serve_graph --requests 8 --slots 8 \
 		--scale 8 --mesh 8x1
 
+# residual-push PPR smoke through sharded pools on a forced 8-device mesh
+smoke-ppr:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+		python -m repro.launch.serve_graph --requests 6 --slots 8 \
+		--scale 8 --mesh 8x1 --algos ppr_delta
+
 # full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
 bench-serving:
 	PYTHONPATH=src python benchmarks/serving_bench.py
+
+# residual-push PPR benchmark: ppr_delta vs dense/masked pull + streaming
+# resume-vs-rerun (writes BENCH_ppr.json)
+bench-ppr:
+	PYTHONPATH=src python benchmarks/serving_bench.py --ppr
 
 # sharded q/s-vs-shard-count benchmark (writes BENCH_sharded.json)
 bench-sharded:

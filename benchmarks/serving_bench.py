@@ -11,6 +11,14 @@ the vertex-major layout amortizes one shared edge/index stream across the
 whole query batch (SpMV -> SpMM), so per-query cost falls as Q grows.
 
   PYTHONPATH=src python benchmarks/serving_bench.py [--small] [--out PATH]
+
+`--ppr` instead runs the RESIDUAL-push PPR benchmark (DESIGN.md §10) and
+emits BENCH_ppr.json: batched `ppr_delta` vs the dense-pull and masked-pull
+`ppr` baselines at the max batch size (the frontier is the above-threshold
+residual set, so the consensus controller keeps iterations push-sparse),
+plus the streaming incremental-resume vs dirty-source-rerun figure.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --ppr [--small]
 """
 
 from __future__ import annotations
@@ -48,6 +56,109 @@ def bench_batch(program, g, pack, cfg, sources, repeats=3):
     return float(np.median(ts))
 
 
+def bench_ppr(args):
+    """Residual-push PPR: batched ppr_delta vs the dense/masked pull `ppr`
+    baselines, plus streaming incremental-resume vs dirty-source rerun.
+    Writes BENCH_ppr.json (linted by scripts/bench_schema.py's glob)."""
+    import jax.numpy as jnp
+
+    from repro.streaming import StreamingGraph, incremental_batch
+
+    scale = args.scale if args.scale is not None else (12 if args.small else 16)
+    g = generators.rmat(scale, args.edge_factor, seed=1)
+    pack = pack_ell(g.inc)
+    n = g.n_nodes
+    cfg = default_config(g)
+    q = max(int(b) for b in args.batches.split(","))
+    rng = np.random.default_rng(7)
+    sources = rng.integers(0, n, size=q).tolist()
+    print(f"[ppr_bench] rmat scale={scale} ef={args.edge_factor}: "
+          f"{n} nodes, {g.n_edges} directed edges; Q={q}")
+
+    cfg_masked = dataclasses.replace(cfg, masked_pull=True)
+    dense_s = bench_batch(alg.ppr(0), g, pack, cfg, sources,
+                          repeats=args.repeats)
+    masked_s = bench_batch(alg.ppr(0), g, pack, cfg_masked, sources,
+                           repeats=args.repeats)
+    delta_s = bench_batch(alg.ppr_delta(0), g, pack, cfg, sources,
+                          repeats=args.repeats)
+    # the intended pairing: residual frontier + EXACT masked pull (§10) —
+    # the hot mask is the sparse changed-primary set, so cached partials
+    # serve almost every row on the pull iterations
+    deltam_s = bench_batch(alg.ppr_delta(0), g, pack, cfg_masked, sources,
+                           repeats=args.repeats)
+    print(f"[ppr_bench] Q={q}: dense {dense_s:.3f}s, masked {masked_s:.3f}s "
+          f"({dense_s / masked_s:.2f}x), ppr_delta {delta_s:.3f}s "
+          f"({dense_s / delta_s:.2f}x vs dense), ppr_delta+masked "
+          f"{deltam_s:.3f}s ({dense_s / deltam_s:.2f}x vs dense, "
+          f"{masked_s / deltam_s:.2f}x vs masked)")
+
+    # streaming: residual resume vs the old dirty-source rerun, after one
+    # random insert+delete batch over the same sources
+    sg = StreamingGraph(g, delta_cap=256)
+    prog = alg.ppr_delta(0)
+    prev, _ = run_batch(prog, sg.graph, sg.pack, cfg, sources, delta=sg.delta)
+    jax.block_until_ready(prev)
+    ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+           for _ in range(8)]
+    eidx = rng.integers(0, g.n_edges, size=8)
+    dels = [(int(g.out.src_idx[i]), int(g.out.col_idx[i])) for i in eidx]
+    sg.apply(inserts=ins, deletes=dels)
+    # warmup both paths (compile), then time
+    m_inc, _ = incremental_batch(prog, sg, cfg, sources, prev)
+    jax.block_until_ready(m_inc)
+    inc_ts, rerun_ts = [], []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        m_inc, info = incremental_batch(prog, sg, cfg, sources, prev)
+        jax.block_until_ready(m_inc)
+        inc_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        m_rr, _ = run_batch(prog, sg.graph, sg.pack, cfg, sources,
+                            delta=sg.delta)
+        jax.block_until_ready(m_rr)
+        rerun_ts.append(time.perf_counter() - t0)
+    inc_s = float(np.median(inc_ts))
+    rerun_s = float(np.median(rerun_ts))
+    err = float(jnp.max(jnp.abs(m_inc["rank"] - m_rr["rank"])))
+    print(f"[ppr_bench] streaming: resume {inc_s:.3f}s vs rerun "
+          f"{rerun_s:.3f}s -> {rerun_s / inc_s:.2f}x (max diff {err:.1e})")
+
+    record = {
+        "graph": {"family": "rmat", "scale": scale,
+                  "edge_factor": args.edge_factor,
+                  "n_nodes": n, "n_edges": int(g.n_edges)},
+        "batch": q,
+        "ppr_dense_seconds": dense_s,
+        "ppr_masked_seconds": masked_s,
+        "ppr_delta_seconds": delta_s,
+        "ppr_delta_masked_seconds": deltam_s,
+        "masked_speedup_vs_dense": dense_s / masked_s,
+        "delta_speedup_vs_dense": dense_s / delta_s,
+        "delta_masked_speedup_vs_dense": dense_s / deltam_s,
+        "delta_speedup_vs_masked": masked_s / delta_s,
+        # best ppr_delta variant (plain or +masked) vs the masked baseline —
+        # distinct key so every ratio stays derivable from this record
+        "best_delta_speedup_vs_masked": masked_s / min(delta_s, deltam_s),
+        "streaming": {
+            "resume_seconds": inc_s,
+            "rerun_seconds": rerun_s,
+            "speedup": rerun_s / inc_s,
+            "resumed": int(info.get("resumed", q)),
+            "max_abs_diff_vs_rerun": err,
+        },
+        "pass_delta_beats_masked": bool(min(delta_s, deltam_s) < masked_s),
+        "pass_resume_beats_rerun": bool(inc_s < rerun_s),
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    ok = record["pass_delta_beats_masked"] and record["pass_resume_beats_rerun"]
+    print(f"[ppr_bench] wrote {args.out}; "
+          f"delta vs masked {masked_s / min(delta_s, deltam_s):.2f}x, "
+          f"resume vs rerun {rerun_s / inc_s:.2f}x (pass: {ok})")
+    return 0 if ok else 1
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--small", action="store_true",
@@ -56,8 +167,16 @@ def main(argv=None):
     ap.add_argument("--edge-factor", type=int, default=4)
     ap.add_argument("--batches", default="1,8,64")
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--ppr", action="store_true",
+                    help="run the residual-push PPR benchmark instead "
+                         "(writes BENCH_ppr.json)")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.ppr:
+        args.out = args.out or "BENCH_ppr.json"
+        return bench_ppr(args)
+    args.out = args.out or "BENCH_serving.json"
 
     scale = args.scale if args.scale is not None else (12 if args.small else 16)
     g = generators.rmat(scale, args.edge_factor, seed=1)

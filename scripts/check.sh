@@ -16,7 +16,9 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "== tier-1: pytest =="
-python -m pytest -x -q
+# --durations keeps the property suites (test_ppr_delta & co) honest about
+# their runtime budget
+python -m pytest -x -q --durations=10
 
 echo "== serving smoke =="
 python -m repro.launch.serve_graph --requests 8 --slots 4
@@ -33,7 +35,32 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.serve_graph --requests 6 --slots 4 --scale 8 \
     --mesh 2x4 --placement edge_sharded
 
-echo "== bench schema =="
+echo "== ppr residual smoke (solo + batched + sharded 8-device mesh) =="
+python - <<'PY'
+# solo vs batched ppr_delta agreement + residual invariant on a small graph
+import numpy as np, jax.numpy as jnp
+from repro.core import algorithms as alg, engine as E
+from repro.graph import generators, pack_ell
+from repro.serving import default_config, query_result, run_batch
+
+g = generators.rmat(8, 4, seed=1, directed=True)
+pack = pack_ell(g.inc)
+cfg = default_config(g, max_iters=256)
+sources = [0, 17, 101, g.n_nodes - 1]
+mb, _ = run_batch(alg.ppr_delta(0), g, pack, cfg, sources)
+assert (np.abs(np.asarray(mb["resid"]))
+        <= 1e-5 * np.asarray(mb["deg"]) + 1e-9).all()
+for lane, s in enumerate(sources):
+    ms, _ = E.run(alg.ppr_delta(s), g, pack, cfg, source=jnp.int32(s))
+    a = np.asarray(query_result(mb, "rank", lane))
+    assert np.abs(a - np.asarray(ms["rank"][:-1])).max() < 1e-6, s
+print("[check] ppr_delta solo+batched smoke OK")
+PY
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.serve_graph --requests 6 --slots 8 --scale 8 \
+    --mesh 8x1 --algos ppr_delta
+
+echo "== bench schema (BENCH_*.json incl. BENCH_ppr.json) =="
 python scripts/bench_schema.py
 
 echo "== check OK =="

@@ -158,6 +158,21 @@ class ACCProgram:
     modes: str = "both"
     #: fixed iteration budget (None = run to empty frontier)
     fixed_iters: Optional[int] = None
+    #: declarative key/value pairs engine layers consult (tuple of pairs so
+    #: the program stays hashable for jit static args). Known keys:
+    #:   'kind' = 'residual' — residual-push program: metadata carries an
+    #:     (estimate, residual) split, Active thresholds the residual, and
+    #:     the streaming layer resumes the fixpoint from corrected residuals
+    #:     (Maiter-style) instead of re-running dirty sources;
+    #:   'damping', 'tol' — the scalars that refresh math needs;
+    #:   'estimate', 'residual' — metadata field names of the split.
+    params: tuple = ()
+
+    def param(self, key: str, default=None):
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
 
     def default_apply(self, m: Meta, seg: jnp.ndarray, it: jnp.ndarray) -> Meta:
         del it

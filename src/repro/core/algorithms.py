@@ -196,6 +196,76 @@ def ppr(src: int = 0, damping: float = 0.85, tol: float = 1e-5,
     )
 
 
+def ppr_delta(src: int = 0, damping: float = 0.85, tol: float = 1e-5,
+              max_iters: int = 256) -> ACCProgram:
+    """Residual-push personalized PageRank (Andersen-Chung-Lang / Maiter
+    style) as a first-class ACC program.
+
+    State is the (estimate, residual) split: `rank` is settled probability
+    mass, `resid` is mass still to be propagated. `Active` selects vertices
+    whose residual clears the degree-scaled threshold `tol * deg`; an active
+    vertex settles `(1-damping) * resid` into its rank and pushes
+    `damping * resid / deg` along each out-edge (`Combine` = SUM into
+    neighbor residuals); convergence is "no vertex active". The frontier is
+    therefore EXACTLY the above-threshold residual set — `modes='both'`, so
+    the JIT consensus controller and push/pull kernel fusion apply unchanged,
+    and the serving engine's masked pull is exact rather than tol-bounded
+    (`send` only changes for vertices whose activity changed, which the
+    changed-primary hot mask captures; DESIGN.md §10).
+
+    Converges to the SAME vector as the pull-mode power iteration `ppr`
+    (rank = (1-d)·Σ_k d^k M^k·pref, dangling mass dropped), to within the
+    residual invariant |resid| ≤ tol·deg. Residuals may go NEGATIVE only
+    under the streaming refresh path (an edge deletion retracts mass), hence
+    the |·| in Active; cold runs keep resid ≥ 0.
+    """
+
+    def _ta(m: Meta):
+        return tol * m["deg"]
+
+    def init(n, deg, source=src):
+        pref = jnp.zeros((n + 1,), jnp.float32).at[source].set(1.0)
+        rank = jnp.zeros((n + 1,), jnp.float32)
+        safe = jnp.maximum(deg, 1).astype(jnp.float32)
+        degf = jnp.concatenate([safe, jnp.ones((1,), jnp.float32)])
+        resid = pref
+        send = jnp.where(jnp.abs(resid) > tol * degf,
+                         damping * resid / degf, 0.0)
+        return (
+            {"rank": rank, "resid": resid, "send": send, "deg": degf},
+            jnp.asarray([source]),
+        )
+
+    def compute(sender: Meta, w, receiver: Meta):
+        del w, receiver
+        return sender["send"]
+
+    def apply(m: Meta, seg: jnp.ndarray, it):
+        del it
+        ta = _ta(m)
+        # active vertices settle (1-d)·resid into rank and pushed d·resid
+        # out (their `send` was nonzero); inactive keep their residual.
+        act = jnp.abs(m["resid"]) > ta
+        rank = m["rank"] + jnp.where(act, (1.0 - damping) * m["resid"], 0.0)
+        resid = jnp.where(act, 0.0, m["resid"]) + seg
+        # zero send below threshold so pull-mode gathers match the
+        # push-mode frontier semantics exactly
+        send = jnp.where(jnp.abs(resid) > ta, damping * resid / m["deg"], 0.0)
+        return {"rank": rank, "resid": resid, "send": send, "deg": m["deg"]}
+
+    def active(new: Meta, old: Meta, it):
+        del old, it
+        return jnp.abs(new["resid"]) > _ta(new)
+
+    return ACCProgram(
+        name="ppr_delta", combiner=SUM_AGG, init=init, compute=compute,
+        active=active, apply=apply, primary="send", fixed_iters=max_iters,
+        params=(("kind", "residual"), ("damping", float(damping)),
+                ("tol", float(tol)), ("estimate", "rank"),
+                ("residual", "resid")),
+    )
+
+
 def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 128) -> ACCProgram:
     """Delta/residual PageRank: the push phase the paper switches to "at the
     end ... because the majority of the vertices are stable".  Metadata keeps
@@ -390,6 +460,8 @@ ALL = {
     "sssp": sssp,
     "wcc": wcc,
     "pagerank": pagerank,
+    "ppr": ppr,
+    "ppr_delta": ppr_delta,
     "pagerank_delta": pagerank_delta,
     "kcore": kcore,
     "bp": belief_propagation,

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import frontier as F
 from repro.core.acc import ACCProgram, Meta, gather_meta
-from repro.graph.csr import CSR, EdgeDelta, Graph
+from repro.graph.csr import CSR, EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 
 PUSH, PULL = jnp.int32(0), jnp.int32(1)
@@ -308,9 +308,13 @@ def _policy(program: ACCProgram, cfg: EngineConfig, n_edges: int, st: EngineStat
 # ---------------------------------------------------------------------------
 
 
-def init_state(program: ACCProgram, g: Graph, cfg: EngineConfig, **init_kw) -> EngineState:
+def init_state(program: ACCProgram, g: Graph, cfg: EngineConfig,
+               delta: Optional[EdgeDelta] = None, **init_kw) -> EngineState:
     n = g.n_nodes
-    deg = g.out.degrees()
+    # live degrees, not row_ptr diffs: on a streaming overlay the degree a
+    # normalizing program (PageRank family) divides by must count the edges
+    # actually traversed — deletion-neutralized slots out, delta COO in
+    deg = live_degrees(g.out, delta)
     m0, f0 = program.init(n, deg, **init_kw)
     cap = cfg.frontier_cap
     if program.modes == "push":
@@ -401,7 +405,7 @@ def run(
     """
     if pull_slice_fn is None and cfg.pull_impl == "pallas":
         pull_slice_fn = make_pallas_pull(program)
-    st0 = init_state(program, g, cfg, **init_kw)
+    st0 = init_state(program, g, cfg, delta=delta, **init_kw)
     if cfg.fusion == "all":
         final = _run_fused_all(program, g, pack, cfg, st0, pull_slice_fn, delta)
     elif cfg.fusion == "pushpull":

@@ -222,3 +222,23 @@ def to_undirected(g: Graph) -> Graph:
 def host_degrees(g: Graph) -> np.ndarray:
     rp = np.asarray(g.out.row_ptr)
     return rp[1:] - rp[:-1]
+
+
+def live_degrees(csr: CSR, delta: Optional[EdgeDelta] = None) -> jnp.ndarray:
+    """(n,) live out-degrees of a possibly-overlaid CSR.
+
+    `CSR.degrees()` is a row_ptr diff, which counts slots — on a streaming
+    overlay (repro.streaming) that includes deletion-neutralized slots and
+    misses the insertion COO entirely. Degree-NORMALIZING programs (PageRank
+    family: Compute divides pushed mass by the sender's out-degree) need the
+    degree of the graph actually being traversed, so engine inits count
+    non-sentinel slots and add the delta lanes instead. On a plain graph
+    (no sentinel slots, no delta) this equals `degrees()` value-for-value.
+    """
+    n = csr.n_nodes
+    live = (csr.col_idx != n).astype(jnp.int32)
+    deg = jnp.zeros((n,), jnp.int32).at[csr.src_idx].add(live, mode="drop")
+    if delta is not None:
+        deg = deg.at[delta.src].add((delta.src < n).astype(jnp.int32),
+                                    mode="drop")
+    return deg

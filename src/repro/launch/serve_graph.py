@@ -68,7 +68,8 @@ def main(argv=None):
     print(f"[serve_graph] {args.graph} scale={args.scale}: "
           f"{n} nodes, {g.n_edges} directed edges")
 
-    factories = {"bfs": alg.bfs(0), "sssp": alg.sssp(0), "ppr": alg.ppr(0)}
+    factories = {"bfs": alg.bfs(0), "sssp": alg.sssp(0), "ppr": alg.ppr(0),
+                 "ppr_delta": alg.ppr_delta(0)}
     algos = [a.strip() for a in args.algos.split(",") if a.strip()]
     unknown = [a for a in algos if a not in factories]
     if unknown or not algos:
@@ -94,7 +95,7 @@ def main(argv=None):
     srv = GraphServer(
         g, pack, programs, slots=args.slots, cfg=default_config(g),
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
-        result_fields={"ppr": "rank"},
+        result_fields={"ppr": "rank", "ppr_delta": "rank"},
         mesh=mesh, placements=placements,
     )
 

@@ -59,7 +59,7 @@ import jax.numpy as jnp
 from repro.core import frontier as F
 from repro.core.acc import ACCProgram
 from repro.core.engine import PULL, PUSH, EngineConfig, expand_frontier
-from repro.graph.csr import CSR, EdgeDelta, Graph
+from repro.graph.csr import CSR, EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 
 
@@ -85,6 +85,16 @@ class BatchState(NamedTuple):
     #: () bool — next pull must run dense (init / admission / after a push
     #: invalidated the partial cache). None when masked pull is off.
     pull_dense: Optional[jnp.ndarray] = None
+    #: (n+1, Q) bool — senders whose PRIMARY changed last iteration, the
+    #: exact staleness set for the masked-pull partial cache. Carried only
+    #: for residual-push programs (cfg.masked_pull + params kind='residual'),
+    #: whose frontier does NOT cover every primary change (a vertex that
+    #: absorbs its residual leaves the frontier while its `send` drops to
+    #: zero) — with it the masked pull is BIT-IDENTICAL to the dense pull,
+    #: not tol-bounded (DESIGN.md §10). None otherwise: min/max programs'
+    #: frontiers already capture every change, and the tol-thresholded pull
+    #: programs (ppr/pagerank) keep the documented frozen-drift semantics.
+    hot: Optional[jnp.ndarray] = None
 
 
 def _ident(program: ACCProgram, m: dict):
@@ -109,7 +119,14 @@ def _apply_and_refilter(program, cfg, csr, st, seg):
     nxt = nxt & ~st.done[None, :]                    # done lanes push nothing
     count = jnp.sum(nxt, axis=0).astype(jnp.int32)
     union_fe, overflow = _union_volume(csr, cfg, nxt)
-    return m_new, nxt, count, union_fe, overflow
+    hot = None
+    if st.hot is not None:
+        # exact masked-pull staleness: a cached row partial goes stale iff a
+        # gathered sender's primary changed this iteration (done lanes are
+        # frozen by _advance, so they cannot change)
+        hot = (m_new[program.primary] != st.m[program.primary]) \
+            & ~st.done[None, :]
+    return m_new, nxt, count, union_fe, overflow, hot
 
 
 def _union_volume_deg(deg: jnp.ndarray, cfg: EngineConfig, mask: jnp.ndarray):
@@ -162,8 +179,10 @@ def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState,
     upd = jnp.where(eactive, upd, ident)
     seg = comb.segment(upd, dst, n + 1)                  # (n+1, Q)
 
-    new = _apply_and_refilter(program, cfg, csr, st, seg)
-    return _advance(st, *new, was_mode=PUSH, cfg=cfg)
+    m_new, nxt, count, fe, ovf, hot = _apply_and_refilter(
+        program, cfg, csr, st, seg)
+    return _advance(st, m_new, nxt, count, fe, ovf, was_mode=PUSH, cfg=cfg,
+                    hot=hot)
 
 
 def _slice_partial_dense(program, comb, m, s, n, ident):
@@ -226,7 +245,15 @@ def _pull_step(
     q = st.it.shape[0]
     ident = _ident(program, st.m)
     seg = jnp.full((n + 1, q), ident)
-    hot_v = jnp.any(st.active, axis=-1) if cfg.masked_pull else None
+    # residual-push programs carry the exact changed-primary mask (st.hot);
+    # everything else uses the union frontier (exact for min/max, frozen
+    # sub-tol drift for thresholded pull programs)
+    if not cfg.masked_pull:
+        hot_v = None
+    elif st.hot is not None:
+        hot_v = jnp.any(st.hot, axis=-1)
+    else:
+        hot_v = jnp.any(st.active, axis=-1)
     pseg_new = []
     for si, s in enumerate(pack.slices):
         if cfg.masked_pull:
@@ -238,13 +265,15 @@ def _pull_step(
             partial = _slice_partial_dense(program, comb, st.m, s, n, ident)
         seg = comb.pair(seg, comb.segment(partial, s.row_id, n + 1))
 
-    new = _apply_and_refilter(program, cfg, csr_for_deg, st, seg)
-    return _advance(st, *new, was_mode=PULL, cfg=cfg,
-                    pseg=tuple(pseg_new) if cfg.masked_pull else None)
+    m_new, nxt, count, fe, ovf, hot = _apply_and_refilter(
+        program, cfg, csr_for_deg, st, seg)
+    return _advance(st, m_new, nxt, count, fe, ovf, was_mode=PULL, cfg=cfg,
+                    pseg=tuple(pseg_new) if cfg.masked_pull else None,
+                    hot=hot)
 
 
 def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode, cfg=None,
-             pseg=None) -> BatchState:
+             pseg=None, hot=None) -> BatchState:
     live = ~st.done
     it = st.it + jnp.where(live, 1, 0)
     q = it.shape[0]
@@ -269,6 +298,7 @@ def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode, cfg=None,
         mode_trace=tr,
         pseg=st.pseg if pseg is None else pseg,
         pull_dense=pull_dense,
+        hot=st.hot if hot is None else hot,
     )
 
 
@@ -337,7 +367,9 @@ def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack,
 
 def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
                sources, done=None, pack: Optional[EllPack] = None,
-               check_caps: bool = True) -> BatchState:
+               check_caps: bool = True,
+               delta: Optional[EdgeDelta] = None,
+               deg: Optional[jnp.ndarray] = None) -> BatchState:
     """Stack Q fresh query states (one per source), vertex-major.
 
     `done` marks lanes to create as empty/inactive (the scheduler starts
@@ -346,7 +378,12 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     `check_caps=False` skips the push-only no-overflow assertion for
     engines whose push path cannot truncate (the edge-partitioned scan,
     serving/sharded.py, is dense over each partition and never consults the
-    frontier/edge budgets).
+    frontier/edge budgets). `delta` is the streaming insertion overlay —
+    init only needs it for live degree counts (csr.live_degrees), so degree-
+    normalizing programs see the overlaid topology's degrees; `deg` passes a
+    precomputed live-degree vector instead (the O(m) count is constant per
+    graph version, so the per-admission hot path supplies the pool's cached
+    one rather than recounting every edge per admitted lane).
     """
     sources = jnp.asarray(sources, jnp.int32)
     q = sources.shape[0]
@@ -359,7 +396,8 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
             "push-only programs must not overflow "
             "(set frontier_cap>=n, edge_cap>=m)"
         )
-    deg = g.out.degrees()
+    if deg is None:
+        deg = live_degrees(g.out, delta)
     if _accepts_source(program):
         m_q, f_q = jax.vmap(lambda s: program.init(n, deg, source=s))(sources)
         m = {k: v.T for k, v in m_q.items()}                 # (n+1, Q)
@@ -384,8 +422,12 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
         ident = program.combiner.identity(dt)
         pseg = tuple(jnp.full((s.nbr.shape[0], q), ident) for s in pack.slices)
         pull_dense = jnp.asarray(True)
+        # residual-push programs track exact staleness; start all-hot (the
+        # first pull is dense anyway and refills every cached partial)
+        hot = (jnp.ones((n + 1, q), bool)
+               if program.param("kind") == "residual" else None)
     else:
-        pseg, pull_dense = (), None
+        pseg, pull_dense, hot = (), None, None
     st = BatchState(
         m=m, active=mask, count=count, union_fe=union_fe, overflow=overflow,
         mode=jnp.full((q,), PUSH, jnp.int32),
@@ -398,6 +440,7 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
         gmode=jnp.asarray(PUSH, jnp.int32),
         pseg=pseg,
         pull_dense=pull_dense,
+        hot=hot,
     )
     return st._replace(gmode=_consensus_mode(program, cfg, g.n_edges, st),
                        mode=jnp.where(st.done, st.mode,
@@ -457,7 +500,7 @@ def run_batch(
     convergence as one batch. Returns (metadata dict, field -> (n+1, Q),
     stats). `cfg.pull_impl`/`cfg.sparse_combine` are single-query fast paths
     and are ignored here."""
-    st0 = init_batch(program, g, cfg, sources, pack=pack)
+    st0 = init_batch(program, g, cfg, sources, pack=pack, delta=delta)
     return run_state(program, g, pack, cfg, st0, delta=delta, fusion=fusion)
 
 

@@ -122,10 +122,12 @@ class ShardedAlgoPool(_LanePool):
         # check is skipped)
         check_caps = self.placement.kind != "edge_sharded"
         self._admit = jax.jit(
-            lambda st, source, lane, g_: _admit_lane(
-                program, g_, cfg, st, source, lane, check_caps=check_caps),
+            lambda st, source, lane, g_, d_, deg_: _admit_lane(
+                program, g_, cfg, st, source, lane, check_caps=check_caps,
+                delta=d_, deg=deg_),
             out_shardings=self.engine.state_shardings,
         )
+        self._refresh_live_deg()
         #: extra cache-key params (see module docstring)
         self.cache_params = (
             (("placement", "edge_sharded"),)
@@ -161,12 +163,17 @@ class ShardedAlgoPool(_LanePool):
         self.engine.set_graph(g, pack, delta)
         self.g, self.pack, self.delta = (
             self.engine.g, self.engine.pack, self.engine.delta)
+        self._refresh_live_deg()
         self._reset_masked_pull_cache()
 
     def _place_pseg(self, pseg: tuple) -> tuple:
         return tuple(
             jax.device_put(p, sh)
             for p, sh in zip(pseg, self.engine.state_shardings.pseg))
+
+    def _place_state(self, st):
+        """Re-place a host-rebuilt state (residual resume) on the mesh."""
+        return jax.device_put(st, self.engine.state_shardings)
 
 
 __all__ = [

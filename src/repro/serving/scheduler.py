@@ -59,7 +59,7 @@ import numpy as np
 
 from repro.core.acc import ACCProgram
 from repro.core.engine import EngineConfig
-from repro.graph.csr import EdgeDelta, Graph
+from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 from repro.serving import batch_engine as B
 from repro.serving.cache import ResultCache, make_key
@@ -120,7 +120,8 @@ class _LanePool:
     def admit(self, lane: int, rid: int, source: int) -> None:
         assert self.lane_rid[lane] is None
         self.state = self._admit(
-            self.state, jnp.int32(source), jnp.int32(lane), self._admit_graph()
+            self.state, jnp.int32(source), jnp.int32(lane),
+            self._admit_graph(), self.delta, self.live_deg,
         )
         self.lane_rid[lane] = rid
         self.engine_queries += 1
@@ -131,9 +132,44 @@ class _LanePool:
         in-flight query)."""
         assert self.lane_rid[lane] is not None
         self.state = self._admit(
-            self.state, jnp.int32(source), jnp.int32(lane), self._admit_graph()
+            self.state, jnp.int32(source), jnp.int32(lane),
+            self._admit_graph(), self.delta, self.live_deg,
         )
         self.engine_queries += 1
+
+    def _refresh_live_deg(self) -> None:
+        """Live-degree vector is constant per graph version — count it once
+        here (ctor / set_graph) and feed the cached copy to every admission
+        instead of scatter-adding all m edges per admitted lane."""
+        self.live_deg = live_degrees(self.g.out, self.delta)
+
+    def resume_residual(self, sg, report) -> int:
+        """RESUME every live lane of a residual-push pool across a streaming
+        update: Maiter-correct the residual planes along the changed
+        adjacency columns (`streaming.residual_correct` — valid mid-run, the
+        invariant holds at every iteration) and reseed live lanes' frontiers
+        from the full corrected residual field. Dirty in-flight queries keep
+        their settled mass instead of restarting; clean lanes' corrections
+        are identically zero, so their trajectories continue bitwise
+        unchanged. Returns the number of live lanes left un-converged (the
+        lanes that actually resume work)."""
+        from repro.streaming.incremental import (
+            reseed_from_residuals,
+            residual_correct,
+        )
+
+        st = self.state
+        prev_m = {k: np.asarray(v) for k, v in st.m.items()}
+        m0 = residual_correct(self.program, sg, prev_m, report)
+        m = {k: jnp.asarray(v) for k, v in m0.items()}
+        st = reseed_from_residuals(self.program, self.cfg, self.g, st, m)
+        self.state = self._place_state(st)
+        live = [lane for lane, rid in enumerate(self.lane_rid)
+                if rid is not None]
+        return int(np.sum(np.asarray(st.count)[live] > 0)) if live else 0
+
+    def _place_state(self, st: B.BatchState) -> B.BatchState:
+        return st
 
     def harvest(self) -> List[tuple]:
         """(lane, rid, result, iterations) for every lane that converged."""
@@ -193,6 +229,7 @@ class AlgoPool(_LanePool):
             jnp.zeros((slots,), jnp.int32),
             done=jnp.ones((slots,), bool),
             pack=pack,
+            delta=delta,
         )
         # graph/pack/delta are TRACED pytree args (not closure constants), so
         # the CSR/ELL/overlay arrays are not baked into each pool's
@@ -203,8 +240,10 @@ class AlgoPool(_LanePool):
                 program, g_, pack_, cfg, delta_)(st)
         )
         self._admit = jax.jit(
-            lambda st, source, lane, g_: _admit_lane(program, g_, cfg, st, source, lane)
+            lambda st, source, lane, g_, d_, deg_: _admit_lane(
+                program, g_, cfg, st, source, lane, delta=d_, deg=deg_)
         )
+        self._refresh_live_deg()
         self.engine_queries = 0
         self.steps = 0
         #: extra cache-key params; single-device results are the bitwise
@@ -225,15 +264,20 @@ class AlgoPool(_LanePool):
                   delta: Optional[EdgeDelta]) -> None:
         """Swap in updated overlay views (see `_reset_masked_pull_cache`)."""
         self.g, self.pack, self.delta = g, pack, delta
+        self._refresh_live_deg()
         self._reset_masked_pull_cache()
 
 
 def _admit_lane(program, g, cfg, st: B.BatchState, source, lane,
-                check_caps: bool = True) -> B.BatchState:
+                check_caps: bool = True, delta=None,
+                deg=None) -> B.BatchState:
     """Write one freshly initialized query into lane `lane` (jitted)."""
-    one = B.init_batch(program, g, cfg, source[None], check_caps=check_caps)
+    one = B.init_batch(program, g, cfg, source[None], check_caps=check_caps,
+                       delta=delta, deg=deg)
     m = {k: st.m[k].at[:, lane].set(one.m[k][:, 0]) for k in st.m}
     active = st.active.at[:, lane].set(one.active[:, 0])
+    if st.hot is not None:
+        st = st._replace(hot=st.hot.at[:, lane].set(True))
     st = st._replace(
         m=m,
         active=active,
@@ -492,9 +536,19 @@ class GraphServer:
         else:
             dropped += sum(len(v) for v in dirty_entries.values())
 
-        # (4) dirtied in-flight queries restart on the new graph
+        # (4) dirtied in-flight queries: residual-push pools RESUME every
+        # live lane from Maiter-corrected residuals (clean lanes' corrections
+        # are identically zero — they continue bitwise unchanged); everything
+        # else restarts its dirty lanes from scratch on the new graph
+        from repro.streaming.incremental import is_residual
+
         re_enqueued_rids = []
+        resumed_inflight = 0
         for name, pool in self.pools.items():
+            if is_residual(pool.program):
+                if pool.live():
+                    resumed_inflight += pool.resume_residual(self.sg, report)
+                continue
             for lane, rid in enumerate(pool.lane_rid):
                 if rid is None:
                     continue
@@ -514,6 +568,7 @@ class GraphServer:
             "cache_dropped": dropped,
             "reenqueued_inflight": len(re_enqueued_rids),
             "reenqueued_rids": re_enqueued_rids,
+            "resumed_inflight": resumed_inflight,
         }
         self.update_log.append(stats)
         return stats

@@ -64,7 +64,7 @@ from repro import compat
 from repro.core.acc import ACCProgram, Combiner
 from repro.core.engine import PULL, PUSH, EngineConfig
 from repro.graph import partition
-from repro.graph.csr import EdgeDelta, Graph
+from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 from repro.serving import batch_engine as B
 
@@ -115,6 +115,7 @@ def state_specs(st: B.BatchState, mesh=None) -> B.BatchState:
         mode_trace=tr, gmode=P(),
         pseg=tuple(qv for _ in st.pseg),
         pull_dense=None if st.pull_dense is None else P(),
+        hot=None if st.hot is None else qv,
     )
 
 
@@ -321,7 +322,7 @@ class ShardedBatchEngine:
             self.esrc = jax.device_put(esh.src, s_edges)
             self.edst = jax.device_put(esh.dst, s_edges)
             self.ewgt = jax.device_put(esh.wgt, s_edges)
-            self.deg = jax.device_put(g.out.degrees(), rep)
+            self.deg = jax.device_put(live_degrees(g.out, delta), rep)
             if delta is not None:
                 dsh = partition.shard_delta(delta, self.n_edge_shards, self.n)
                 self.dsrc = jax.device_put(dsh.src, s_edges)
@@ -349,7 +350,8 @@ class ShardedBatchEngine:
         pack = self.pack if self.cfg.masked_pull else None
         st = B.init_batch(self.program, self.g, self.cfg, sources,
                           done=done, pack=pack,
-                          check_caps=self.placement != "edge_sharded")
+                          check_caps=self.placement != "edge_sharded",
+                          delta=self.delta)
         if self._specs is None:
             self._build(st)
         return jax.device_put(st, self._shardings)

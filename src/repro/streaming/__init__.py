@@ -22,6 +22,8 @@ from repro.streaming.delta import StreamingGraph, UpdateReport  # noqa: F401
 from repro.streaming.incremental import (  # noqa: F401
     incremental_batch,
     is_monotone,
+    is_residual,
+    residual_correct,
 )
 
 __all__ = [
@@ -29,4 +31,6 @@ __all__ = [
     "UpdateReport",
     "incremental_batch",
     "is_monotone",
+    "is_residual",
+    "residual_correct",
 ]

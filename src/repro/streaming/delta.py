@@ -69,6 +69,15 @@ class UpdateReport:
     #: clean (not in affected_del) vertices with a live edge into the
     #: affected region — the boundary that re-pushes final values into it.
     boundary: np.ndarray
+    #: APPLIED directed insertions, (k, 2) int64 (u, v) rows — duplicates /
+    #: out-of-range attempts excluded. The residual-refresh layer
+    #: (streaming/incremental.py) re-routes settled mass along exactly these
+    #: topology changes (Maiter-style), so the report must name them.
+    ins_edges: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 2), np.int64))
+    #: APPLIED directed deletions, (k, 2) int64 (u, v) rows.
+    del_edges: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0, 2), np.int64))
 
     @property
     def insert_only(self) -> bool:
@@ -283,14 +292,17 @@ class StreamingGraph:
         ins_d, del_d, ignored = self._expand_directed(inserts, deletes)
 
         n_del = 0
+        applied_del: list[tuple[int, int]] = []
         dirty_slices: set[int] = set()
         for (u, v) in del_d:
             if self._delete_one(u, v, dirty_slices):
                 n_del += 1
+                applied_del.append((u, v))
             else:
                 ignored += 1
 
         n_ins = 0
+        applied_ins: list[tuple[int, int]] = []
         for (u, v, w) in ins_d:
             if self._edge_live(u, v) or any(
                     (u, v) == (iu, iv) for (iu, iv, _w) in self._ins):
@@ -298,6 +310,7 @@ class StreamingGraph:
                 continue
             self._ins.append((u, v, w))
             n_ins += 1
+            applied_ins.append((u, v))
 
         touched = np.unique(np.asarray(
             [e[0] for e in ins_d] + [e[1] for e in ins_d]
@@ -328,6 +341,8 @@ class StreamingGraph:
             n_ignored=ignored, rebuild=rebuild, touched=touched,
             dirty_src=dirty_src, affected_del=affected, ins_src=ins_src,
             boundary=boundary,
+            ins_edges=np.asarray(applied_ins, np.int64).reshape(-1, 2),
+            del_edges=np.asarray(applied_del, np.int64).reshape(-1, 2),
         )
         return self.last_report
 
@@ -435,6 +450,28 @@ class StreamingGraph:
             return z, z
         ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
         return ins[:, 0].astype(np.int64), ins[:, 1].astype(np.int64)
+
+    def live_out_degrees(self) -> np.ndarray:
+        """(n,) live out-degrees of the CURRENT overlaid graph (host view):
+        base edges minus deletion-neutralized slots plus pending insertions —
+        the host counterpart of `graph.csr.live_degrees` on the device views
+        (the residual-refresh corrections consume this)."""
+        live = ~self._dead_out
+        deg = np.bincount(self._base_src_host()[live],
+                          minlength=self.n)[:self.n].astype(np.int64)
+        xs, _ = self._ins_coo()
+        if xs.size:
+            deg += np.bincount(xs, minlength=self.n)[:self.n]
+        return deg
+
+    def live_out_neighbors(self, u: int) -> np.ndarray:
+        """Live out-neighbor ids of `u` in the current overlaid graph."""
+        lo, hi = int(self._out_rp[u]), int(self._out_rp[u + 1])
+        alive = ~self._dead_out[lo:hi]
+        cols = self._out_ci[lo:hi][alive].astype(np.int64)
+        extra = np.asarray([v for (iu, v, _w) in self._ins if iu == u],
+                           dtype=np.int64)
+        return np.concatenate([cols, extra]) if extra.size else cols
 
     def _boundary_of(self, affected: np.ndarray) -> np.ndarray:
         """Clean vertices with a LIVE out-edge into the affected region."""

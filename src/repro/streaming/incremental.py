@@ -1,6 +1,6 @@
-"""Incremental recomputation over a streaming delta overlay (DESIGN.md §8).
+"""Incremental recomputation over a streaming delta overlay (DESIGN.md §8, §10).
 
-Two regimes, chosen per program:
+Three regimes, chosen per program:
 
   * **Monotone** programs (min/max combiner, default apply — BFS, SSSP, WCC):
     the previous fixpoint is a valid state to resume from. Insertions can
@@ -12,6 +12,13 @@ Two regimes, chosen per program:
     realized value is the same left-to-right path sum a from-scratch run
     produces, so the result is BIT-IDENTICAL to full recomputation on the
     updated graph.
+
+  * **Residual-push** programs (`ppr_delta`, params kind='residual'): the
+    (estimate, residual) invariant holds at every iteration, so an update is
+    absorbed by correcting residuals along the changed adjacency columns
+    (Maiter-style, `residual_correct`) and RESUMING the fixpoint from the
+    surviving residuals — no source re-runs at all; clean lanes' corrections
+    are identically zero and they start converged (DESIGN.md §10).
 
   * **Non-monotone** programs (PPR/PageRank power iteration): restarting the
     iteration from a perturbed state computes a different (wrong) trajectory,
@@ -45,13 +52,101 @@ def is_monotone(program: ACCProgram) -> bool:
     return program.combiner.idempotent and program.apply is None
 
 
+def is_residual(program: ACCProgram) -> bool:
+    """Residual-push program (params kind='residual', e.g. `ppr_delta`):
+    metadata carries an (estimate, residual) split whose invariant
+    `final = estimate + (1-d)(I - dM)^{-1} residual` holds at EVERY
+    iteration, so an edge update is absorbed by correcting residuals along
+    the changed adjacency columns and resuming the fixpoint — no re-run."""
+    return program.param("kind") == "residual"
+
+
+def residual_correct(program: ACCProgram, sg: StreamingGraph, prev_m: dict,
+                     report: UpdateReport) -> dict:
+    """Maiter-style residual correction for one applied update batch.
+
+    The settled estimate x = rank/(1-d) was accumulated by pushing
+    d·x(u)/deg(u) along each of u's out-edges. An update batch replaces
+    column u of the push operator M (out-neighbor set and/or degree), so the
+    residual field absorbs the difference:
+
+        resid += d * (M' - M) x      (nonzero only for changed sources u,
+                                      at u's old/new out-neighbors)
+
+    which restores the invariant `target' = rank + (1-d)(I - dM')^{-1} resid`
+    for the UPDATED graph — valid mid-run, not just at a fixpoint, which is
+    what lets in-flight serving lanes resume. Deletions retract mass, so
+    residuals may go negative; `ppr_delta.active` thresholds |resid|.
+
+    The degree metadata and the thresholded `send` plane are recomputed from
+    the new live degrees — the next frontier must be derived from the FULL
+    corrected residual field (program.active), not from the update
+    endpoints: a deletion that lowers deg(u) lowers u's threshold
+    tol·deg(u), re-activating a surviving sub-threshold residual at u even
+    though no correction term touches u itself (the targeted deletion test
+    in tests/test_ppr_delta.py pins this).
+
+    Returns a fresh {field: (n+1, Q) float32 numpy} dict; `prev_m` is not
+    modified. Clean lanes (source cannot reach a touched endpoint) have
+    rank == 0 at every changed source, so their corrections vanish
+    identically and they stay converged.
+    """
+    d = float(program.param("damping"))
+    tol = float(program.param("tol"))
+    est = program.param("estimate", "rank")
+    res = program.param("residual", "resid")
+    n = sg.n
+    m = {k: np.array(v, dtype=np.float32) for k, v in prev_m.items()}
+    rank, resid = m[est], m[res]
+
+    ins_by_src: dict[int, list] = {}
+    del_by_src: dict[int, list] = {}
+    for (u, v) in report.ins_edges:
+        ins_by_src.setdefault(int(u), []).append(int(v))
+    for (u, v) in report.del_edges:
+        del_by_src.setdefault(int(u), []).append(int(v))
+
+    for u in sorted(set(ins_by_src) | set(del_by_src)):
+        # neighbor MULTISETS: parallel edges (from_edges dedupe=False) each
+        # carried one push of d·x/deg, so multiplicity weights the terms —
+        # the old multiset is the new one minus this batch's applied inserts
+        # plus its applied deletes (each applied change moves ONE copy)
+        new_nbrs = sg.live_out_neighbors(u)                  # with repeats
+        new_deg = new_nbrs.size
+        cnt = np.bincount(new_nbrs, minlength=n)
+        old_cnt = cnt.copy()
+        for v in ins_by_src.get(u, ()):
+            old_cnt[v] -= 1
+        for v in del_by_src.get(u, ()):
+            old_cnt[v] += 1
+        old_deg = int(old_cnt.sum())
+        x_u = rank[u] / (1.0 - d)                            # (Q,)
+        if old_deg > 0:
+            idx = np.nonzero(old_cnt)[0]                     # unique targets
+            w = old_cnt[idx].astype(np.float32)[:, None]
+            resid[idx] -= w * (d * x_u[None, :] / old_deg)
+        if new_deg > 0:
+            idx = np.nonzero(cnt)[0]
+            w = cnt[idx].astype(np.float32)[:, None]
+            resid[idx] += w * (d * x_u[None, :] / new_deg)
+
+    degf = np.maximum(sg.live_out_degrees(), 1).astype(np.float32)
+    degf = np.concatenate([degf, np.ones((1,), np.float32)])
+    m["deg"] = np.broadcast_to(degf[:, None], rank.shape).copy()
+    send = np.where(np.abs(resid) > tol * m["deg"],
+                    d * resid / m["deg"], 0.0).astype(np.float32)
+    send[-1] = 0.0
+    m["send"] = send
+    return m
+
+
 def _seed_state(program, sg, cfg, sources, prev_m, report) -> B.BatchState:
     """BatchState resuming Q lanes from `prev_m` with update-batch seeds."""
     g = sg.graph
     n = g.n_nodes
     sources = jnp.asarray(sources, jnp.int32)
     q = int(sources.shape[0])
-    st = B.init_batch(program, g, cfg, sources, pack=sg.pack)
+    st = B.init_batch(program, g, cfg, sources, pack=sg.pack, delta=sg.delta)
 
     affected = np.concatenate([report.affected_del, [False]])    # (n+1,)
     aff = jnp.asarray(affected)
@@ -82,6 +177,42 @@ def _seed_state(program, sg, cfg, sources, prev_m, report) -> B.BatchState:
     )
 
 
+def reseed_from_residuals(program, cfg, g, st: B.BatchState,
+                          m: dict) -> B.BatchState:
+    """Re-derive a BatchState's frontier/consensus planes from corrected
+    residual metadata `m` ({field: (n+1, Q) jnp}). The frontier comes from
+    `program.active` over the FULL field — the threshold-reactivation
+    contract (see `residual_correct`) — masked by done lanes; partial-cache
+    hot planes go all-hot. Shared by the offline resume
+    (`_residual_seed_state`) and the serving in-flight resume
+    (`scheduler._LanePool.resume_residual`) so the two paths cannot drift."""
+    active = program.active(m, m, st.it)
+    active = active.at[-1].set(False) & ~st.done[None, :]
+    count = jnp.sum(active, axis=0).astype(jnp.int32)
+    union_fe, overflow = B._union_volume(g.out, cfg, active)
+    st = st._replace(m=m, active=active, count=count,
+                     union_fe=union_fe, overflow=overflow)
+    if st.hot is not None:
+        st = st._replace(hot=jnp.ones_like(st.hot))
+    gmode = B._consensus_mode(program, cfg, g.n_edges, st)
+    return st._replace(gmode=gmode,
+                       mode=jnp.where(st.done, st.mode, gmode))
+
+
+def _residual_seed_state(program, sg, cfg, sources, m0: dict) -> B.BatchState:
+    """BatchState resuming Q lanes from corrected residual metadata: the
+    frontier is exactly the above-threshold residual set (program.active over
+    the corrected field), so already-converged lanes start done and the rest
+    re-enter the push/pull loop mid-fixpoint."""
+    g = sg.graph
+    st = B.init_batch(program, g, cfg, jnp.asarray(sources, jnp.int32),
+                      pack=sg.pack, delta=sg.delta)
+    st = st._replace(done=jnp.zeros_like(st.done))
+    m = {k: jnp.asarray(v) for k, v in m0.items()}
+    st = reseed_from_residuals(program, cfg, g, st, m)
+    return st._replace(done=st.count == 0)
+
+
 def incremental_batch(
     program: ACCProgram,
     sg: StreamingGraph,
@@ -104,6 +235,24 @@ def incremental_batch(
     sources_np = np.asarray(sources, dtype=np.int64)
     q = int(sources_np.shape[0])
 
+    if is_residual(program):
+        # residual resume (Maiter-style): correct the residual planes along
+        # the changed adjacency columns and re-enter the fixpoint from the
+        # corrected state. The frontier comes from the FULL corrected
+        # residual field — not from dirty-source gating or update-endpoint
+        # seeds, either of which drops threshold-reactivated residuals that
+        # overlap a deleted edge's affected set (see residual_correct).
+        m0 = residual_correct(program, sg, prev_m, report)
+        st0 = _residual_seed_state(program, sg, cfg, sources_np, m0)
+        resumed = int(jnp.sum(st0.count > 0))
+        m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
+                               delta=sg.delta, fusion=fusion)
+        info = {"mode": "residual-resume", "resumed": resumed,
+                "retained": q - resumed,
+                "iterations": int(stats["iterations"]),
+                "per_query_iters": stats["per_query_iters"]}
+        return m, info
+
     if is_monotone(program):
         st0 = _seed_state(program, sg, cfg, sources_np, prev_m, report)
         m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
@@ -113,7 +262,10 @@ def incremental_batch(
                 "per_query_iters": stats["per_query_iters"]}
         return m, info
 
-    dirty = report.dirty_src[np.clip(sources_np, 0, sg.n - 1)]
+    in_range = (sources_np >= 0) & (sources_np < sg.n)
+    dirty = np.where(in_range,
+                     report.dirty_src[np.clip(sources_np, 0, sg.n - 1)],
+                     True)                    # out-of-range: never retain
     dirty_idx = np.nonzero(dirty)[0]
     m = {k: jnp.asarray(v) for k, v in prev_m.items()}
     iters = 0

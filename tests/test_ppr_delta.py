@@ -1,0 +1,457 @@
+"""Differential PPR test harness: `ppr_delta` across every engine path.
+
+`ppr_delta` is the residual-push personalized PageRank (ISSUE 4 tentpole):
+state is the (estimate, residual) split, `Active` thresholds the residual at
+tol·deg, Compute pushes damping·resid/deg, Combine sums into neighbor
+residuals. The harness sweeps graphs × engines × scenarios and checks two
+invariants everywhere:
+
+  (1) RESIDUAL INVARIANT: |resid| ≤ tol·deg at every vertex on exit — the
+      ε-approximation contract of the residual formulation;
+  (2) DIFFERENTIAL AGREEMENT: rank matches an independent dense
+      power-iteration reference on the same (possibly updated) topology.
+
+Graphs: random RMAT (directed + undirected), the broom/path and star/path
+regression graphs from the consensus-divergence suite (test_sharded), and a
+plain path. Engines: solo `core.engine.run`, batched `serving.run_batch`,
+query-sharded (`replicated`) and edge-partitioned (`edge_sharded`) pools on
+a (1, 1) mesh (the multi-shard meshes run in scripts/check.sh's forced
+8-device smoke). Scenarios: cold run, masked pull, streaming insert,
+streaming delete.
+
+Plus the satellite contracts:
+  * masked pull + ppr_delta is BIT-IDENTICAL to the dense pull (not
+    tol-bounded) — the changed-primary hot mask captures absorbing vertices
+    that leave the frontier while their `send` drops to zero;
+  * the old `ppr` program still tags its edge-sharded cache keys (and
+    ppr_delta, also a sum program, tags its own);
+  * targeted deletion regression: a deletion that lowers deg(u) lowers u's
+    activation threshold, re-activating a surviving sub-threshold residual
+    at u even though every correction term is zero there — the resumed
+    frontier must come from the full corrected residual field, not from
+    dirty-source gating or update-endpoint seeds.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import engine as E
+from repro.graph import generators, pack_ell
+from repro.graph.csr import from_edges
+from repro.serving import (
+    GraphServer,
+    Placement,
+    default_config,
+    make_serving_mesh,
+    query_result,
+    run_batch,
+    run_sharded,
+)
+from repro.streaming import StreamingGraph, incremental_batch, is_residual
+
+# the consensus-divergence suite's deterministic regression graph (hub whose
+# frontier volume trips the alpha test + a long path that stays light)
+from test_sharded import _star_path_graph
+
+TOL = 1e-5
+DAMP = 0.85
+#: |rank - dense reference| bound: both sides are tol-converged
+#: approximations whose unsettled mass is bounded by Σ_v tol·deg(v);
+#: empirically ≤ ~60·TOL on the densest graph here (undirected RMAT-8),
+#: 3× slack — real bugs (stale degrees, dropped reactivations) land ≥ 1e-2
+ATOL = 2e-3
+
+
+def _broom_path_graph():
+    """The broom/path divergence workload of the consensus-trace regression
+    (tests/test_sharded.py's RMAT-12 subprocess suite), scaled down: a chain
+    of 5 hubs each fanning out 50 leaves, plus a 100-vertex path."""
+    broom = []
+    for i in range(5):
+        broom.append((i, i + 1))
+        broom += [(i, 500 + 50 * i + j) for j in range(50)]
+    path = [(200 + i, 201 + i) for i in range(100)]
+    e = np.asarray(broom + path, dtype=np.int64)
+    g = from_edges(e[:, 0], e[:, 1], 800, directed=True)
+    return g, pack_ell(g.inc)
+
+
+def _graph(name):
+    if name == "rmat":
+        g = generators.rmat(8, 4, seed=11, directed=True)
+    elif name == "rmat-und":
+        g = generators.rmat(8, 4, seed=3)
+    elif name == "broom-path":
+        return _broom_path_graph()
+    elif name == "star-path":
+        return _star_path_graph()
+    elif name == "path":
+        g = generators.chain(64, weighted=False)
+    else:
+        raise ValueError(name)
+    return g, pack_ell(g.inc)
+
+
+GRAPHS = ["rmat", "rmat-und", "broom-path", "star-path", "path"]
+
+
+def _np_ppr_coo(src, dst, n, source, d=DAMP, iters=300):
+    """Dense power-iteration reference over a COO edge list (weights are
+    irrelevant to PPR; dangling mass is dropped, matching the engines)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    deg = np.bincount(src, minlength=n)[:n].astype(np.float64)
+    pref = np.zeros(n)
+    pref[source] = 1.0
+    r = pref.copy()
+    safe = np.maximum(deg, 1.0)
+    for _ in range(iters):
+        contrib = r / safe
+        nxt = np.zeros(n)
+        np.add.at(nxt, dst, contrib[src])
+        r = (1 - d) * pref + d * nxt
+    return r.astype(np.float32)
+
+
+def _np_ppr(g, source, **kw):
+    return _np_ppr_coo(g.out.src_idx, g.out.col_idx, g.n_nodes, source, **kw)
+
+
+def _sg_edges(sg):
+    """Host edge list of a StreamingGraph's CURRENT overlaid topology (live
+    base edges + pending insertions) — the rebuilt-graph equivalence oracle."""
+    live = ~sg._dead_out
+    src = sg._base_src_host()[live]
+    dst = sg._out_ci[live].astype(np.int64)
+    xs, xd = sg._ins_coo()
+    return np.concatenate([src, xs]), np.concatenate([dst, xd])
+
+
+def _check_invariant(m, lanes=None):
+    """(1): |resid| ≤ tol·deg everywhere (all lanes by default)."""
+    resid = np.asarray(m["resid"])
+    degf = np.asarray(m["deg"])
+    if resid.ndim == 1:
+        resid, degf = resid[:, None], degf[:, None]
+    if lanes is not None:
+        resid, degf = resid[:, lanes], degf[:, lanes]
+    assert (np.abs(resid) <= TOL * degf + 1e-9).all(), (
+        "residual invariant violated: max |resid|/deg = "
+        f"{np.abs(resid / degf).max():.3e} > tol {TOL}")
+
+
+# ---------------------------------------------------------------------------
+# cold runs: solo / batched / replicated-sharded / edge-sharded
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", GRAPHS)
+def test_cold_solo_and_batched_match_dense_reference(name):
+    g, pack = _graph(name)
+    n = g.n_nodes
+    cfg = default_config(g, max_iters=256)
+    rng = np.random.default_rng(7)
+    sources = np.unique(np.concatenate(
+        [[0, n - 1], rng.integers(0, n, size=4)])).tolist()
+
+    mb, _ = run_batch(alg.ppr_delta(0), g, pack, cfg, sources)
+    _check_invariant(mb)
+    for lane, s in enumerate(sources):
+        want = _np_ppr(g, s)
+        got_b = np.asarray(query_result(mb, "rank", lane))
+        assert np.abs(got_b - want).max() < ATOL, (name, s)
+
+        ms, _ = E.run(alg.ppr_delta(s), g, pack, cfg, source=jnp.int32(s))
+        _check_invariant(ms)
+        got_s = np.asarray(ms["rank"][:n])
+        assert np.abs(got_s - want).max() < ATOL, (name, s)
+        # batched and solo run the same arithmetic; they may only differ by
+        # FP reassociation when consensus picks a different mode sequence
+        assert np.abs(got_b - got_s).max() < 1e-6, (name, s)
+
+
+@pytest.mark.parametrize("name", ["rmat", "broom-path"])
+def test_cold_sharded_placements(name):
+    g, pack = _graph(name)
+    cfg = default_config(g, max_iters=256)
+    sources = [0, 1, g.n_nodes - 1, 5]
+    m_ref, st_ref = run_batch(alg.ppr_delta(0), g, pack, cfg, sources)
+    mesh = make_serving_mesh(1, 1)
+
+    # query-sharded: same per-lane arithmetic, psum'd consensus -> bitwise
+    m_sh, st_sh = run_sharded(alg.ppr_delta(0), g, pack, cfg, mesh, sources,
+                              placement="replicated")
+    for k in m_ref:
+        assert np.array_equal(np.asarray(m_ref[k]), np.asarray(m_sh[k])), k
+    assert np.array_equal(np.asarray(st_ref["mode_trace"]),
+                          np.asarray(st_sh["mode_trace"]))
+
+    # masked pull under shard_map: the hot-mask plane shards over queries
+    # like the frontier, and the result stays the bitwise reference
+    cfgm = dataclasses.replace(cfg, masked_pull=True)
+    m_shm, _ = run_sharded(alg.ppr_delta(0), g, pack, cfgm, mesh, sources,
+                           placement="replicated")
+    for k in m_ref:
+        assert np.array_equal(np.asarray(m_ref[k]), np.asarray(m_shm[k])), k
+
+    # edge-partitioned: residual psum merge -> one extra reassociation
+    m_es, _ = run_sharded(alg.ppr_delta(0), g, pack, cfg, mesh, sources,
+                          placement="edge_sharded")
+    _check_invariant(m_es)
+    assert np.allclose(np.asarray(m_ref["rank"]), np.asarray(m_es["rank"]),
+                       rtol=1e-5, atol=1e-7)
+    for lane, s in enumerate(sources):
+        want = _np_ppr(g, s)
+        assert np.abs(
+            np.asarray(query_result(m_es, "rank", lane)) - want).max() < ATOL
+
+
+# ---------------------------------------------------------------------------
+# masked pull: bit-identical, not tol-bounded
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rmat", "rmat-und", "broom-path"])
+def test_masked_pull_bit_identical(name):
+    """cfg.masked_pull + ppr_delta == the dense pull, BIT for bit, every
+    metadata field — the changed-primary hot mask makes the partial cache
+    exact (a tol-bounded drift would show up in rank/resid/send here)."""
+    g, pack = _graph(name)
+    cfg = default_config(g, max_iters=256)
+    cfgm = dataclasses.replace(cfg, masked_pull=True)
+    rng = np.random.default_rng(5)
+    sources = rng.integers(0, g.n_nodes, size=6).tolist()
+    md, sd = run_batch(alg.ppr_delta(0), g, pack, cfg, sources)
+    mm, sm = run_batch(alg.ppr_delta(0), g, pack, cfgm, sources)
+    for k in md:
+        assert np.array_equal(np.asarray(md[k]), np.asarray(mm[k])), k
+    assert np.array_equal(np.asarray(sd["mode_trace"]),
+                          np.asarray(sm["mode_trace"]))
+
+
+def test_edge_sharded_cache_tags_old_ppr_and_ppr_delta():
+    """REGRESSION: both PPR programs are sum-combiner, so their
+    edge-sharded pools must keep tagging cache keys with
+    ('placement', 'edge_sharded') — a placement change must never serve a
+    bitwise-foreign cached result (DESIGN.md §9)."""
+    g, pack = _graph("rmat")
+    cfg = default_config(g, max_iters=128)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(
+        g, pack,
+        {"ppr": alg.ppr(0), "ppr_delta": alg.ppr_delta(0), "bfs": alg.bfs(0)},
+        slots=2, cfg=cfg, cache_capacity=16,
+        result_fields={"ppr": "rank", "ppr_delta": "rank"},
+        mesh=mesh, placements={"ppr": ("edge_sharded", 1),
+                               "ppr_delta": ("edge_sharded", 1),
+                               "bfs": ("edge_sharded", 1)},
+    )
+    tag = ((("placement", "edge_sharded"),))
+    assert srv.pools["ppr"].cache_params == tag
+    assert srv.pools["ppr_delta"].cache_params == tag
+    assert srv.pools["bfs"].cache_params == ()       # min programs: bit-exact
+    rid = srv.submit("ppr_delta", 3)
+    srv.drain()
+    keys = list(srv.cache._entries)
+    assert any(k[1] == "ppr_delta" and k[3] == tag for k in keys), keys
+    rid2 = srv.submit("ppr_delta", 3)
+    comp = [c for c in srv.drain() if c.rid == rid2][0]
+    assert comp.from_cache and rid != rid2
+
+
+# ---------------------------------------------------------------------------
+# streaming: insert / delete property sweep (residual resume)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["rmat", "rmat-und", "star-path"])
+def test_streaming_property_insert_delete(name):
+    """PROPERTY: across chained random insert/delete batches, the residual
+    resume (`incremental_batch`) keeps the residual invariant and agrees
+    with BOTH the full overlay recompute and the dense reference on the
+    rebuilt topology (the host-rebuild equivalence oracle)."""
+    g, _ = _graph(name)
+    n = g.n_nodes
+    sg = StreamingGraph(g, delta_cap=128)
+    cfg = default_config(g, max_iters=256)
+    rng = np.random.default_rng(23)
+    sources = np.unique(rng.integers(0, n, size=5)).tolist()
+    prog = alg.ppr_delta(0)
+    assert is_residual(prog) and not is_residual(alg.ppr(0))
+    prev, _ = run_batch(prog, sg.graph, sg.pack, cfg, sources, delta=sg.delta)
+
+    for batch, (n_ins, n_del) in enumerate([(6, 0), (0, 5), (4, 4)]):
+        ins = [(int(rng.integers(0, n)), int(rng.integers(0, n)))
+               for _ in range(n_ins)]
+        eidx = rng.integers(0, g.n_edges, size=n_del)
+        dels = [(int(g.out.src_idx[i]), int(g.out.col_idx[i]))
+                for i in eidx]
+        sg.apply(inserts=ins, deletes=dels)
+
+        inc, info = incremental_batch(prog, sg, cfg, sources, prev)
+        assert info["mode"] == "residual-resume", info
+        _check_invariant(inc)
+
+        full, _ = run_batch(prog, sg.graph, sg.pack, cfg, sources,
+                            delta=sg.delta)
+        assert np.abs(np.asarray(full["rank"])
+                      - np.asarray(inc["rank"])).max() < ATOL, (name, batch)
+
+        esrc, edst = _sg_edges(sg)
+        for lane, s in enumerate(sources):
+            want = _np_ppr_coo(esrc, edst, n, s)
+            got = np.asarray(query_result(inc, "rank", lane))
+            assert np.abs(got - want).max() < ATOL, (name, batch, s)
+        prev = inc
+
+
+def test_targeted_deletion_threshold_reactivation():
+    """TARGETED (satellite fix): source s is NOT an endpoint of the update,
+    yet its surviving sub-threshold residual at u overlaps the deleted
+    edges' affected set: deleting most of u's out-edges lowers u's
+    activation threshold tol·deg(u) below the stored residual, while every
+    Maiter correction term at u is identically zero (rank(u) == 0, and
+    corrections only land on u's NEIGHBORS). A resume seeded from
+    dirty-source gating or update endpoints drops u's reactivation and
+    exits with the invariant violated; the frontier must come from the full
+    corrected residual field."""
+    tol, d = 1e-3, DAMP
+    fan = 85                     # resid(u) = d/fan ≈ 0.01
+    u_deg = 20                   # old threshold tol*20 = 0.02 > 0.01
+    s, u = 0, 1
+    edges = [(s, u)] + [(s, 100 + i) for i in range(fan - 1)]
+    edges += [(u, 200 + i) for i in range(u_deg)]
+    e = np.asarray(edges, dtype=np.int64)
+    n = 300
+    g = from_edges(e[:, 0], e[:, 1], n, directed=True)
+    sg = StreamingGraph(g, delta_cap=32)
+    cfg = default_config(g, max_iters=256)
+    prog = alg.ppr_delta(0, damping=d, tol=tol)
+
+    prev, _ = run_batch(prog, sg.graph, sg.pack, cfg, [s], delta=sg.delta)
+    r_u = float(np.asarray(prev["resid"])[u, 0])
+    assert abs(r_u - d / fan) < 1e-6, "u must hold a sub-threshold residual"
+    assert float(np.asarray(prev["rank"])[u, 0]) == 0.0, (
+        "u must be rank-0 so every correction term vanishes")
+
+    # delete all but one of u's out-edges: threshold falls to tol*1 < resid(u)
+    dels = [(u, 200 + i) for i in range(1, u_deg)]
+    rep = sg.apply(deletes=dels)
+    assert s not in set(np.concatenate([rep.del_edges.ravel(),
+                                        rep.ins_edges.ravel()])), (
+        "the source must stay untouched by the update batch")
+
+    inc, info = incremental_batch(prog, sg, cfg, [s], prev)
+    assert info["mode"] == "residual-resume"
+    # (1) u's residual was re-activated and settled
+    resid = np.asarray(inc["resid"])[:, 0]
+    degf = np.asarray(inc["deg"])[:, 0]
+    assert (np.abs(resid) <= tol * degf + 1e-9).all(), (
+        f"|resid(u)|={abs(resid[u]):.4f} vs tol*deg(u)={tol * degf[u]:.4f}")
+    # (2) the settled mass shows up in rank — matching full recompute and
+    # the rebuilt-topology dense reference
+    full, _ = run_batch(prog, sg.graph, sg.pack, cfg, [s], delta=sg.delta)
+    assert np.abs(np.asarray(full["rank"])
+                  - np.asarray(inc["rank"])).max() < 10 * tol
+    assert np.asarray(inc["rank"])[u, 0] > (1 - d) * r_u * 0.99
+    esrc, edst = _sg_edges(sg)
+    want = _np_ppr_coo(esrc, edst, n, s, d=d)
+    assert np.abs(np.asarray(query_result(inc, "rank", 0)) - want).max() \
+        < 10 * tol
+
+
+def test_sharded_pool_inflight_resume_across_update():
+    """The in-flight residual resume through a SHARDED pool: apply_updates
+    must drive `_LanePool.resume_residual` through ShardedAlgoPool's
+    host-gather + `_place_state` re-placement (state specs including the hot
+    plane), and the resumed lanes' completions must agree with a fresh run
+    on the updated graph."""
+    g = generators.grid2d(8, seed=5)
+    cfg = default_config(g, max_iters=256)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(
+        g, None, {"ppr_delta": alg.ppr_delta(0)}, slots=2, cfg=cfg,
+        cache_capacity=16, delta_cap=16,
+        result_fields={"ppr_delta": "rank"},
+        mesh=mesh, placements={"ppr_delta": Placement("replicated", 1)},
+    )
+    srv.submit("ppr_delta", 0)
+    srv.submit("ppr_delta", 63)
+    srv.pump()                                   # in flight on sharded lanes
+    pool = srv.pools["ppr_delta"]
+    assert any(r is not None for r in pool.lane_rid)
+    queries_before = pool.engine_queries
+    st = srv.apply_updates(inserts=[(1, 62)], deletes=[(0, 1)])
+    assert st["resumed_inflight"] >= 1, st
+    assert pool.engine_queries == queries_before, "resume is not a readmit"
+    comps = {c.source: c for c in srv.drain()}
+    sg = srv.sg
+    ref, _ = run_batch(alg.ppr_delta(0), sg.graph, sg.pack, cfg, [0, 63],
+                       delta=sg.delta)
+    for i, s in enumerate([0, 63]):
+        want = np.asarray(query_result(ref, "rank", i))
+        assert np.abs(comps[s].result - want).max() < 1e-3, s
+
+
+def test_residual_correct_keeps_parallel_edge_multiplicity():
+    """REGRESSION (review finding): parallel edges (from_edges dedupe=False)
+    each carried one d·x/deg push, so the Maiter correction must weight its
+    terms by edge MULTIPLICITY — collapsing neighbor lists to sets (or using
+    fancy-index `+=`, which applies once per unique index) silently corrupts
+    the resumed residuals when a deletion removes one copy of a duplicated
+    edge."""
+    tol = 1e-7
+    # s -> u, and u -> {v (x2, parallel), w}: deg(u) = 3 with multiplicity
+    edges = np.asarray([(0, 1), (1, 2), (1, 2), (1, 3), (2, 4), (3, 4)],
+                       dtype=np.int64)
+    g = from_edges(edges[:, 0], edges[:, 1], 5, None, directed=True,
+                   dedupe=False)
+    assert g.n_edges == 6
+    sg = StreamingGraph(g, delta_cap=16)
+    cfg = default_config(g, max_iters=256)
+    prog = alg.ppr_delta(0, tol=tol)
+    prev, _ = run_batch(prog, sg.graph, sg.pack, cfg, [0], delta=sg.delta)
+
+    sg.apply(deletes=[(1, 2)])         # removes ONE of the two parallel edges
+    inc, info = incremental_batch(prog, sg, cfg, [0], prev)
+    assert info["mode"] == "residual-resume"
+    full, _ = run_batch(prog, sg.graph, sg.pack, cfg, [0], delta=sg.delta)
+    diff = np.abs(np.asarray(full["rank"]) - np.asarray(inc["rank"])).max()
+    # multiplicity loss shows up at ~5e-2; fp reassociation noise under a
+    # loaded CPU thread pool stays below ~1e-5
+    assert diff < 1e-3, f"multiplicity lost in correction: {diff:.3e}"
+    _check_invariant(inc)
+
+
+# ---------------------------------------------------------------------------
+# overlay degree correctness (the live_degrees thread of the tentpole)
+# ---------------------------------------------------------------------------
+
+
+def test_overlay_run_matches_rebuilt_graph_degrees():
+    """A COLD ppr_delta run over streaming overlay views must match the
+    rebuilt graph: degree normalization (mass split) has to count live
+    edges — deletion-neutralized slots out, insertion COO in — not the
+    stale row_ptr diffs."""
+    g = generators.rmat(8, 4, seed=2, directed=True)
+    n = g.n_nodes
+    sg = StreamingGraph(g, delta_cap=64)
+    sg.apply(inserts=[(0, 9), (9, 41), (3, 7)],
+             deletes=[(int(g.out.src_idx[i]), int(g.out.col_idx[i]))
+                      for i in (0, 5, 9)])
+    cfg = default_config(g, max_iters=256)
+    m_ov, _ = run_batch(alg.ppr_delta(0), sg.graph, sg.pack, cfg, [0, 9],
+                        delta=sg.delta)
+    esrc, edst = _sg_edges(sg)
+    g_rb = from_edges(esrc, edst, n, None, directed=True, dedupe=False)
+    m_rb, _ = run_batch(alg.ppr_delta(0), g_rb, pack_ell(g_rb.inc), cfg,
+                        [0, 9])
+    # same degrees -> same thresholds -> same mass splits; only the ELL
+    # bucketing (pull reduction shape) can differ between the two packings
+    assert np.array_equal(np.asarray(m_ov["deg"]), np.asarray(m_rb["deg"]))
+    assert np.abs(np.asarray(m_ov["rank"])
+                  - np.asarray(m_rb["rank"])).max() < 1e-6

@@ -178,6 +178,58 @@ def test_apply_updates_never_serves_stale(refresh):
             )
 
 
+def test_apply_updates_resumes_inflight_ppr_delta():
+    """Version-swap with RESIDUAL-PUSH lanes in flight: `apply_updates` must
+    RESUME dirty `ppr_delta` lanes from Maiter-corrected residuals (not
+    restart them — `readmit` would bump engine_queries and zero the lane's
+    iteration counters) while clean cached entries re-key to the new
+    version, and every post-update completion must agree with a fresh run
+    on the updated graph."""
+    # connected grid + guaranteed-isolated vertices (clean cache entries)
+    g = generators.grid2d(8, seed=5)
+    import repro.graph.csr as csr_mod
+    src = np.asarray(g.out.src_idx)
+    dst = np.asarray(g.out.col_idx)
+    w = np.asarray(g.out.weights)
+    g = csr_mod.from_edges(src, dst, 80, w, directed=False)  # 64..79 isolated
+    cfg = default_config(g, max_iters=256)
+    srv = GraphServer(g, None, {"ppr_delta": alg.ppr_delta(0)}, slots=2,
+                      cfg=cfg, cache_capacity=64, delta_cap=32,
+                      result_fields={"ppr_delta": "rank"})
+    for s in [70, 75]:                           # isolated: stay clean
+        srv.submit("ppr_delta", s)
+    srv.drain()
+    assert len(srv.cache) == 2
+
+    srv.submit("ppr_delta", 0)
+    srv.submit("ppr_delta", 33)
+    srv.pump()                                   # admit + one step: in flight
+    pool = srv.pools["ppr_delta"]
+    assert any(r is not None for r in pool.lane_rid)
+    queries_before = pool.engine_queries
+    it_before = np.asarray(pool.state.it).copy()
+
+    st = srv.apply_updates(inserts=[(1, 62)], deletes=[(0, 1)])
+    assert st["resumed_inflight"] >= 1, st
+    assert st["reenqueued_inflight"] == 0, "residual lanes must not restart"
+    assert st["cache_retained"] == 2, st         # clean entries re-keyed
+    assert pool.engine_queries == queries_before, "resume is not a readmit"
+    assert (np.asarray(pool.state.it) >= it_before).all(), (
+        "iteration counters must survive the resume")
+
+    comps = {c.source: c for c in srv.drain()}
+    ref = _fresh_reference(srv, alg.ppr_delta, cfg, [0, 33])
+    for i, s in enumerate([0, 33]):
+        got = comps[s].result
+        want = np.asarray(query_result(ref, "rank", i))
+        # resumed mid-flight trajectories are tol-accurate, not bitwise
+        assert np.abs(got - want).max() < 1e-3, s
+    # a clean cached source still hits under the NEW version
+    rid = srv.submit("ppr_delta", 70)
+    comp = [c for c in srv.drain() if c.rid == rid][0]
+    assert comp.from_cache
+
+
 def test_apply_updates_reenqueues_dirty_inflight():
     g = generators.grid2d(10, seed=3)            # 100 nodes, slow BFS
     cfg = default_config(g, max_iters=256)
