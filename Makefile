@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-ppr bench-serving bench-streaming bench-sharded bench-ppr bench-schema
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-schema
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -21,6 +21,15 @@ smoke-sharded:
 		python -m repro.launch.serve_graph --requests 8 --slots 8 \
 		--scale 8 --mesh 8x1
 
+# sharded round-2 smoke: streaming updates through an edge-partitioned
+# server (compacted expansion + CSR-free admission + touched-delta
+# shipping) on a forced 8-device mesh, completions verified
+smoke-sharded2:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+		python -m repro.launch.stream_graph --requests 9 --slots 3 \
+		--scale 8 --update-every 4 --mesh 1x8 --placement edge_sharded \
+		--algos bfs,sssp,ppr_delta --verify
+
 # residual-push PPR smoke through sharded pools on a forced 8-device mesh
 smoke-ppr:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
@@ -39,6 +48,11 @@ bench-ppr:
 # sharded q/s-vs-shard-count benchmark (writes BENCH_sharded.json)
 bench-sharded:
 	PYTHONPATH=src python benchmarks/sharded_bench.py
+
+# round-2 column: compacted-vs-dense light iterations + touched-delta
+# update shipping (appends "compacted" to BENCH_sharded.json)
+bench-sharded2:
+	PYTHONPATH=src python benchmarks/sharded_bench.py --compacted
 
 # streaming incremental-vs-full benchmark (writes BENCH_streaming.json)
 bench-streaming:

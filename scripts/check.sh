@@ -35,6 +35,42 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.serve_graph --requests 6 --slots 4 --scale 8 \
     --mesh 2x4 --placement edge_sharded
 
+echo "== sharded round-2 smoke: compacted edge scan + touched-delta shipping =="
+# streaming updates through an edge-partitioned server on the forced
+# 8-device mesh: exercises the frontier-compacted per-shard expansion,
+# CSR-free admission and per-shard delta slice shipping, with every
+# completion verified against a from-scratch run on its graph version
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.stream_graph --requests 9 --slots 3 --scale 8 \
+    --update-every 4 --mesh 1x8 --placement edge_sharded \
+    --algos bfs,sssp,ppr_delta --verify
+# single-edge-shard pools must take the zero-copy delta path (allocation-
+# count assertion: no full overlay reslice per update batch)
+python - <<'PY'
+import numpy as np
+from repro.core import algorithms as alg
+from repro.graph import generators, partition
+from repro.serving import GraphServer, default_config, make_serving_mesh
+
+g = generators.rmat(8, 4, seed=1, directed=True)
+mesh = make_serving_mesh(1, 1)
+srv = GraphServer(g, None, {"bfs": alg.bfs(0)}, slots=2,
+                  cfg=default_config(g), delta_cap=16, mesh=mesh,
+                  placements={"bfs": ("edge_sharded", 1)})
+before = dict(partition.SHARD_DELTA_STATS)
+for k in range(3):
+    srv.submit("bfs", k)
+    srv.drain()
+    srv.apply_updates(inserts=[(k, k + 9)])
+after = dict(partition.SHARD_DELTA_STATS)
+assert after["full_reslice"] == before["full_reslice"], (
+    "single-shard pool paid a full overlay reslice", before, after)
+assert after["short_circuit"] > before["short_circuit"]
+ship = srv.update_log[-1]["shipped"]["bfs"]
+assert ship["edge_shards_shipped"] == 0, ship     # insert-only: base resident
+print("[check] single-shard delta short-circuit + touched shipping OK")
+PY
+
 echo "== ppr residual smoke (solo + batched + sharded 8-device mesh) =="
 python - <<'PY'
 # solo vs batched ppr_delta agreement + residual invariant on a small graph

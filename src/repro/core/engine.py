@@ -71,6 +71,18 @@ class EngineConfig:
     #: generous budget (matching the measured hot-row tail) beats a tight one
     #: that overflows to dense every iteration.
     masked_pull_frac: float = 0.65
+    #: edge-partitioned pools (serving/sharded.py): frontier-compact each
+    #: shard's COO scan on light iterations — gather only the slots whose
+    #: source is in the union frontier into a bounded `ceil(shard_slots *
+    #: shard_compact_frac)` buffer, falling back to the dense per-shard scan
+    #: when the consensus controller calls the iteration heavy or the buffer
+    #: overflows (the same static-buffer + overflow-bit accounting as the
+    #: push edge budget, DESIGN.md §2/§11). Results are bit-identical to the
+    #: dense scan either way; this is purely a cost switch.
+    shard_compact: bool = True
+    #: compaction buffer size per edge shard, as a fraction of the shard's
+    #: COO slots (delta lanes included).
+    shard_compact_frac: float = 0.25
 
 
 class EngineState(NamedTuple):

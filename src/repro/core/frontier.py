@@ -107,6 +107,27 @@ def ballot_filter(
     return compact_mask(changed_v[:n_nodes], cap, fill=n_nodes)
 
 
+def select_edges(
+    eactive: jnp.ndarray, cap: int
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shard-scan analogue of the online filter: stream-compact the indices
+    of active lanes of an (E,) edge mask into a (cap,) buffer for a gathered
+    (cap, ...) expansion, instead of scanning all E lanes densely.
+
+    Returns (safe_ids, lane_ok, overflow): `safe_ids` are in-range gather
+    indices (unused lanes clamp to E-1), `lane_ok` masks the lanes that hold
+    a real selected edge, and `overflow` flags a frontier too large for the
+    buffer — the caller falls back to the dense scan (nothing may truncate;
+    edge-partitioned scans have no pull rerouting to hide a dropped update).
+    Used by the frontier-compacted edge-shard expansion (serving/sharded.py,
+    DESIGN.md §11)."""
+    e = eactive.shape[0]
+    ids, cnt, ovf = compact_mask(eactive, cap, fill=e)
+    safe = jnp.minimum(ids, e - 1)
+    lane_ok = jnp.arange(cap, dtype=jnp.int32) < cnt
+    return safe, lane_ok, ovf
+
+
 def dedupe_winners(
     changed_e: jnp.ndarray, dst_e: jnp.ndarray, n_nodes: int
 ) -> jnp.ndarray:

@@ -52,8 +52,19 @@ class EdgeShards:
         return cls(*children)
 
 
-def shard_edges(g: Graph, n_shards: int, pad_multiple: int = 128) -> EdgeShards:
-    """Split the (push-direction) edge list into equal contiguous shards."""
+#: instrumentation for the streaming smoke's allocation-count assertion
+#: (DESIGN.md §11): `full_reslice` counts host round-trip + sentinel-pad
+#: allocations of the overlay, `short_circuit` counts the zero-copy
+#: single-shard path — single-shard pools must never pay a reslice.
+SHARD_DELTA_STATS = {"full_reslice": 0, "short_circuit": 0}
+
+
+def shard_edges_np(g: Graph, n_shards: int,
+                   pad_multiple: int = 128) -> tuple:
+    """Host-side (src, dst, wgt) slices of :func:`shard_edges` — (S, E_pad)
+    numpy triples. The diff-shipping layer (serving/sharded.py) compares
+    these against the previous update's slices to ship only the shard rows
+    an update batch actually touched."""
     src = np.asarray(g.out.src_idx)
     dst = np.asarray(g.out.col_idx)
     w = np.asarray(g.out.weights)
@@ -66,24 +77,25 @@ def shard_edges(g: Graph, n_shards: int, pad_multiple: int = 128) -> EdgeShards:
     d = np.full(tot, n, dtype=np.int32)
     ww = np.zeros(tot, dtype=np.float32)
     s[:m], d[:m], ww[:m] = src, dst, w
+    return (s.reshape(n_shards, per), d.reshape(n_shards, per),
+            ww.reshape(n_shards, per))
+
+
+def shard_edges(g: Graph, n_shards: int, pad_multiple: int = 128) -> EdgeShards:
+    """Split the (push-direction) edge list into equal contiguous shards."""
+    s, d, ww = shard_edges_np(g, n_shards, pad_multiple)
     return EdgeShards(
-        src=jnp.asarray(s.reshape(n_shards, per)),
-        dst=jnp.asarray(d.reshape(n_shards, per)),
-        wgt=jnp.asarray(ww.reshape(n_shards, per)),
-        n_nodes_arr=jnp.asarray(n, jnp.int32),
+        src=jnp.asarray(s),
+        dst=jnp.asarray(d),
+        wgt=jnp.asarray(ww),
+        n_nodes_arr=jnp.asarray(g.n_nodes, jnp.int32),
     )
 
 
-def shard_delta(delta, n_shards: int, n_nodes: int = None):
-    """Split a streaming :class:`~repro.graph.csr.EdgeDelta` COO overlay into
-    per-shard slices: (cap,) lanes -> (n_shards, ceil(cap/n_shards)) with the
-    real (prefix) lanes round-robined across shards and sentinel padding for
-    the rest. Each inserted edge lands on exactly ONE shard, so the
-    edge-partitioned scan's cross-shard monoid merge counts it once. The
-    per-shard capacity depends only on (cap, n_shards) — update batches never
-    change shapes (DESIGN.md §9)."""
-    from repro.graph.csr import EdgeDelta
-
+def shard_delta_np(delta, n_shards: int, n_nodes: int = None) -> tuple:
+    """Host-side (src, dst, w) slices of :func:`shard_delta` — the
+    (n_shards, ceil(cap/n_shards)) round-robin layout as numpy arrays, for
+    the touched-slice diff before shipping (serving/sharded.py)."""
     src = np.asarray(delta.src)
     if n_nodes is None:
         n_nodes = int(src.max(initial=0))  # sentinel is the max by contract
@@ -96,8 +108,36 @@ def shard_delta(delta, n_shards: int, n_nodes: int = None):
     s[:cap] = src
     d[:cap] = np.asarray(delta.dst)
     w[:cap] = np.asarray(delta.w)
-    rr = lambda a: jnp.asarray(a.reshape(per, n_shards).T)  # noqa: E731
-    return EdgeDelta(src=rr(s), dst=rr(d), w=rr(w))
+    rr = lambda a: np.ascontiguousarray(a.reshape(per, n_shards).T)  # noqa: E731
+    return rr(s), rr(d), rr(w)
+
+
+def shard_delta(delta, n_shards: int, n_nodes: int = None):
+    """Split a streaming :class:`~repro.graph.csr.EdgeDelta` COO overlay into
+    per-shard slices: (cap,) lanes -> (n_shards, ceil(cap/n_shards)) with the
+    real (prefix) lanes round-robined across shards and sentinel padding for
+    the rest. Each inserted edge lands on exactly ONE shard, so the
+    edge-partitioned scan's cross-shard monoid merge counts it once. The
+    per-shard capacity depends only on (cap, n_shards) — update batches never
+    change shapes (DESIGN.md §9).
+
+    `n_shards == 1` short-circuits to a device-side reshape of the existing
+    overlay lanes — the round-robin layout is the identity there, and the
+    general path's host round-trip + sentinel-pad buffers would allocate a
+    redundant full copy per update batch (`SHARD_DELTA_STATS` counts both
+    paths; the streaming smoke asserts single-shard pools never reslice)."""
+    from repro.graph.csr import EdgeDelta
+
+    if n_shards == 1:
+        SHARD_DELTA_STATS["short_circuit"] += 1
+        cap = delta.src.shape[0]
+        return EdgeDelta(src=jnp.reshape(delta.src, (1, cap)),
+                         dst=jnp.reshape(delta.dst, (1, cap)),
+                         w=jnp.reshape(delta.w, (1, cap)))
+    SHARD_DELTA_STATS["full_reslice"] += 1
+    s, d, w = shard_delta_np(delta, n_shards, n_nodes)
+    return EdgeDelta(src=jnp.asarray(s), dst=jnp.asarray(d),
+                     w=jnp.asarray(w))
 
 
 def shard_nodes(n_nodes: int, n_shards: int, pad_multiple: int = 8) -> int:

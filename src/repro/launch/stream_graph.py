@@ -11,6 +11,12 @@ in-flight queries.
 
   PYTHONPATH=src python -m repro.launch.stream_graph --requests 24 --slots 4
 
+`--mesh DxS` streams through SHARDED pools (DESIGN.md §9/§11) — updates
+then exercise the touched-delta slice shipping and, with
+`--placement edge_sharded`, the frontier-compacted per-shard expansion and
+CSR-free admission; needs D*S jax devices (forced host mesh, see
+serve_graph).
+
 With `--verify`, every completion is checked against a from-scratch run on
 the graph version it was served under (slow; testing only).
 """
@@ -23,7 +29,14 @@ import time
 import numpy as np
 
 from repro.core import algorithms as alg
-from repro.serving import GraphServer, default_config, query_result, run_batch
+from repro.serving import (
+    GraphServer,
+    Placement,
+    default_config,
+    make_serving_mesh,
+    query_result,
+    run_batch,
+)
 from repro.launch.serve_graph import build_graph
 
 
@@ -59,6 +72,13 @@ def main(argv=None):
                     choices=("incremental", "drop"))
     ap.add_argument("--verify", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="",
+                    help="stream through sharded pools on a DxS ('data' x "
+                         "'model') mesh, e.g. 8x1 or 1x4; empty = "
+                         "single-device pools")
+    ap.add_argument("--placement", default="replicated",
+                    choices=("replicated", "edge_sharded"),
+                    help="pool placement on the --mesh")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -75,10 +95,26 @@ def main(argv=None):
                  f"got {unknown or args.algos!r}")
     programs = {a: factories[a](0) for a in algos}
 
+    mesh = None
+    placements = None
+    if args.mesh:
+        try:
+            d, s = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            ap.error(f"--mesh must look like DxS (e.g. 8x1), got {args.mesh!r}")
+        mesh = make_serving_mesh(d, s)
+        n_shards = d if args.placement == "replicated" else s
+        placements = {a: Placement(args.placement, n_shards) for a in algos}
+        if args.slots % d:
+            ap.error(f"--slots {args.slots} must divide over {d} query shards")
+        print(f"[stream_graph] sharded pools: mesh {d}x{s}, "
+              f"placement={args.placement}")
+
     srv = GraphServer(
         g, None, programs, slots=args.slots, cfg=default_config(g),
         cache_capacity=args.cache_cap, delta_cap=args.delta_cap,
         result_fields={"ppr": "rank", "ppr_delta": "rank"},
+        mesh=mesh, placements=placements,
     )
     # version -> overlay views, for --verify of historical completions.
     # Only kept under --verify: each version pins full-size device arrays,

@@ -63,6 +63,17 @@ from repro.graph.csr import CSR, EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 
 
+class GraphDims(NamedTuple):
+    """Static graph dimensions, standing in for a full :class:`Graph` on the
+    CSR-free admission path (DESIGN.md §11): edge-partitioned pools never
+    scan a replicated CSR, so their `init`/`_admit_lane` calls pass these
+    dims plus the pool's cached (n,) live-degree vector instead of shipping
+    the O(m) adjacency arrays into every admission."""
+
+    n_nodes: int
+    n_edges: int
+
+
 class BatchState(NamedTuple):
     """Q stacked query states, vertex-major, plus one consensus mode."""
 
@@ -377,14 +388,27 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     when `cfg.masked_pull` is set (the partial caches are sized per slice).
     `check_caps=False` skips the push-only no-overflow assertion for
     engines whose push path cannot truncate (the edge-partitioned scan,
-    serving/sharded.py, is dense over each partition and never consults the
-    frontier/edge budgets). `delta` is the streaming insertion overlay —
-    init only needs it for live degree counts (csr.live_degrees), so degree-
-    normalizing programs see the overlaid topology's degrees; `deg` passes a
-    precomputed live-degree vector instead (the O(m) count is constant per
-    graph version, so the per-admission hot path supplies the pool's cached
-    one rather than recounting every edge per admitted lane).
+    serving/sharded.py, never consults the frontier/edge budgets — its
+    compaction buffer falls back to the dense shard scan on overflow).
+    `delta` is the streaming insertion overlay — init only needs it for live
+    degree counts (csr.live_degrees), so degree-normalizing programs see the
+    overlaid topology's degrees; `deg` passes a precomputed live-degree
+    vector instead (the O(m) count is constant per graph version, so the
+    per-admission hot path supplies the pool's cached one rather than
+    recounting every edge per admitted lane).
+
+    `g` may be a bare :class:`GraphDims` (with `deg` required) on the
+    CSR-free path: everything init computes from the adjacency — the union
+    out-edge volume and the live degrees — then comes from `deg` alone, so
+    edge-partitioned admissions never touch a replicated CSR. Note the two
+    volume sources differ on an overlay: the CSR path counts row_ptr SLOTS
+    (deletion-neutralized slots included), the deg path counts live edges —
+    which is also what the edge-sharded loop body measures, so CSR-free
+    pools see consistent volumes at admission and in-loop.
     """
+    csr_free = isinstance(g, GraphDims)
+    assert not csr_free or deg is not None, (
+        "CSR-free init needs a precomputed live-degree vector")
     sources = jnp.asarray(sources, jnp.int32)
     q = sources.shape[0]
     n = g.n_nodes
@@ -416,7 +440,10 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     done = jnp.asarray(done)
     mask = mask & ~done[None, :]
     count = jnp.sum(mask, axis=0).astype(jnp.int32)
-    union_fe, overflow = _union_volume(g.out, cfg, mask)
+    if csr_free:
+        union_fe, overflow = _union_volume_deg(deg, cfg, mask)
+    else:
+        union_fe, overflow = _union_volume(g.out, cfg, mask)
     if cfg.masked_pull and pack is not None:
         dt = m[program.primary].dtype
         ident = program.combiner.identity(dt)

@@ -10,7 +10,26 @@ bump `GraphServer.graph_version` and old keys simply never match again.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Hashable, Optional, Tuple
+from typing import Any, Hashable, NamedTuple, Optional, Tuple
+
+
+class CachedEntry(NamedTuple):
+    """A cache value carrying resumable state beyond the served result.
+
+    Residual-push pools (`ppr_delta`) store `(rank, {resid: ...})` so a
+    DIRTY cached entry can refresh incrementally across a streaming update
+    (Maiter-correct the residuals, resume the fixpoint) instead of dropping
+    — a bare (n,) rank is not resumable (ROADMAP streaming 3(e), DESIGN.md
+    §11). `result` is what a cache hit serves; `extras` maps extra metadata
+    field names to their (n,) planes."""
+
+    result: Any
+    extras: dict
+
+
+def served_result(value):
+    """The (n,) result a cache hit serves, whatever the stored shape."""
+    return value.result if isinstance(value, CachedEntry) else value
 
 
 def make_key(graph_version: int, algo: str, source: int,

@@ -115,18 +115,7 @@ class ShardedAlgoPool(_LanePool):
         self.state = self.engine.init(
             jnp.zeros((slots,), jnp.int32),
             done=jnp.ones((slots,), bool))
-        # admission reuses the single-device lane write under plain jit:
-        # GSPMD partitions the column update over the sharded state, and the
-        # out_shardings pin keeps the state's layout stable across admits
-        # (the edge-sharded scan never truncates, so its push-only capacity
-        # check is skipped)
-        check_caps = self.placement.kind != "edge_sharded"
-        self._admit = jax.jit(
-            lambda st, source, lane, g_, d_, deg_: _admit_lane(
-                program, g_, cfg, st, source, lane, check_caps=check_caps,
-                delta=d_, deg=deg_),
-            out_shardings=self.engine.state_shardings,
-        )
+        self._make_admit()
         self._refresh_live_deg()
         #: extra cache-key params (see module docstring)
         self.cache_params = (
@@ -134,6 +123,10 @@ class ShardedAlgoPool(_LanePool):
             if (self.placement.kind == "edge_sharded"
                 and program.combiner.name == "sum")
             else ())
+        # residual-push pools cache (rank, resid) so dirty entries can
+        # refresh incrementally instead of dropping (streaming 3(e))
+        if program.param("kind") == "residual":
+            self.cache_extra_fields = (program.param("residual", "resid"),)
         self.engine_queries = 0
         self.steps = 0
 
@@ -145,6 +138,52 @@ class ShardedAlgoPool(_LanePool):
         per = self.slots // self.n_query_shards
         return sorted(super().free_lanes(),
                       key=lambda lane: (lane % per, lane // per))
+
+    def _make_admit(self) -> None:
+        """(Re)build the jitted admission closure. Admission reuses the
+        single-device lane write under plain jit: GSPMD partitions the
+        column update over the sharded state, and the out_shardings pin
+        keeps the state's layout stable across admits. Edge-sharded
+        admission is CSR-FREE (DESIGN.md §11): the jitted write consumes
+        only the static graph dims + the pool's cached (n,) live-degree
+        vector — the O(m) adjacency never enters the call (and the
+        edge-sharded scan never truncates, so the push-only capacity check
+        is skipped too). The dims are baked into the closure, so
+        `set_graph` re-makes it when a rebuild changes the edge count."""
+        program, cfg = self.program, self.cfg
+        if self.placement.kind == "edge_sharded":
+            from repro.serving.batch_engine import GraphDims
+
+            dims = GraphDims(self.engine.n, self.engine.n_edges)
+            self._admit_dims = dims
+            self._admit = jax.jit(
+                lambda st, source, lane, g_, d_, deg_: _admit_lane(
+                    program, dims, cfg, st, source, lane, check_caps=False,
+                    deg=deg_),
+                out_shardings=self.engine.state_shardings,
+            )
+        else:
+            self._admit_dims = None
+            self._admit = jax.jit(
+                lambda st, source, lane, g_, d_, deg_: _admit_lane(
+                    program, g_, cfg, st, source, lane, delta=d_, deg=deg_),
+                out_shardings=self.engine.state_shardings,
+            )
+
+    def _admit_graph(self):
+        # CSR-free: no graph view enters the jitted edge-sharded admission
+        return None if self.placement.kind == "edge_sharded" else self.g
+
+    def _admit_delta(self):
+        return None if self.placement.kind == "edge_sharded" else self.delta
+
+    def _refresh_live_deg(self) -> None:
+        # the engine already counted + mesh-placed the live-degree vector
+        # for this graph version — admission reuses it instead of recounting
+        if self.placement.kind == "edge_sharded":
+            self.live_deg = self.engine.deg
+        else:
+            super()._refresh_live_deg()
 
     def step(self) -> None:
         if self.live():
@@ -163,6 +202,12 @@ class ShardedAlgoPool(_LanePool):
         self.engine.set_graph(g, pack, delta)
         self.g, self.pack, self.delta = (
             self.engine.g, self.engine.pack, self.engine.delta)
+        if (self._admit_dims is not None
+                and self._admit_dims.n_edges != self.engine.n_edges):
+            # an overflow rebuild changed m: re-bake the CSR-free admit
+            # closure's static dims so post-rebuild consensus decisions see
+            # the current edge count
+            self._make_admit()
         self._refresh_live_deg()
         self._reset_masked_pull_cache()
 

@@ -62,7 +62,12 @@ from repro.core.engine import EngineConfig
 from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 from repro.serving import batch_engine as B
-from repro.serving.cache import ResultCache, make_key
+from repro.serving.cache import (
+    CachedEntry,
+    ResultCache,
+    make_key,
+    served_result,
+)
 
 
 class QueueFull(Exception):
@@ -121,7 +126,7 @@ class _LanePool:
         assert self.lane_rid[lane] is None
         self.state = self._admit(
             self.state, jnp.int32(source), jnp.int32(lane),
-            self._admit_graph(), self.delta, self.live_deg,
+            self._admit_graph(), self._admit_delta(), self.live_deg,
         )
         self.lane_rid[lane] = rid
         self.engine_queries += 1
@@ -133,7 +138,7 @@ class _LanePool:
         assert self.lane_rid[lane] is not None
         self.state = self._admit(
             self.state, jnp.int32(source), jnp.int32(lane),
-            self._admit_graph(), self.delta, self.live_deg,
+            self._admit_graph(), self._admit_delta(), self.live_deg,
         )
         self.engine_queries += 1
 
@@ -171,8 +176,15 @@ class _LanePool:
     def _place_state(self, st: B.BatchState) -> B.BatchState:
         return st
 
+    #: extra metadata planes to harvest alongside the result — residual
+    #: pools set this to their residual field so cached entries carry the
+    #: full (rank, resid) resumable state (streaming 3(e), DESIGN.md §11)
+    cache_extra_fields: tuple = ()
+
     def harvest(self) -> List[tuple]:
-        """(lane, rid, result, iterations) for every lane that converged."""
+        """(lane, rid, result, iterations, extras) for every converged lane;
+        `extras` is a {field: (n,) np} dict of `cache_extra_fields` planes
+        (empty for the plain min/max/pull pools)."""
         if not self.live():
             return []
         done = np.asarray(self.state.done)
@@ -181,12 +193,17 @@ class _LanePool:
             if rid is None or not done[lane]:
                 continue
             res = np.asarray(self.state.m[self.result_field][:-1, lane])
-            out.append((lane, rid, res, int(self.state.it[lane])))
+            extras = {f: np.asarray(self.state.m[f][:-1, lane])
+                      for f in self.cache_extra_fields}
+            out.append((lane, rid, res, int(self.state.it[lane]), extras))
             self.lane_rid[lane] = None
         return out
 
     def _admit_graph(self):
         return self.g
+
+    def _admit_delta(self):
+        return self.delta
 
     def _place_pseg(self, pseg: tuple) -> tuple:
         return pseg
@@ -249,6 +266,10 @@ class AlgoPool(_LanePool):
         #: extra cache-key params; single-device results are the bitwise
         #: reference, so no distinguishing params (see serving/placement.py)
         self.cache_params: tuple = ()
+        # residual-push pools cache (rank, resid) so dirty entries can
+        # refresh incrementally instead of dropping (streaming 3(e))
+        if program.param("kind") == "residual":
+            self.cache_extra_fields = (program.param("residual", "resid"),)
 
     # -- scheduling interface: free_lanes/live/admit/harvest/readmit from
     # _LanePool ---------------------------------------------------------------
@@ -271,7 +292,11 @@ class AlgoPool(_LanePool):
 def _admit_lane(program, g, cfg, st: B.BatchState, source, lane,
                 check_caps: bool = True, delta=None,
                 deg=None) -> B.BatchState:
-    """Write one freshly initialized query into lane `lane` (jitted)."""
+    """Write one freshly initialized query into lane `lane` (jitted).
+
+    `g` may be a bare `B.GraphDims` (CSR-free admission, DESIGN.md §11):
+    with the precomputed live-degree vector `deg`, nothing here needs the
+    adjacency arrays — union volumes come from the degree sum."""
     one = B.init_batch(program, g, cfg, source[None], check_caps=check_caps,
                        delta=delta, deg=deg)
     m = {k: st.m[k].at[:, lane].set(one.m[k][:, 0]) for k in st.m}
@@ -293,7 +318,10 @@ def _admit_lane(program, g, cfg, st: B.BatchState, source, lane,
     if cfg.masked_pull and st.pull_dense is not None:
         # the new lane has no valid partial cache yet
         st = st._replace(pull_dense=jnp.asarray(True))
-    union_fe, overflow = B._union_volume(g.out, cfg, active)
+    if isinstance(g, B.GraphDims):
+        union_fe, overflow = B._union_volume_deg(deg, cfg, active)
+    else:
+        union_fe, overflow = B._union_volume(g.out, cfg, active)
     st = st._replace(union_fe=union_fe, overflow=overflow)
     return st._replace(gmode=B._consensus_mode(program, cfg, g.n_edges, st))
 
@@ -404,7 +432,8 @@ class GraphServer:
         if hit is not None:
             self._next_rid += 1
             self.completions.append(Completion(
-                rid=rid, algo=algo, source=int(source), result=hit,
+                rid=rid, algo=algo, source=int(source),
+                result=served_result(hit),
                 iterations=0, from_cache=True,
                 graph_version=self.graph_version, tenant=tenant,
             ))
@@ -456,7 +485,7 @@ class GraphServer:
 
     def _harvest_pool(self, name: str, pool: AlgoPool) -> List[Completion]:
         out = []
-        for _lane, rid, result, iters in pool.harvest():
+        for _lane, rid, result, iters, extras in pool.harvest():
             comp = Completion(
                 rid=rid, algo=name, source=self._source_of(rid, name, result),
                 result=result, iterations=iters, from_cache=False,
@@ -466,7 +495,7 @@ class GraphServer:
             self.cache.put(
                 make_key(self.graph_version, comp.algo, comp.source,
                          pool.cache_params),
-                comp.result,
+                CachedEntry(comp.result, extras) if extras else comp.result,
             )
             out.append(comp)
         return out
@@ -526,7 +555,11 @@ class GraphServer:
                 self.cache.put(
                     make_key(self.graph_version, algo, source, params), value)
                 retained += 1
-            elif algo in self.pools and params == ():
+            elif (algo in self.pools
+                  and params == self.pools[algo].cache_params):
+                # entries matching their pool's current cache tag (() for
+                # bit-exact pools, the placement tag for edge-sharded sum
+                # pools) are refresh candidates — re-keyed under the same tag
                 dirty_entries[algo].append((source, value))
             else:
                 dropped += 1
@@ -569,17 +602,39 @@ class GraphServer:
             "reenqueued_inflight": len(re_enqueued_rids),
             "reenqueued_rids": re_enqueued_rids,
             "resumed_inflight": resumed_inflight,
+            # touched-delta slice shipping (DESIGN.md §11): what each
+            # sharded pool's view swap actually moved to the mesh
+            "shipped": {
+                name: dict(p.engine.last_ship)
+                for name, p in self.pools.items() if hasattr(p, "engine")
+            },
         }
         self.update_log.append(stats)
         return stats
 
     def _refresh_cached(self, dirty_entries: Dict[str, list],
                         chunk: int = 64) -> tuple:
-        """Incrementally recompute dirty cached fixpoints of monotone
-        single-field programs (BFS/SSSP); others are dropped. The cached
-        (n,) primary IS the full metadata for these programs, so the
-        previous fixpoint is reconstructible without re-running anything."""
+        """Incrementally recompute dirty cached fixpoints instead of
+        dropping them, per program regime:
+
+          * monotone single-field programs (BFS/SSSP): the cached (n,)
+            primary IS the full metadata, so the previous fixpoint is
+            reconstructible and resumes bit-identically;
+          * residual-push programs (`ppr_delta`): cached entries carry the
+            (rank, resid) split (`CachedEntry`), so the refresh
+            Maiter-corrects the residuals and RESUMES the fixpoint via
+            `reseed_from_residuals` — a bare rank would not be resumable
+            and used to drop (ROADMAP streaming 3(e));
+          * everything else is dropped.
+
+        Refreshed entries re-key under their pool's cache tag (the
+        edge-sharded placement tag included): the refresh itself runs on
+        the single-device incremental engine, which is fine — refreshed
+        fixpoints are tol-accurate by contract, and the tag's only promise
+        is that the bit-exact () key never serves a foreign bit pattern.
+        """
         from repro.streaming import incremental_batch, is_monotone
+        from repro.streaming.incremental import is_residual
 
         refreshed = dropped = 0
         n = self.sg.n
@@ -588,6 +643,37 @@ class GraphServer:
                 continue
             pool = self.pools[algo]
             program = pool.program
+            est_f = program.param("estimate", "rank")
+            if is_residual(program) and pool.result_field == est_f:
+                res_f = program.param("residual", "resid")
+                # only wrapped entries carry the resumable residual plane
+                ok = [(s, v) for s, v in entries
+                      if isinstance(v, CachedEntry) and res_f in v.extras]
+                dropped += len(entries) - len(ok)
+                for i in range(0, len(ok), chunk):
+                    part = ok[i:i + chunk]
+                    sources = np.asarray([s for s, _v in part], np.int64)
+                    zrow = np.zeros((1,), np.float32)
+                    prev_m = {
+                        est_f: np.stack(
+                            [np.concatenate([v.result, zrow])
+                             for _s, v in part], axis=1),
+                        res_f: np.stack(
+                            [np.concatenate([v.extras[res_f], zrow])
+                             for _s, v in part], axis=1),
+                    }
+                    m, _info = incremental_batch(
+                        program, self.sg, self.cfg, sources, prev_m)
+                    rank = np.asarray(m[est_f])
+                    resid = np.asarray(m[res_f])
+                    for j, s in enumerate(sources):
+                        self.cache.put(
+                            make_key(self.graph_version, algo, int(s),
+                                     pool.cache_params),
+                            CachedEntry(rank[:n, j],
+                                        {res_f: resid[:n, j]}))
+                    refreshed += len(part)
+                continue
             reconstructible = (
                 is_monotone(program)
                 and set(pool.state.m.keys()) == {program.primary}
@@ -607,7 +693,8 @@ class GraphServer:
                 res = np.asarray(m[program.primary])
                 for j, s in enumerate(sources):
                     self.cache.put(
-                        make_key(self.graph_version, algo, int(s)),
+                        make_key(self.graph_version, algo, int(s),
+                                 pool.cache_params),
                         res[:n, j])
                 refreshed += len(part)
         return refreshed, dropped

@@ -25,7 +25,14 @@ SpMM view):
     partials merge across shards with the combine monoid's all-reduce
     (`psum` for sum — implementable as psum_scatter+all_gather — and
     pmin/pmax for the idempotent monoids). Per-iteration device state
-    touches only the shard's E/S edge triples + O(n·Q) metadata.
+    touches only the shard's E/S edge triples + O(n·Q) metadata. Round 2
+    (DESIGN.md §11): LIGHT iterations frontier-compact the shard scan
+    (`cfg.shard_compact` — gather only union-frontier slots into a bounded
+    buffer, switched by the consensus controller, dense fallback on
+    overflow, bit-identical either way); admission and init are CSR-FREE
+    (only the cached (n,) live-degree vector, never the O(m) adjacency);
+    streaming updates ship only the CHANGED per-shard slices / replicated
+    leaves (`set_graph` diffing, `last_ship`).
 
 Exactness (§7 argument, unchanged): per-query metadata is a pure function
 of per-query frontier trajectories; batch-mates and shard layout influence
@@ -53,6 +60,7 @@ Consensus flavors:
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -61,6 +69,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.core import frontier as F
 from repro.core.acc import ACCProgram, Combiner
 from repro.core.engine import PULL, PUSH, EngineConfig
 from repro.graph import partition
@@ -207,14 +216,55 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
     the union frontier for push-semantics programs, unmasked for pull-only
     programs), segment-combine locally, monoid-all-reduce across 'model'.
 
-    No frontier compaction, no edge budget, no overflow: the scan covers
-    every shard edge each iteration, so nothing can truncate — push-only
-    programs run without the no-overflow capacity assertion, and the mode
-    controller degenerates (one scan kind per program).
+    No edge budget, no truncation: heavy iterations scan every shard slot
+    densely, so push-only programs run without the no-overflow capacity
+    assertion and the mode controller degenerates to one scan KIND per
+    program. Light iterations of push-semantics programs take the
+    **frontier-compacted expansion** (`cfg.shard_compact`, DESIGN.md §11):
+    the shard gathers only COO slots whose source is in the union frontier —
+    stream-compacted into a bounded `ceil(slots * shard_compact_frac)`
+    buffer — instead of paying the full O(m/shards) gather/compute. The
+    existing consensus controller is the switch (its PUSH decision == a
+    light iteration; pull-only programs always scan densely — every slot
+    contributes to an unmasked SpMM), and a compaction-buffer overflow falls
+    back to the dense scan for that iteration, so nothing can ever truncate.
+    Both scan flavors produce the same contribution multiset per
+    destination, so results (and the degenerate mode trace) are
+    bit-identical to the always-dense scan — compaction is purely a cost
+    switch, which is what lets the two paths share one differential test
+    oracle (tests/test_sharded.py).
     """
     comb = program.combiner
     masked = program.modes != "pull"      # push semantics for both/push
     was_mode = PUSH if masked else PULL
+
+    def scan_dense(st, src, dst, w, valid):
+        sender = {k: v[src] for k, v in st.m.items()}        # (E_s, Q) rows
+        receiver = {k: v[dst] for k, v in st.m.items()}
+        upd = program.compute(sender, w[:, None], receiver)
+        ident = comb.identity(upd.dtype)
+        if masked:
+            eactive = st.active[src] & valid[:, None]
+        else:
+            eactive = jnp.broadcast_to(valid[:, None], upd.shape)
+        upd = jnp.where(eactive, upd, ident)
+        return comb.segment(upd, dst, n + 1)                 # shard partial
+
+    def scan_compacted(st, src, dst, w, eact, cap):
+        # the id compaction (cumsum + scatter) runs only on iterations that
+        # actually take this branch; heavy iterations pay one O(E_s) count
+        ids, lane_ok, _ovf = F.select_edges(eact, cap)
+        ssrc, sdst, sw = src[ids], dst[ids], w[ids]
+        sender = {k: v[ssrc] for k, v in st.m.items()}       # (cap, Q) rows
+        receiver = {k: v[sdst] for k, v in st.m.items()}
+        upd = program.compute(sender, sw[:, None], receiver)
+        ident = comb.identity(upd.dtype)
+        # selected lanes hold union-frontier edges; per-query masking still
+        # applies (an edge carries query q's message iff its source is in
+        # q's frontier), and clamped filler lanes are inert
+        eactive = st.active[ssrc] & lane_ok[:, None]
+        upd = jnp.where(eactive, upd, ident)
+        return comb.segment(upd, sdst, n + 1)
 
     def step(st: B.BatchState, esrc, edst, ewgt, deg,
              dsrc, ddst, dwgt) -> B.BatchState:
@@ -227,16 +277,27 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
             w = jnp.concatenate([w, dwgt.reshape(-1)])
         valid = (src < n) & (dst < n)     # sentinel pads / neutralized slots
 
-        sender = {k: v[src] for k, v in st.m.items()}        # (E_s, Q) rows
-        receiver = {k: v[dst] for k, v in st.m.items()}
-        upd = program.compute(sender, w[:, None], receiver)
-        ident = comb.identity(upd.dtype)
-        if masked:
-            eactive = st.active[src] & valid[:, None]
+        if masked and cfg.shard_compact:
+            e_tot = int(src.shape[0])
+            cap = min(e_tot, max(128, int(
+                math.ceil(e_tot * cfg.shard_compact_frac))))
+            union = jnp.any(st.active, axis=-1)              # (n+1,)
+            eact = union[src] & valid
+            c_ovf = jnp.sum(eact) > cap                      # O(E_s) count
+            # the controller's carried decision: PUSH == light iteration.
+            # Shards of one 'model' group see identical lanes, so they take
+            # the same branch; the cross-shard all-reduce sits OUTSIDE the
+            # cond, so divergent groups (possible when Q also shards over
+            # 'data') still meet every collective in lockstep.
+            heavy = B._consensus_mode(program, cfg, n_edges, st) == PULL
+            seg = jax.lax.cond(
+                heavy | c_ovf,
+                lambda s: scan_dense(s, src, dst, w, valid),
+                lambda s: scan_compacted(s, src, dst, w, eact, cap),
+                st,
+            )
         else:
-            eactive = jnp.broadcast_to(valid[:, None], upd.shape)
-        upd = jnp.where(eactive, upd, ident)
-        seg = comb.segment(upd, dst, n + 1)                  # shard partial
+            seg = scan_dense(st, src, dst, w, valid)
         seg = _monoid_all_reduce(comb, seg, MODEL_AXIS)      # cross-shard merge
 
         m_new = program.run_apply(st.m, seg, st.it)
@@ -292,44 +353,185 @@ class ShardedBatchEngine:
         self._shardings = None
         self._step_j = None
         self._run_j = None
+        self._rebuild_pending = False
+        # diff-shipping caches (touched-delta slice shipping, DESIGN.md §11)
+        self._rep_cache: dict = {}      # replicated: name -> (treedef, host, dev)
+        self._row_cache: dict = {}      # edge-sharded: name -> (host (S,L), dev)
+        self._base_leaves = None
+        self._delta_leaves = None
+        self.deg = None
+        self._deg_base = None
+        self.delta = delta              # pre-set for set_graph's delta-ness check
+        self.last_ship: dict = {}
         self.set_graph(g, pack, delta)
 
     # -- device views --------------------------------------------------------
 
     def set_graph(self, g: Graph, pack: EllPack,
                   delta: Optional[EdgeDelta]) -> None:
-        """(Re)place the graph views on the mesh. Replicated placement
-        broadcasts all three views to every shard; edge-sharded placement
-        re-partitions the (possibly overlay-neutralized) edge list over
-        'model' and round-robins the insertion delta into per-shard slices.
+        """(Re)place the graph views on the mesh, shipping only what CHANGED
+        (DESIGN.md §11 — streaming updates used to re-broadcast every view to
+        every replica per batch):
+
+          * replicated placement diffs the new views against the previous
+            ones LEAF BY LEAF (the streaming overlay keeps untouched arrays
+            identity-stable across `apply` batches) and re-broadcasts only
+            the changed leaves — an insert-only batch ships the delta COO +
+            the delta ELL slice, never the O(m) CSR arrays;
+          * edge-sharded placement re-slices and ships only the per-shard
+            COO/delta ROWS whose contents changed (`partition.shard_delta`
+            diffed against the previous slices), stitching unchanged shards'
+            resident device buffers back into the global view. The O(m)
+            adjacency itself never lands on the mesh at all — admission is
+            CSR-free and consumes only the cached (n,) live-degree vector.
+
         Shapes are update-invariant, so pools swap views with no recompile
-        (an overflow rebuild changes m and pays one, as on one device)."""
+        (an overflow rebuild changes m and pays one full re-ship + compile,
+        as on one device). `last_ship` records what this call moved."""
         if self._specs is not None:
             # the step closures' in_specs were built for this delta-ness;
             # an EdgeDelta appearing/vanishing changes the arg pytree
             assert (delta is None) == (self.delta is None), (
                 "set_graph cannot change whether a delta overlay exists — "
                 "construct the engine with the (possibly empty) delta")
+        if g.n_edges != self.n_edges:
+            # an overflow rebuild changed the edge count: the consensus
+            # alpha test's denominator (and, for replicated placement, the
+            # view-spec pytree) are baked into the step/run closures —
+            # refresh them so post-rebuild decisions use the CURRENT m
+            # (they pay a retrace anyway: the view shapes moved)
+            self.n_edges = g.n_edges
+            if self._specs is not None:
+                self._rebuild_pending = True
+        self.last_ship = {"replicated_leaves_shipped": 0,
+                          "replicated_leaves_total": 0,
+                          "edge_shards_shipped": 0,
+                          "delta_shards_shipped": 0,
+                          "n_edge_shards": self.n_edge_shards}
+        if self.placement == "replicated":
+            self.g = self._put_rep_diff("g", g)
+            self.pack = self._put_rep_diff("pack", pack)
+            self.delta = (self._put_rep_diff("delta", delta)
+                          if delta is not None else None)
+            self._maybe_rebuild_jits()
+            return
+        # edge-sharded: host-side references only (live-degree counting);
+        # the replicated CSR/pack never reach the mesh (CSR-free admission)
+        self.g, self.pack, self.delta = g, pack, delta
+        s_edges = NamedSharding(self.mesh, P(MODEL_AXIS, None))
         rep = NamedSharding(self.mesh, P())
-        put_rep = lambda t: jax.tree.map(  # noqa: E731
-            lambda x: jax.device_put(x, rep), t)
-        self.g = put_rep(g)
-        self.pack = put_rep(pack)
-        self.delta = put_rep(delta) if delta is not None else None
-        if self.placement == "edge_sharded":
-            esh = partition.shard_edges(g, self.n_edge_shards)
-            s_edges = NamedSharding(self.mesh, P(MODEL_AXIS, None))
-            self.esrc = jax.device_put(esh.src, s_edges)
-            self.edst = jax.device_put(esh.dst, s_edges)
-            self.ewgt = jax.device_put(esh.wgt, s_edges)
-            self.deg = jax.device_put(live_degrees(g.out, delta), rep)
-            if delta is not None:
-                dsh = partition.shard_delta(delta, self.n_edge_shards, self.n)
+        base_leaves = (g.out.row_ptr, g.out.col_idx, g.out.weights,
+                       g.out.src_idx)
+        base_changed = (self._base_leaves is None or any(
+            a is not b for a, b in zip(base_leaves, self._base_leaves)))
+        if base_changed:
+            es, ed, ew = partition.shard_edges_np(g, self.n_edge_shards)
+            self.esrc, n1 = self._place_rows("esrc", es, s_edges)
+            self.edst, n2 = self._place_rows("edst", ed, s_edges)
+            self.ewgt, n3 = self._place_rows("ewgt", ew, s_edges)
+            self.last_ship["edge_shards_shipped"] = max(n1, n2, n3)
+            self._base_leaves = base_leaves
+        delta_leaves = (None if delta is None
+                        else (delta.src, delta.dst, delta.w))
+        delta_changed = delta is not None and (
+            self._delta_leaves is None or any(
+                a is not b for a, b in zip(delta_leaves, self._delta_leaves)))
+        if delta is None:
+            self.dsrc = self.ddst = self.dwgt = None
+        elif delta_changed:
+            if self.n_edge_shards == 1:
+                # single shard: the round-robin layout is the identity, so
+                # take partition.shard_delta's zero-copy reshape instead of
+                # allocating + diffing a resliced host copy per update
+                dsh = partition.shard_delta(delta, 1, self.n)
                 self.dsrc = jax.device_put(dsh.src, s_edges)
                 self.ddst = jax.device_put(dsh.dst, s_edges)
                 self.dwgt = jax.device_put(dsh.w, s_edges)
+                self.last_ship["delta_shards_shipped"] = 1
             else:
-                self.dsrc = self.ddst = self.dwgt = None
+                ds, dd, dw = partition.shard_delta_np(
+                    delta, self.n_edge_shards, self.n)
+                self.dsrc, k1 = self._place_rows("dsrc", ds, s_edges)
+                self.ddst, k2 = self._place_rows("ddst", dd, s_edges)
+                self.dwgt, k3 = self._place_rows("dwgt", dw, s_edges)
+                self.last_ship["delta_shards_shipped"] = max(k1, k2, k3)
+            self._delta_leaves = delta_leaves
+        if base_changed or self._deg_base is None:
+            self._deg_base = live_degrees(g.out, None)     # O(m), per version
+        if base_changed or delta_changed or self.deg is None:
+            deg = self._deg_base
+            if delta is not None:
+                # integer adds decompose exactly: base count + O(cap) delta
+                # lanes — insert-only updates never pay the O(m) recount
+                deg = deg.at[delta.src].add(
+                    (delta.src < self.n).astype(jnp.int32), mode="drop")
+            self.deg = jax.device_put(deg, rep)
+        self._maybe_rebuild_jits()
+
+    def _maybe_rebuild_jits(self) -> None:
+        """Re-close the jitted step/run over the refreshed static dims (and,
+        for replicated placement, the current views' spec pytree) after an
+        overflow rebuild changed the edge count."""
+        if self._rebuild_pending and self._specs is not None:
+            self._rebuild_pending = False
+            self._build_jits()
+
+    # -- diff shipping helpers ----------------------------------------------
+
+    def _put_rep_diff(self, name: str, tree):
+        """Broadcast `tree` to every shard, reusing the resident replica for
+        every leaf that is the SAME array object as last time (the streaming
+        overlay's identity-stability contract, streaming/delta.py). A
+        structure change (an overflow rebuild re-buckets the ELL pack)
+        re-ships everything."""
+        rep = NamedSharding(self.mesh, P())
+        leaves, treedef = jax.tree.flatten(tree)
+        prev = self._rep_cache.get(name)
+        self.last_ship["replicated_leaves_total"] += len(leaves)
+        if prev is not None and prev[0] == treedef:
+            _, old_leaves, old_dev = prev
+            dev_leaves = []
+            for nl, ol, dl in zip(leaves, old_leaves, old_dev):
+                if nl is ol:
+                    dev_leaves.append(dl)
+                else:
+                    self.last_ship["replicated_leaves_shipped"] += 1
+                    dev_leaves.append(jax.device_put(nl, rep))
+        else:
+            self.last_ship["replicated_leaves_shipped"] += len(leaves)
+            dev_leaves = [jax.device_put(l, rep) for l in leaves]
+        self._rep_cache[name] = (treedef, leaves, dev_leaves)
+        return jax.tree.unflatten(treedef, dev_leaves)
+
+    def _place_rows(self, name: str, new_host: np.ndarray, sharding):
+        """Place an (S, L) row-sharded view, shipping only the rows whose
+        contents differ from the cached previous host slices; unchanged rows
+        keep their resident per-device buffers, stitched back into the
+        global view with `jax.make_array_from_single_device_arrays`.
+        Returns (global array, rows shipped)."""
+        prev = self._row_cache.get(name)
+        s = new_host.shape[0]
+        if prev is None or prev[0].shape != new_host.shape:
+            dev = jax.device_put(jnp.asarray(new_host), sharding)
+            shipped = s
+        else:
+            old_host, old_dev = prev
+            changed = {r for r in range(s)
+                       if not np.array_equal(new_host[r], old_host[r])}
+            if not changed:
+                dev, shipped = old_dev, 0
+            else:
+                parts = []
+                for sh in old_dev.addressable_shards:
+                    r = sh.index[0].start or 0
+                    parts.append(
+                        jax.device_put(new_host[r:r + 1], sh.device)
+                        if r in changed else sh.data)
+                dev = jax.make_array_from_single_device_arrays(
+                    new_host.shape, old_dev.sharding, parts)
+                shipped = len(changed)
+        self._row_cache[name] = (new_host, dev)
+        return dev, shipped
 
     def _views(self) -> tuple:
         if self.placement == "replicated":
@@ -343,15 +545,21 @@ class ShardedBatchEngine:
         """Sharded initial state for Q = len(sources) lanes (Q must divide by
         the 'data' axis). `init_batch` computes the GLOBAL consensus inputs
         before the state is scattered, so iteration 0's decision is already
-        the single-device one."""
+        the single-device one. Edge-sharded engines init CSR-FREE: only the
+        static graph dims and the cached (n,) live-degree vector enter the
+        computation (DESIGN.md §11) — never the O(m) adjacency arrays."""
         sources = jnp.asarray(sources, jnp.int32)
         q = int(sources.shape[0])
         assert q % self.n_query_shards == 0, (q, self.n_query_shards)
-        pack = self.pack if self.cfg.masked_pull else None
-        st = B.init_batch(self.program, self.g, self.cfg, sources,
-                          done=done, pack=pack,
-                          check_caps=self.placement != "edge_sharded",
-                          delta=self.delta)
+        if self.placement == "edge_sharded":
+            st = B.init_batch(self.program,
+                              B.GraphDims(self.n, self.n_edges), self.cfg,
+                              sources, done=done, check_caps=False,
+                              deg=self.deg)
+        else:
+            pack = self.pack if self.cfg.masked_pull else None
+            st = B.init_batch(self.program, self.g, self.cfg, sources,
+                              done=done, pack=pack, delta=self.delta)
         if self._specs is None:
             self._build(st)
         return jax.device_put(st, self._shardings)
@@ -361,6 +569,9 @@ class ShardedBatchEngine:
         self._shardings = jax.tree.map(
             lambda s: NamedSharding(self.mesh, s), self._specs,
             is_leaf=_SPEC_LEAF)
+        self._build_jits()
+
+    def _build_jits(self) -> None:
         if self.placement == "replicated":
             view_specs = (
                 _replicated_specs(self.g),

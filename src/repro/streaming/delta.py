@@ -188,6 +188,10 @@ class StreamingGraph:
         self._buckets = tuple(buckets)
         self._split = split
         self._min_rows = min_rows
+        # in-flight rebuild state (begin_compact/finish_compact)
+        self._rebuild_inflight: Optional[Graph] = None
+        self._replay_ops: list = []
+        self._replay_reports: list = []
         #: storage sharing (out/in CSR are the same arrays) — affects how
         #: deletions locate packed slots; a rebuild separates the storage.
         self.symmetric = g.inc is g.out
@@ -212,6 +216,18 @@ class StreamingGraph:
         self._inc_w = np.asarray(g.inc.weights)
         self._dead_out = np.zeros(self._out_ci.shape[0], dtype=bool)
         self._dead_inc = np.zeros(self._inc_ci.shape[0], dtype=bool)
+        # identity-stability caches: _materialize re-creates a device view
+        # ONLY when its backing host state changed since the last call, so
+        # untouched view arrays keep their object identity across update
+        # batches — the contract the diff-shipping layer
+        # (serving/sharded.py) uses to skip re-broadcasting them
+        self._out_csr_cache = None
+        self._inc_csr_cache = None
+        self._delta_cache = None
+        self._dslice_cache = None
+        self._dirty_out = True
+        self._dirty_inc = True
+        self._dirty_ins = True
         # device-sweep edge residents, uploaded lazily on first device sweep
         # (per-edge row ids for both directions over the PRISTINE arrays —
         # deleted edges stay in the union sweep by design)
@@ -224,21 +240,40 @@ class StreamingGraph:
         self._pack_nbr = [np.asarray(s.nbr).copy() for s in base_pack.slices]
         self._pack_wgt = [np.asarray(s.wgt).copy() for s in base_pack.slices]
         self._pack_rid = [np.asarray(s.row_id) for s in base_pack.slices]
+        # a rebuild re-buckets the pack: the device slice list must match the
+        # NEW slice count (leftover slices of a longer old pack would
+        # otherwise survive into the rebuilt views)
+        self._slices_dev = [None] * len(base_pack.slices)
         self._materialize(dirty_slices=set(range(len(base_pack.slices))))
 
     def _materialize(self, dirty_slices: Iterable[int] = ()) -> None:
+        """Refresh the device-facing views. Identity-stable: a view array is
+        re-created ONLY when its backing host state changed (deletions dirty
+        the CSR copies, insertion-buffer changes dirty the delta views, ELL
+        slices are per-slice dirty) — everything else keeps the same array
+        objects, so downstream diff-shipping can skip them by identity."""
         n = self.n
-        col = np.where(self._dead_out, n, self._out_ci).astype(np.int32)
-        w = np.where(self._dead_out, 0.0, self._out_w).astype(np.float32)
-        out = CSR(self._base.out.row_ptr, jnp.asarray(col), jnp.asarray(w),
-                  self._base.out.src_idx)
+        if self._dirty_out or self._out_csr_cache is None:
+            col = np.where(self._dead_out, n, self._out_ci).astype(np.int32)
+            w = np.where(self._dead_out, 0.0, self._out_w).astype(np.float32)
+            self._out_csr_cache = CSR(
+                self._base.out.row_ptr, jnp.asarray(col), jnp.asarray(w),
+                self._base.out.src_idx)
+            self._dirty_out = False
+        out = self._out_csr_cache
         if self.symmetric:
             inc = out
         else:
-            coli = np.where(self._dead_inc, n, self._inc_ci).astype(np.int32)
-            wi = np.where(self._dead_inc, 0.0, self._inc_w).astype(np.float32)
-            inc = CSR(self._base.inc.row_ptr, jnp.asarray(coli),
-                      jnp.asarray(wi), self._base.inc.src_idx)
+            if self._dirty_inc or self._inc_csr_cache is None:
+                coli = np.where(self._dead_inc, n,
+                                self._inc_ci).astype(np.int32)
+                wi = np.where(self._dead_inc, 0.0,
+                              self._inc_w).astype(np.float32)
+                self._inc_csr_cache = CSR(
+                    self._base.inc.row_ptr, jnp.asarray(coli),
+                    jnp.asarray(wi), self._base.inc.src_idx)
+                self._dirty_inc = False
+            inc = self._inc_csr_cache
         self.graph = Graph(out=out, inc=inc)
 
         if not hasattr(self, "_slices_dev"):
@@ -249,19 +284,35 @@ class StreamingGraph:
                 jnp.asarray(self._pack_wgt[si]),
                 jnp.asarray(self._pack_rid[si]),
             )
-        ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
-        # pull-side delta slice: receivers are rows (inc direction)
-        dslice = delta_ell_slice(
-            dst=ins[:, 1], src=ins[:, 0], w=ins[:, 2], n=n,
-            cap=self.delta_cap, min_rows=self._min_rows)
+        if self._dirty_ins or self._delta_cache is None:
+            ins = np.asarray(self._ins, dtype=np.float64).reshape(-1, 3)
+            # pull-side delta slice: receivers are rows (inc direction)
+            self._dslice_cache = delta_ell_slice(
+                dst=ins[:, 1], src=ins[:, 0], w=ins[:, 2], n=n,
+                cap=self.delta_cap, min_rows=self._min_rows)
+            self._delta_cache = delta_from_edges(
+                ins[:, 0], ins[:, 1], ins[:, 2], n, self.delta_cap)
+            self._dirty_ins = False
         self.pack = EllPack(
-            slices=tuple(self._slices_dev) + (dslice,), n_nodes=n)
-        self.delta = delta_from_edges(
-            ins[:, 0], ins[:, 1], ins[:, 2], n, self.delta_cap)
+            slices=tuple(self._slices_dev) + (self._dslice_cache,), n_nodes=n)
+        self.delta = self._delta_cache
 
-    def compact(self) -> None:
+    def compact(self) -> "UpdateReport":
         """Fold the overlay into a fresh base CSR + ELL pack (the overflow
-        escape path; also callable explicitly, e.g. off-peak)."""
+        escape path; also callable explicitly, e.g. off-peak) — the
+        synchronous :meth:`begin_compact` + :meth:`finish_compact` pair."""
+        self.begin_compact()
+        return self.finish_compact()
+
+    def begin_compact(self) -> None:
+        """Start an overlay rebuild IN FLIGHT (streaming round 3(d)): fold a
+        snapshot of the current overlay into a fresh CSR — the expensive
+        host `from_edges` + ELL repack — WITHOUT installing it. Update
+        batches applied before :meth:`finish_compact` keep landing in the
+        live overlay (serving stays coherent on the old views) and are also
+        recorded for replay, so the finish MERGES them into the rebuilt base
+        instead of serializing behind the rebuild or losing them."""
+        assert self._rebuild_inflight is None, "rebuild already in flight"
         live = ~self._dead_out
         src = self._base_src_host()[live]
         dst = self._out_ci[live]
@@ -271,10 +322,88 @@ class StreamingGraph:
             src = np.concatenate([src, ins[:, 0].astype(np.int64)])
             dst = np.concatenate([dst, ins[:, 1].astype(np.int64)])
             w = np.concatenate([w, ins[:, 2].astype(np.float32)])
-        g2 = from_edges(src, dst, self.n, w, directed=True, dedupe=False)
+        self._rebuild_inflight = from_edges(src, dst, self.n, w,
+                                            directed=True, dedupe=False)
+        self._replay_ops = []
+        self._replay_reports = []
+
+    def finish_compact(self) -> "UpdateReport":
+        """Install the in-flight rebuild, replaying every batch applied
+        since :meth:`begin_compact` onto the rebuilt base — each applied
+        edge exactly ONCE: the pre-begin overlay is already folded into the
+        rebuilt CSR, so only post-begin ops replay (naively re-folding the
+        whole insertion buffer would double-count every pre-begin COO lane:
+        once as a rebuilt base edge and once as a surviving overlay lane).
+        Returns one merged :class:`UpdateReport` summarizing everything
+        absorbed since begin (`rebuild=True` signals the view-identity
+        change; the per-batch reports were already emitted by `apply`, so
+        the merged counts are zero when nothing arrived mid-flight). The
+        logical graph is unchanged by the install itself, so the version is
+        NOT bumped — results on the rebuilt views are bitwise-compatible."""
+        assert self._rebuild_inflight is not None, "no rebuild in flight"
+        g2 = self._rebuild_inflight
+        ops = self._replay_ops
+        reports = self._replay_reports
+        self._rebuild_inflight = None
+        self._replay_ops = []
+        self._replay_reports = []
         self.rebuilds += 1
         self.symmetric = False       # rebuilt graphs carry separate in-CSR
         self._install_base(g2)
+        dirty: set = set()
+        for ins_list, del_list in ops:
+            for (u, v) in del_list:           # apply order: deletes first
+                self._delete_one(u, v, dirty)
+            for (u, v, w) in ins_list:
+                if not self._edge_live(u, v):
+                    self._ins.append((u, v, w))
+                    self._dirty_ins = True
+        if len(self._ins) > self.delta_cap:
+            # the replayed mid-flight insertions overflow the fresh overlay
+            # too: fold again synchronously (needs > delta_cap inserts to
+            # arrive during one rebuild)
+            self.compact()
+        elif ops:
+            self._materialize(dirty)
+        return self._merged_report(reports)
+
+    def _merged_report(self, reports) -> "UpdateReport":
+        """One coherent UpdateReport for a begin..finish compaction window:
+        counts summed, endpoint/dirty sets unioned across the mid-flight
+        batches (conservative — exactly what a consumer deferring cache
+        invalidation to the finish needs)."""
+        empty = np.zeros(0, dtype=np.int64)
+        if not reports:
+            rep = UpdateReport(
+                version=self.version, n_inserted=0, n_deleted=0, n_ignored=0,
+                rebuild=True, touched=empty,
+                dirty_src=np.zeros(self.n, dtype=bool),
+                affected_del=np.zeros(self.n, dtype=bool),
+                ins_src=empty, boundary=empty)
+        else:
+            rep = UpdateReport(
+                version=self.version,
+                n_inserted=sum(r.n_inserted for r in reports),
+                n_deleted=sum(r.n_deleted for r in reports),
+                n_ignored=sum(r.n_ignored for r in reports),
+                rebuild=True,
+                touched=np.unique(np.concatenate(
+                    [r.touched for r in reports] + [empty])),
+                dirty_src=np.logical_or.reduce(
+                    [r.dirty_src for r in reports]),
+                affected_del=np.logical_or.reduce(
+                    [r.affected_del for r in reports]),
+                ins_src=np.unique(np.concatenate(
+                    [r.ins_src for r in reports] + [empty])),
+                boundary=np.unique(np.concatenate(
+                    [r.boundary for r in reports] + [empty])),
+                ins_edges=np.concatenate(
+                    [r.ins_edges for r in reports]).reshape(-1, 2),
+                del_edges=np.concatenate(
+                    [r.del_edges for r in reports]).reshape(-1, 2),
+            )
+        self.last_report = rep
+        return rep
 
     def _base_src_host(self) -> np.ndarray:
         return np.asarray(self._base.out.src_idx, dtype=np.int64)
@@ -302,15 +431,23 @@ class StreamingGraph:
                 ignored += 1
 
         n_ins = 0
-        applied_ins: list[tuple[int, int]] = []
+        applied_ins: list[tuple[int, int, float]] = []
         for (u, v, w) in ins_d:
             if self._edge_live(u, v) or any(
                     (u, v) == (iu, iv) for (iu, iv, _w) in self._ins):
                 ignored += 1
                 continue
             self._ins.append((u, v, w))
+            self._dirty_ins = True
             n_ins += 1
-            applied_ins.append((u, v))
+            applied_ins.append((u, v, w))
+
+        if self._rebuild_inflight is not None:
+            # a rebuild is in flight: this batch landed in the live overlay
+            # above (serving continues on the old base) AND is recorded for
+            # replay — finish_compact() merges it into the rebuilt base
+            # exactly once (streaming round 3(d))
+            self._replay_ops.append((list(applied_ins), list(applied_del)))
 
         touched = np.unique(np.asarray(
             [e[0] for e in ins_d] + [e[1] for e in ins_d]
@@ -331,7 +468,13 @@ class StreamingGraph:
 
         rebuild = len(self._ins) > self.delta_cap
         if rebuild:
-            self.compact()
+            if self._rebuild_inflight is not None:
+                # the overflowing batch is already recorded for replay:
+                # merge it into the in-flight rebuild instead of folding a
+                # second time from scratch
+                self.finish_compact()
+            else:
+                self.compact()
         else:
             self._materialize(dirty_slices)
         self.version += 1
@@ -341,9 +484,13 @@ class StreamingGraph:
             n_ignored=ignored, rebuild=rebuild, touched=touched,
             dirty_src=dirty_src, affected_del=affected, ins_src=ins_src,
             boundary=boundary,
-            ins_edges=np.asarray(applied_ins, np.int64).reshape(-1, 2),
+            ins_edges=np.asarray(
+                [(u, v) for (u, v, _w) in applied_ins],
+                np.int64).reshape(-1, 2),
             del_edges=np.asarray(applied_del, np.int64).reshape(-1, 2),
         )
+        if self._rebuild_inflight is not None:
+            self._replay_reports.append(self.last_report)
         return self.last_report
 
     # -- affected-region sweeps -----------------------------------------
@@ -426,17 +573,20 @@ class StreamingGraph:
         for i, (iu, iv, _w) in enumerate(self._ins):
             if (iu, iv) == (u, v):
                 self._ins.pop(i)
+                self._dirty_ins = True
                 return True
         pos = _find_edges(self._out_rp, self._out_ci,
                           np.asarray([u]), np.asarray([v]))[0]
         if pos < 0 or self._dead_out[pos]:
             return False
         self._dead_out[pos] = True
+        self._dirty_out = True
         # neutralize the packed slot of the matching in-edge (v <- u)
         ipos = pos if self.symmetric else _find_edges(
             self._inc_rp, self._inc_ci, np.asarray([v]), np.asarray([u]))[0]
         if ipos >= 0:
             self._dead_inc[ipos] = True
+            self._dirty_inc = True
             si, r, c = self._pack_pos[ipos]
             if si >= 0:
                 self._pack_nbr[si][r, c] = self.n

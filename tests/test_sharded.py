@@ -406,9 +406,12 @@ def test_global_consensus_trace_matches_single_device_rmat12():
 @pytest.mark.slow
 def test_edge_sharded_multi_device_with_updates():
     """Edge partition over a real 'model' axis: min programs bit-exact, sum
-    to tolerance, and the per-shard delta slices absorb a streaming update
-    through an edge-sharded server."""
+    to tolerance, the compacted expansion bit-equal to the dense scan on the
+    4-shard mesh, the per-shard delta slices absorb a streaming update
+    through an edge-sharded server, and the update ships only touched
+    shard rows."""
     _run_forced(textwrap.dedent("""
+        import dataclasses as dc
         import numpy as np
         from repro.core import algorithms as alg
         from repro.graph import generators, pack_ell
@@ -422,9 +425,11 @@ def test_edge_sharded_multi_device_with_updates():
         sources = rng.integers(0, g.n_nodes, size=4)
         mesh = make_serving_mesh(1, 4)
 
+        cfg_dense = dc.replace(cfg, shard_compact=False)
         for name, fac, field in [("bfs", alg.bfs, "dist"),
                                  ("sssp", alg.sssp, "dist"),
-                                 ("ppr", alg.ppr, "rank")]:
+                                 ("ppr", alg.ppr, "rank"),
+                                 ("ppr_delta", alg.ppr_delta, "rank")]:
             m_ref, _ = run_batch(fac(0), g, pack, cfg, sources)
             m_es, _ = run_sharded(fac(0), g, pack, cfg, mesh, sources,
                                   placement="edge_sharded")
@@ -433,6 +438,13 @@ def test_edge_sharded_multi_device_with_updates():
                 assert np.allclose(a, b, rtol=1e-5, atol=1e-7), name
             else:
                 assert np.array_equal(a, b), name
+            # compacted == dense on the real multi-shard partition, every
+            # field, bit for bit
+            m_ds, _ = run_sharded(fac(0), g, pack, cfg_dense, mesh, sources,
+                                  placement="edge_sharded")
+            for k in m_es:
+                assert np.array_equal(np.asarray(m_es[k]),
+                                      np.asarray(m_ds[k])), (name, k)
 
         srv = GraphServer(
             g, pack, {"sssp": alg.sssp(0)}, slots=2, cfg=cfg,
@@ -444,8 +456,18 @@ def test_edge_sharded_multi_device_with_updates():
         for s in sources:
             srv.submit("sssp", int(s)); ref.submit("sssp", int(s))
         srv.drain(); ref.drain()
-        srv.apply_updates(inserts=[(1, 2), (3, 4)], deletes=[(5, 6)])
-        ref.apply_updates(inserts=[(1, 2), (3, 4)], deletes=[(5, 6)])
+        dels = [(int(g.out.src_idx[0]), int(g.out.col_idx[0]))]  # real edge
+        st = srv.apply_updates(inserts=[(1, 2), (3, 4)], deletes=dels)
+        ref.apply_updates(inserts=[(1, 2), (3, 4)], deletes=dels)
+        ship = st["shipped"]["sssp"]
+        # 2 applied inserts land on <= 2 of the 4 round-robin delta rows;
+        # one deletion neutralizes one slot -> exactly one base shard row
+        assert 1 <= ship["delta_shards_shipped"] <= 2, ship
+        assert ship["edge_shards_shipped"] == 1, ship
+        # insert-only follow-up: base rows must not move at all
+        st2 = srv.apply_updates(inserts=[(7, 9)])
+        ref.apply_updates(inserts=[(7, 9)])
+        assert st2["shipped"]["sssp"]["edge_shards_shipped"] == 0, st2
         for s in sources:
             srv.submit("sssp", int(s)); ref.submit("sssp", int(s))
         c1 = {c.source: c.result for c in srv.drain() if not c.from_cache}
@@ -454,6 +476,248 @@ def test_edge_sharded_multi_device_with_updates():
             assert np.array_equal(c1[k], c2[k]), k
         print("edge-sharded multi-device OK")
     """), devices=8)
+
+
+# ---------------------------------------------------------------------------
+# (e) frontier-compacted edge-shard expansion (round 2 tentpole): the
+#     compacted scan must be BIT-IDENTICAL to the dense edge scan — results
+#     and (for min programs) mode traces — across graph shapes, programs,
+#     and streaming update swaps, including mid-run compaction overflow
+# ---------------------------------------------------------------------------
+
+
+_STAR_CACHE = {}
+
+
+def _star_path_graph_cached():
+    if "g" not in _STAR_CACHE:
+        _STAR_CACHE["g"] = _star_path_graph()
+    return _STAR_CACHE["g"]
+
+
+def _broom_path_graph():
+    """Scaled-down broom/path consensus-divergence workload (the RMAT-12
+    subprocess suite's regression graph): 5 chained hubs fanning 50 leaves
+    each, plus a 100-vertex path."""
+    broom = []
+    for i in range(5):
+        broom.append((i, i + 1))
+        broom += [(i, 500 + 50 * i + j) for j in range(50)]
+    path = [(200 + i, 201 + i) for i in range(100)]
+    e = np.asarray(broom + path, dtype=np.int64)
+    return from_edges(e[:, 0], e[:, 1], 800, directed=True)
+
+
+@pytest.mark.parametrize("gname", ["rmat_directed", "rmat_undirected",
+                                   "star_path", "broom_path"])
+@pytest.mark.parametrize("pname,factory,field",
+                         [("bfs", alg.bfs, "dist"),
+                          ("sssp", alg.sssp, "dist"),
+                          ("ppr_delta", alg.ppr_delta, "rank")])
+def test_compacted_edge_scan_bitmatches_dense(gname, pname, factory, field):
+    """Differential oracle for the compacted expansion: every metadata field
+    AND the mode trace equal the dense edge scan bit for bit — cold runs and
+    across a streaming insert+delete overlay swap."""
+    import dataclasses as dc
+
+    from repro.streaming import StreamingGraph
+
+    graphs = {
+        "rmat_directed": lambda: generators.rmat(9, 8, seed=3, directed=True),
+        "rmat_undirected": lambda: generators.rmat(9, 8, seed=4,
+                                                   directed=False),
+        "star_path": lambda: _star_path_graph()[0],
+        "broom_path": _broom_path_graph,
+    }
+    g = graphs[gname]()
+    pack = pack_ell(g.inc)
+    cfg = default_config(g, max_iters=128)
+    cfg_dense = dc.replace(cfg, shard_compact=False)
+    mesh = make_serving_mesh(1, 1)
+    n = g.n_nodes
+    sources = [0, 7 % n, (n // 2) | 1, n - 1]
+
+    def both(g_, pack_, cfg_pair, delta=None):
+        outs = []
+        for c in cfg_pair:
+            m, st = run_sharded(factory(0), g_, pack_, c, mesh, sources,
+                                placement="edge_sharded", delta=delta)
+            outs.append((m, st))
+        (m_c, st_c), (m_d, st_d) = outs
+        for k in m_c:
+            assert np.array_equal(np.asarray(m_c[k]), np.asarray(m_d[k])), (
+                gname, pname, k)
+        assert np.array_equal(np.asarray(st_c["mode_trace"]),
+                              np.asarray(st_d["mode_trace"])), (gname, pname)
+        return m_c
+
+    # cold
+    both(g, pack, (cfg, cfg_dense))
+
+    # streaming insert + delete swap (overlaid views + per-shard delta)
+    sg = StreamingGraph(g, delta_cap=16)
+    dels = [(int(g.out.src_idx[1]), int(g.out.col_idx[1]))]
+    sg.apply(inserts=[(0, n - 2), (3, n // 2)], deletes=dels)
+    both(sg.graph, sg.pack, (cfg, cfg_dense), delta=sg.delta)
+
+
+def test_compacted_overflow_mid_run_falls_back_dense():
+    """A compaction buffer smaller than a light iteration's frontier-edge
+    set must fall back to the dense shard scan for that iteration — nothing
+    truncates, results stay bit-identical. The star graph's hub iteration
+    selects ~200 edges; alpha is raised so the controller still calls it
+    light, and shard_compact_frac is floored at the 128-lane minimum."""
+    import dataclasses as dc
+
+    from repro.core.engine import EngineConfig
+
+    g, pack = _star_path_graph_cached()
+    n = g.n_nodes
+    cfg = EngineConfig(frontier_cap=n, edge_cap=g.n_edges, max_iters=256,
+                       alpha=0.9, shard_compact_frac=1e-6)
+    cfg_dense = dc.replace(cfg, shard_compact=False)
+    mesh = make_serving_mesh(1, 1)
+    sources = [0, 0, 200, 250]          # hub lanes force the big frontier
+    for factory, field in [(alg.sssp, "dist"), (alg.ppr_delta, "rank")]:
+        m_c, st_c = run_sharded(factory(0), g, pack, cfg, mesh, sources,
+                                placement="edge_sharded")
+        m_d, st_d = run_sharded(factory(0), g, pack, cfg_dense, mesh,
+                                sources, placement="edge_sharded")
+        for k in m_c:
+            assert np.array_equal(np.asarray(m_c[k]), np.asarray(m_d[k])), k
+        assert np.array_equal(np.asarray(st_c["mode_trace"]),
+                              np.asarray(st_d["mode_trace"]))
+
+
+# ---------------------------------------------------------------------------
+# (f) CSR-free edge-shard admission + touched-delta slice shipping
+# ---------------------------------------------------------------------------
+
+
+def test_edge_sharded_admission_is_csr_free(served_graph):
+    """Edge-sharded pools admit from the cached live-degree vector alone:
+    no graph view (and no delta view) enters the jitted admission call, and
+    admitted queries still serve results equal to an unplaced pool's."""
+    from repro.core import algorithms as a
+    from repro.serving import GraphServer
+
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(g, pack, {"sssp": a.sssp(0)}, slots=2, cfg=cfg,
+                      cache_capacity=0, mesh=mesh,
+                      placements={"sssp": ("edge_sharded", 1)})
+    ref = GraphServer(g, pack, {"sssp": a.sssp(0)}, slots=2, cfg=cfg,
+                      cache_capacity=0)
+    pool = srv.pools["sssp"]
+    assert pool._admit_graph() is None, "CSR must not enter admission"
+    assert pool._admit_delta() is None
+    assert pool.live_deg is pool.engine.deg, "degree count must be reused"
+    for s in [0, 7, 101, g.n_nodes - 1]:
+        srv.submit("sssp", s)
+        ref.submit("sssp", s)
+    c1 = {c.source: c.result for c in srv.drain()}
+    c2 = {c.source: c.result for c in ref.drain()}
+    for k in c2:
+        assert np.array_equal(c1[k], c2[k]), k
+
+
+def test_update_ships_only_touched_views(served_graph):
+    """Touched-delta slice shipping: an insert-only update batch must not
+    re-broadcast the O(m) CSR leaves to replicated pools, and an unchanged
+    base must ship zero edge-shard rows to edge-partitioned pools."""
+    from repro.core import algorithms as a
+    from repro.serving import GraphServer
+
+    g, _ = served_graph
+    cfg = default_config(g, max_iters=64)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(
+        g, None, {"bfs": a.bfs(0), "sssp": a.sssp(0)}, slots=2, cfg=cfg,
+        cache_capacity=0, delta_cap=16, mesh=mesh,
+        placements={"bfs": ("replicated", 1), "sssp": ("edge_sharded", 1)})
+
+    st = srv.apply_updates(inserts=[(1, 5), (9, 41)])
+    rep = st["shipped"]["bfs"]
+    es = st["shipped"]["sssp"]
+    # replicated: only the delta COO + delta ELL slice leaves move — the CSR
+    # (row_ptr/col_idx/weights/src_idx x out) stays resident
+    assert 0 < rep["replicated_leaves_shipped"] < rep["replicated_leaves_total"], rep
+    import jax as _jax
+    g_leaves = len(_jax.tree_util.tree_leaves(srv.sg.graph))
+    assert rep["replicated_leaves_shipped"] <= \
+        rep["replicated_leaves_total"] - g_leaves, rep
+    # edge-sharded: base COO untouched by an insert-only batch
+    assert es["edge_shards_shipped"] == 0, es
+    assert es["delta_shards_shipped"] >= 1, es
+
+    # a deletion dirties the base: edge shards ship, results stay correct
+    st2 = srv.apply_updates(deletes=[(int(g.out.src_idx[0]),
+                                      int(g.out.col_idx[0]))])
+    assert st2["shipped"]["sssp"]["edge_shards_shipped"] >= 1, st2["shipped"]
+    sg = srv.sg
+    for algo, fac, field in [("bfs", a.bfs, "dist"), ("sssp", a.sssp, "dist")]:
+        rid = srv.submit(algo, 3)
+        comp = [c for c in srv.drain() if c.rid == rid][0]
+        ref, _ = run_batch(fac(0), sg.graph, sg.pack, cfg, [3],
+                           delta=sg.delta)
+        want = np.asarray(ref[field][:-1, 0])
+        assert np.array_equal(comp.result, want), algo
+
+
+def test_overflow_rebuild_refreshes_static_dims(served_graph):
+    """REGRESSION: the CSR-free admit closure and the step/run closures bake
+    the graph's edge count (consensus alpha denominator). An overlay
+    overflow rebuild changes m, so `set_graph` must re-bake them — and a
+    rebuild through sharded pools (either placement) must keep serving
+    correct results on the re-shaped views."""
+    from repro.core import algorithms as a
+    from repro.serving import GraphServer
+
+    g, _ = served_graph
+    cfg = default_config(g, max_iters=64)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(
+        g, None, {"bfs": a.bfs(0), "sssp": a.sssp(0)}, slots=2, cfg=cfg,
+        cache_capacity=0, delta_cap=2, mesh=mesh,
+        placements={"bfs": ("replicated", 1), "sssp": ("edge_sharded", 1)})
+    pool = srv.pools["sssp"]
+    m0 = pool._admit_dims.n_edges
+    st = srv.apply_updates(inserts=[(1, 5), (2, 9), (3, 7)])  # 3 > cap 2
+    assert st["rebuild"], st
+    sg = srv.sg
+    assert pool.engine.n_edges == sg.graph.n_edges != m0
+    assert pool._admit_dims.n_edges == sg.graph.n_edges
+    for algo, fac, field in [("bfs", a.bfs, "dist"), ("sssp", a.sssp, "dist")]:
+        rid = srv.submit(algo, 3)
+        comp = [c for c in srv.drain() if c.rid == rid][0]
+        ref, _ = run_batch(fac(0), sg.graph, sg.pack, cfg, [3],
+                           delta=sg.delta)
+        assert np.array_equal(comp.result,
+                              np.asarray(ref[field][:-1, 0])), algo
+
+
+def test_shard_delta_single_shard_short_circuits():
+    """n_edge_shards == 1 must take the zero-copy reshape, never the
+    allocating host reslice (the allocation-count regression)."""
+    from repro.graph import partition
+
+    n = 64
+    src = np.asarray([1, 2, n, n], np.int32)
+    dst = np.asarray([3, 4, n, n], np.int32)
+    w = np.asarray([1.0, 1.0, 0.0, 0.0], np.float32)
+    d = EdgeDelta(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w))
+    before = dict(partition.SHARD_DELTA_STATS)
+    sh = shard_delta(d, 1, n)
+    after = dict(partition.SHARD_DELTA_STATS)
+    assert after["short_circuit"] == before["short_circuit"] + 1
+    assert after["full_reslice"] == before["full_reslice"]
+    assert np.asarray(sh.src).shape == (1, 4)
+    assert np.array_equal(np.asarray(sh.src)[0], src)
+    # multi-shard still takes (and counts) the reslice
+    shard_delta(d, 2, n)
+    assert partition.SHARD_DELTA_STATS["full_reslice"] == \
+        before["full_reslice"] + 1
 
 
 def test_edge_sharded_push_only_program_skips_capacity_assert(served_graph):

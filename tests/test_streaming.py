@@ -282,6 +282,196 @@ def test_delta_overflow_triggers_rebuild():
 
 
 # ---------------------------------------------------------------------------
+# (e2) update batches arriving while a rebuild is IN FLIGHT merge into it
+#      (streaming round 3(d)) — no loss, no double-count
+# ---------------------------------------------------------------------------
+
+
+def test_mid_rebuild_update_batches_merge_exactly_once():
+    """Interleave apply() with begin_compact()/finish_compact(): batches
+    landing mid-rebuild must (1) stay live in the overlay (serving reads
+    stay coherent), (2) be replayed into the rebuilt base exactly ONCE —
+    the pre-begin overlay is already folded in, so a naive re-fold would
+    double-count its insertion COO lanes — and (3) surface as one merged
+    UpdateReport from the finish."""
+    import repro.graph.csr as csr_mod
+
+    g = generators.rmat(9, 8, seed=11, directed=True)
+    n = g.n_nodes
+    sg = StreamingGraph(g, delta_cap=16)
+    cfg = default_config(g, max_iters=256)
+    prog = alg.bfs(0)
+
+    sg.apply(inserts=[(1, 2), (3, 4)])                  # pre-begin overlay
+    sg.begin_compact()
+    # mid-flight: new inserts, a deletion of a PRE-BEGIN pending insert
+    # (folded into the rebuild snapshot — replay must remove it), and a
+    # base-edge deletion
+    r1 = sg.apply(inserts=[(5, 6), (7, 8)], deletes=[(1, 2)])
+    base_del = (int(g.out.src_idx[0]), int(g.out.col_idx[0]))
+    r2 = sg.apply(deletes=[base_del])
+    # mid-flight views are already coherent (old base + overlay)
+    mid, _ = run_batch(prog, sg.graph, sg.pack, cfg, [0], delta=sg.delta)
+    merged = sg.finish_compact()
+
+    assert sg.rebuilds == 1
+    assert merged.rebuild
+    assert merged.n_inserted == r1.n_inserted + r2.n_inserted == 2
+    assert merged.n_deleted == r1.n_deleted + r2.n_deleted == 2
+    assert np.array_equal(
+        merged.dirty_src, r1.dirty_src | r2.dirty_src)
+    assert set(merged.touched) == set(r1.touched) | set(r2.touched)
+
+    # post-finish graph == fold-everything-from-scratch reference, bitwise
+    src = np.asarray(g.out.src_idx)
+    dst = np.asarray(g.out.col_idx)
+    w = np.asarray(g.out.weights)
+    keep = np.ones(src.shape[0], bool)
+    keep[0] = False                                     # base_del
+    src2 = np.concatenate([src[keep], [3, 5, 7]])       # (1,2) net-zero
+    dst2 = np.concatenate([dst[keep], [4, 6, 8]])
+    w2 = np.concatenate([w[keep], [1.0, 1.0, 1.0]])
+    g_ref = csr_mod.from_edges(src2, dst2, n, w2, directed=True,
+                               dedupe=False)
+    assert np.array_equal(sg.live_out_degrees(),
+                          np.bincount(src2, minlength=n)[:n]), \
+        "an edge counted twice (or lost) across the merge"
+    full, _ = run_batch(prog, sg.graph, sg.pack, cfg, [0], delta=sg.delta)
+    ref, _ = run_batch(prog, g_ref, pack_ell(g_ref.inc), cfg, [0])
+    assert np.array_equal(np.asarray(full["dist"]), np.asarray(ref["dist"]))
+    # and the finish changed nothing logically: mid-flight result still holds
+    assert np.array_equal(np.asarray(mid["dist"]), np.asarray(full["dist"]))
+
+
+def test_mid_rebuild_overflowing_batch_finishes_the_rebuild():
+    """A batch that overflows the overlay while a rebuild is in flight must
+    merge into THAT rebuild (one fold), not serialize a second one."""
+    g = generators.grid2d(6, seed=1)                    # 36 nodes
+    sg = StreamingGraph(g, delta_cap=4)
+    sg.apply(inserts=[(0, 7)])                          # 2 directed lanes
+    sg.begin_compact()
+    rep = sg.apply(inserts=[(1, 8), (2, 9)])            # 4 more: overflow
+    assert rep.rebuild
+    assert sg._rebuild_inflight is None, "finish must have run"
+    assert sg.rebuilds == 1, "merged into the in-flight fold, not a second"
+    assert sg.n_live_edges() == g.n_edges + 6
+    cfg = default_config(g, max_iters=256)
+    full, _ = run_batch(alg.bfs(0), sg.graph, sg.pack, cfg, [0],
+                        delta=sg.delta)
+    import repro.graph.csr as csr_mod
+    src = np.concatenate([np.asarray(g.out.src_idx), [0, 7, 1, 8, 2, 9]])
+    dst = np.concatenate([np.asarray(g.out.col_idx), [7, 0, 8, 1, 9, 2]])
+    g_ref = csr_mod.from_edges(src, dst, 36, None, directed=True,
+                               dedupe=False)
+    ref, _ = run_batch(alg.bfs(0), g_ref, pack_ell(g_ref.inc), cfg, [0])
+    assert np.array_equal(np.asarray(full["dist"]), np.asarray(ref["dist"]))
+
+
+# ---------------------------------------------------------------------------
+# (e3) dirty cached ppr_delta entries REFRESH incrementally (round 3(e))
+# ---------------------------------------------------------------------------
+
+
+def test_cached_ppr_delta_survives_update_incrementally():
+    """REGRESSION (ROADMAP streaming 3(e)): a dirty cached `ppr_delta`
+    entry used to DROP — the cache held only the (n,) rank, which is not
+    resumable. Entries now carry (rank, resid), so an insert+delete batch
+    refreshes them via the Maiter correction + residual reseed instead of
+    dropping, and the refreshed entry serves a correct hit."""
+    g = generators.grid2d(8, seed=5)
+    import repro.graph.csr as csr_mod
+    src = np.asarray(g.out.src_idx)
+    dst = np.asarray(g.out.col_idx)
+    w = np.asarray(g.out.weights)
+    g = csr_mod.from_edges(src, dst, 80, w, directed=False)  # 64..79 isolated
+    cfg = default_config(g, max_iters=256)
+    srv = GraphServer(g, None, {"ppr_delta": alg.ppr_delta(0)}, slots=2,
+                      cfg=cfg, cache_capacity=64, delta_cap=32,
+                      result_fields={"ppr_delta": "rank"})
+    sources = [0, 33, 70]                       # two dirty-able + one clean
+    for s in sources:
+        srv.submit("ppr_delta", s)
+    srv.drain()
+    assert len(srv.cache) == 3
+
+    st = srv.apply_updates(inserts=[(1, 62)], deletes=[(0, 1)])
+    assert st["cache_refreshed"] == 2, st       # grid sources refresh
+    assert st["cache_retained"] == 1, st        # isolated source re-keys
+    assert st["cache_dropped"] == 0, st         # NOTHING drops (the fix)
+
+    rids = {s: srv.submit("ppr_delta", s) for s in sources}
+    comps = {c.rid: c for c in srv.drain()}
+    sg = srv.sg
+    ref, _ = run_batch(alg.ppr_delta(0), sg.graph, sg.pack, cfg, sources,
+                       delta=sg.delta)
+    for i, s in enumerate(sources):
+        c = comps[rids[s]]
+        assert c.from_cache, s                  # refresh kept it cached
+        want = np.asarray(query_result(ref, "rank", i))
+        # resumed-from-correction fixpoints are tol-accurate, not bitwise
+        assert np.abs(c.result - want).max() < 1e-3, s
+
+
+def test_cached_ppr_delta_refreshes_through_edge_sharded_pool():
+    """REGRESSION (review finding): edge-sharded sum pools tag their cache
+    keys with the placement param, and the dirty-entry filter used to admit
+    only params == () — so their (rank, resid) entries silently dropped.
+    Tagged entries must refresh and re-key under the SAME tag."""
+    from repro.serving import make_serving_mesh
+
+    g = generators.grid2d(8, seed=5)
+    import repro.graph.csr as csr_mod
+    src = np.asarray(g.out.src_idx)
+    dst = np.asarray(g.out.col_idx)
+    w = np.asarray(g.out.weights)
+    g = csr_mod.from_edges(src, dst, 80, w, directed=False)
+    cfg = default_config(g, max_iters=256)
+    mesh = make_serving_mesh(1, 1)
+    srv = GraphServer(g, None, {"ppr_delta": alg.ppr_delta(0)}, slots=2,
+                      cfg=cfg, cache_capacity=64, delta_cap=32,
+                      result_fields={"ppr_delta": "rank"},
+                      mesh=mesh,
+                      placements={"ppr_delta": ("edge_sharded", 1)})
+    tag = srv.pools["ppr_delta"].cache_params
+    assert tag == ((("placement", "edge_sharded"),))
+    for s in [0, 33]:
+        srv.submit("ppr_delta", s)
+    srv.drain()
+    st = srv.apply_updates(inserts=[(1, 62)], deletes=[(0, 1)])
+    assert st["cache_refreshed"] == 2, st
+    assert st["cache_dropped"] == 0, st
+    # refreshed entries live under the pool's tag and serve correct hits
+    keys = list(srv.cache._entries)
+    assert all(k[3] == tag for k in keys), keys
+    rid = srv.submit("ppr_delta", 0)
+    comp = [c for c in srv.drain() if c.rid == rid][0]
+    assert comp.from_cache
+    sg = srv.sg
+    ref, _ = run_batch(alg.ppr_delta(0), sg.graph, sg.pack, cfg, [0],
+                       delta=sg.delta)
+    assert np.abs(comp.result
+                  - np.asarray(query_result(ref, "rank", 0))).max() < 1e-3
+
+
+def test_materialize_is_identity_stable_across_batches():
+    """The diff-shipping contract (DESIGN.md §11): an update batch re-creates
+    ONLY the view arrays whose backing state it touched."""
+    g = generators.rmat(9, 8, seed=3, directed=True)
+    sg = StreamingGraph(g, delta_cap=16)
+    col0 = sg.graph.out.col_idx
+    d0 = sg.delta.src
+    s0 = sg.pack.slices[0].nbr
+    sg.apply(inserts=[(1, 2)])                  # insert-only: base untouched
+    assert sg.graph.out.col_idx is col0
+    assert sg.pack.slices[0].nbr is s0
+    assert sg.delta.src is not d0               # delta view did change
+    d1 = sg.delta.src
+    sg.apply(deletes=[(int(g.out.src_idx[5]), int(g.out.col_idx[5]))])
+    assert sg.graph.out.col_idx is not col0     # deletion dirties the CSR
+    assert sg.delta.src is d1                   # pending inserts untouched
+
+
+# ---------------------------------------------------------------------------
 # (f) kernel-level deletion overlay
 # ---------------------------------------------------------------------------
 
