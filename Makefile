@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-schema
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-schema
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -36,6 +36,13 @@ smoke-ppr:
 		python -m repro.launch.serve_graph --requests 6 --slots 8 \
 		--scale 8 --mesh 8x1 --algos ppr_delta
 
+# observability smoke: serve with --trace on a small RMAT, then validate
+# the emitted per-request spans against the trace schema (DESIGN.md §12)
+smoke-obs:
+	PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 \
+		--slots 4 --scale 8 --trace /tmp/repro_trace_smoke.jsonl
+	python scripts/trace_schema.py /tmp/repro_trace_smoke.jsonl
+
 # full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
 bench-serving:
 	PYTHONPATH=src python benchmarks/serving_bench.py
@@ -57,6 +64,11 @@ bench-sharded2:
 # streaming incremental-vs-full benchmark (writes BENCH_streaming.json)
 bench-streaming:
 	PYTHONPATH=src python benchmarks/streaming_bench.py
+
+# closed-loop latency-percentile baseline: p50/p95/p99 breakdowns + goodput
+# per algo x placement (writes BENCH_obs.json)
+bench-obs:
+	PYTHONPATH=src python benchmarks/obs_bench.py
 
 # lint the BENCH_*.json records (also part of `make check`)
 bench-schema:

@@ -1,0 +1,218 @@
+"""Closed-loop latency-percentile baseline through the telemetry layer.
+
+Serves BFS / SSSP / ppr_delta query streams through `GraphServer` with the
+unified observability layer on (DESIGN.md §12) and records, per
+algo x placement, the p50/p95/p99 **latency breakdown** (total /
+queue-wait / resident seconds, from the request-lifecycle spans) plus
+closed-loop goodput — the SLO-shaped numbers the obs tentpole exists to
+make measurable. Three serving paths:
+
+  * **solo**    — slots=1 single-device pools: one query resident at a
+    time, the no-batching baseline (queue-wait dominates under load);
+  * **batched** — slots=8 single-device pools: the continuous-batching
+    engine (BENCH_serving's amortization shows up as resident-time
+    overlap);
+  * **sharded** — slots=8 over a forced 4x1 host ('data' x 'model') mesh,
+    placement=replicated: query-sharded pools (§6 doctrine: host-simulated
+    meshes measure structure, not device speedups — these numbers pin the
+    telemetry plumbing through the sharded path, not a hardware claim).
+
+Each (placement) server runs a per-algo warmup drain first so jit compile
+time never pollutes the percentiles; measured-phase spans are then read
+back from the trace recorder (exact numpy quantiles over span durations).
+Every server also writes its spans to a JSONL trace which is validated
+against scripts/trace_schema.py — `pass_spans_valid` gates on it — and the
+cumulative engine telemetry counters (push/pull edges scanned) ride along
+per cell so the record ties latencies to work volume.
+
+  PYTHONPATH=src python benchmarks/obs_bench.py [--small]
+
+Writes BENCH_obs.json (linted by scripts/bench_schema.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _force_host_devices() -> None:
+    """Must run before jax import: the sharded path needs a 4x1 host mesh."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count=4".strip())
+
+
+_force_host_devices()
+
+import numpy as np             # noqa: E402
+
+from repro.core import algorithms as alg              # noqa: E402
+from repro.graph import generators, pack_ell          # noqa: E402
+from repro.serving import (                           # noqa: E402
+    GraphServer,
+    Placement,
+    default_config,
+    make_serving_mesh,
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import trace_schema            # noqa: E402
+
+ALGOS = ("bfs", "sssp", "ppr_delta")
+EPS = 1e-9                     # clamp: bench_schema wants *_seconds > 0
+
+
+def _percentiles(vals) -> dict:
+    a = np.asarray(vals, dtype=np.float64)
+    return {f"p{q}_seconds": max(float(np.quantile(a, q / 100.0)), EPS)
+            for q in (50, 95, 99)}
+
+
+def _drain_submit(srv, algo, sources):
+    """Submit every source (pumping through backpressure), then drain.
+    Returns only THIS call's completions (drain() reports the cumulative
+    list)."""
+    n0 = len(srv.completions)
+    for s in sources:
+        while srv.submit(algo, int(s)) is None:
+            srv.pump()
+    return srv.drain()[n0:]
+
+
+def run_placement(name, g, pack, *, slots, mesh_shape, requests, warmup,
+                  seed, trace_path):
+    mesh = make_serving_mesh(*mesh_shape) if mesh_shape else None
+    placements = ({a: Placement("replicated", mesh_shape[0]) for a in ALGOS}
+                  if mesh_shape else None)
+    programs = {"bfs": alg.bfs(0), "sssp": alg.sssp(0),
+                "ppr_delta": alg.ppr_delta(0)}
+    srv = GraphServer(
+        g, pack, programs, slots=slots, cfg=default_config(g),
+        cache_capacity=requests * len(ALGOS) * 4,
+        result_fields={"ppr_delta": "rank"},
+        mesh=mesh, placements=placements,
+        telemetry=True, trace=trace_path,
+    )
+    # unique sources everywhere: a cache hit is a 0-iteration span and would
+    # corrupt the engine-latency percentiles
+    rng = np.random.default_rng(seed)
+    pool_src = rng.permutation(g.n_nodes)
+    assert g.n_nodes >= (warmup + requests) * len(ALGOS)
+    cursor = 0
+    cells = {}
+    for algo in ALGOS:
+        w = pool_src[cursor:cursor + warmup]
+        m = pool_src[cursor + warmup:cursor + warmup + requests]
+        cursor += warmup + requests
+        _drain_submit(srv, algo, w)            # jit compile + cache warm
+        n_before = len(srv.obs.tracer.finished)
+        t0 = time.monotonic()
+        comps = _drain_submit(srv, algo, m)
+        wall = max(time.monotonic() - t0, EPS)
+        spans = [sp for sp in list(srv.obs.tracer.finished)[n_before:]
+                 if sp.algo == algo and not sp.from_cache]
+        assert len(spans) == len(comps) == requests, (
+            name, algo, len(spans), len(comps))
+        durs = [sp.durations() for sp in spans]
+        cell = {
+            "n_requests": requests,
+            "wall_seconds": wall,
+            "goodput_qps": requests / wall,
+            "iterations_mean": float(np.mean([sp.iterations
+                                              for sp in spans])),
+            "total": _percentiles([d["total_s"] for d in durs]),
+            "queue_wait": _percentiles([d["queue_wait_s"] for d in durs]),
+            "resident": _percentiles([d["resident_s"] for d in durs]),
+        }
+        tele = srv.stats()["pools"][algo].get("tele")
+        if tele is not None:
+            cell["tele"] = tele                # cumulative engine counters
+        cells[algo] = cell
+        print(f"[obs_bench] {name:8s} {algo:9s} "
+              f"p50={cell['total']['p50_seconds'] * 1e3:8.1f}ms "
+              f"p99={cell['total']['p99_seconds'] * 1e3:8.1f}ms "
+              f"goodput={cell['goodput_qps']:7.1f} q/s")
+    srv.obs.close()
+    return cells
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=16,
+                    help="measured requests per algo per placement")
+    ap.add_argument("--warmup", type=int, default=3)
+    ap.add_argument("--small", action="store_true",
+                    help="smoke-size run (scale 8, 6 requests)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_obs.json")
+    args = ap.parse_args(argv)
+    if args.small:
+        args.scale, args.requests = 8, 6
+
+    g = generators.rmat(args.scale, args.edge_factor, seed=args.seed,
+                        directed=True)
+    pack = pack_ell(g.inc)
+    print(f"[obs_bench] rmat scale={args.scale}: {g.n_nodes} nodes, "
+          f"{g.n_edges} directed edges; {args.requests} reqs/algo "
+          f"(+{args.warmup} warmup), algos={','.join(ALGOS)}")
+
+    configs = {
+        "solo": dict(slots=1, mesh_shape=None),
+        "batched": dict(slots=8, mesh_shape=None),
+        "sharded": dict(slots=8, mesh_shape=(4, 1)),
+    }
+    results = {}
+    traces = {}
+    for name, cfg in configs.items():
+        traces[name] = f"/tmp/repro_obs_bench_{name}.jsonl"
+        results[name] = run_placement(
+            name, g, pack, slots=cfg["slots"], mesh_shape=cfg["mesh_shape"],
+            requests=args.requests, warmup=args.warmup, seed=args.seed + 1,
+            trace_path=traces[name])
+
+    span_errs = []
+    for name, path in traces.items():
+        n, errs = trace_schema.check(path)
+        span_errs.extend(errs)
+        print(f"[obs_bench] trace {name}: {n} spans, {len(errs)} problems")
+    ordered = all(
+        c[k][f"p{a}_seconds"] <= c[k][f"p{b}_seconds"] + 1e-12
+        for cells in results.values() for c in cells.values()
+        for k in ("total", "queue_wait", "resident")
+        for a, b in ((50, 95), (95, 99)))
+
+    rec = {
+        "bench": "obs_closed_loop",
+        "graph": {"kind": "rmat", "scale": args.scale,
+                  "n_nodes": int(g.n_nodes), "n_edges": int(g.n_edges)},
+        "requests_per_algo": args.requests,
+        "warmup_per_algo": args.warmup,
+        "placements": {
+            "solo": "slots=1 single-device",
+            "batched": "slots=8 single-device",
+            "sharded": "slots=8 replicated on forced 4x1 host mesh "
+                       "(structure, not device speedup — DESIGN.md §6)",
+        },
+        "results": results,
+        "pass_spans_valid": not span_errs,
+        "pass_percentiles_ordered": bool(ordered),
+    }
+    with open(args.out, "w") as f:
+        json.dump(rec, f, indent=2)
+        f.write("\n")
+    print(f"[obs_bench] wrote {args.out} "
+          f"(spans_valid={rec['pass_spans_valid']}, "
+          f"percentiles_ordered={rec['pass_percentiles_ordered']})")
+    return 0 if (rec["pass_spans_valid"]
+                 and rec["pass_percentiles_ordered"]) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -96,6 +96,14 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m repro.launch.serve_graph --requests 6 --slots 8 --scale 8 \
     --mesh 8x1 --algos ppr_delta
 
+echo "== observability smoke: --trace spans + schema validation =="
+# serve with request tracing on a small RMAT and validate every emitted
+# span (lifecycle ordering, durations, per-iteration push/pull modes +
+# frontier volumes) against the trace schema (DESIGN.md §12)
+python -m repro.launch.serve_graph --requests 8 --slots 4 --scale 8 \
+    --trace /tmp/repro_trace_check.jsonl
+python scripts/trace_schema.py /tmp/repro_trace_check.jsonl
+
 echo "== bench schema (BENCH_*.json incl. BENCH_ppr.json) =="
 python scripts/bench_schema.py
 

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Validate a request-trace JSONL file (`serve_graph --trace` /
+`stream_graph --trace`, repro.obs.trace).
+
+One span per line; each must carry the lifecycle contract DESIGN.md §12
+documents:
+
+  * required keys: trace_id, rid, algo, source, tenant, graph_version,
+    from_cache, events, durations, iterations, iters;
+  * events: `submit` and `complete` always; engine-served spans also carry
+    `admit` (and `harvest` once resident) — all finite, epoch-relative,
+    non-decreasing in lifecycle order;
+  * durations: queue_wait_s / resident_s / total_s all >= 0, with
+    queue_wait_s + resident_s <= total_s (+eps);
+  * iters: a list of per-iteration records — each has a push/pull `mode`,
+    optional non-negative `frontier` / `union_fe` counters; cache hits have
+    iterations == 0 and no iters; engine spans may have len(iters) <=
+    iterations (bounded mode trace / iteration log), never more than the
+    trace-cap, and at least one entry.
+
+Usage: python scripts/trace_schema.py TRACE.jsonl [more.jsonl...]
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+REQUIRED = ("trace_id", "rid", "algo", "source", "tenant", "graph_version",
+            "from_cache", "events", "durations", "iterations", "iters")
+LIFECYCLE = ("submit", "admit", "harvest", "complete")
+MODES = ("push", "pull")
+EPS = 1e-6
+
+
+def check_span(rec: dict, where: str, errs: list) -> None:
+    for k in REQUIRED:
+        if k not in rec:
+            errs.append(f"{where}: missing key {k!r}")
+            return
+    ev = rec["events"]
+    for name, t in ev.items():
+        if not (isinstance(t, (int, float)) and math.isfinite(t) and t >= 0):
+            errs.append(f"{where}: event {name!r} has bad timestamp {t!r}")
+    for k in ("submit", "complete"):
+        if k not in ev:
+            errs.append(f"{where}: span never recorded {k!r}")
+            return
+    seq = [ev[k] for k in LIFECYCLE if k in ev]
+    if any(b < a - EPS for a, b in zip(seq, seq[1:])):
+        errs.append(f"{where}: lifecycle timestamps regress: {ev}")
+    dur = rec["durations"]
+    for k in ("queue_wait_s", "resident_s", "total_s"):
+        v = dur.get(k)
+        if not (isinstance(v, (int, float)) and math.isfinite(v) and v >= 0):
+            errs.append(f"{where}: durations.{k} must be >= 0, got {v!r}")
+            return
+    if dur["queue_wait_s"] + dur["resident_s"] > dur["total_s"] + EPS:
+        errs.append(f"{where}: queue_wait + resident > total: {dur}")
+    iters = rec["iters"]
+    n_it = rec["iterations"]
+    if not isinstance(n_it, int) or n_it < 0:
+        errs.append(f"{where}: iterations must be a non-negative int")
+        return
+    if rec["from_cache"]:
+        if n_it != 0 or iters:
+            errs.append(f"{where}: cache-hit span with engine iterations")
+        return
+    if "admit" not in ev:
+        errs.append(f"{where}: engine-served span missing 'admit' event")
+    if not iters:
+        errs.append(f"{where}: engine-served span has empty iters")
+    if len(iters) > max(n_it, 1):
+        errs.append(f"{where}: {len(iters)} iter records for {n_it} iterations")
+    for i, it in enumerate(iters):
+        if it.get("mode") not in MODES:
+            errs.append(f"{where}: iters[{i}].mode {it.get('mode')!r} "
+                        f"not in {MODES}")
+        for k in ("frontier", "union_fe"):
+            if k in it and (not isinstance(it[k], int) or it[k] < 0):
+                errs.append(f"{where}: iters[{i}].{k} must be a "
+                            f"non-negative int, got {it[k]!r}")
+
+
+def check(path: str) -> tuple:
+    errs: list = []
+    n = 0
+    seen = set()
+    try:
+        with open(path) as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                where = f"{path}:{lineno}"
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError as e:
+                    errs.append(f"{where}: bad JSON ({e})")
+                    continue
+                n += 1
+                if not isinstance(rec, dict):
+                    errs.append(f"{where}: span must be an object")
+                    continue
+                tid = rec.get("trace_id")
+                if tid in seen:
+                    errs.append(f"{where}: duplicate trace_id {tid!r}")
+                seen.add(tid)
+                check_span(rec, where, errs)
+    except OSError as e:
+        return 0, [f"{path}: unreadable ({e})"]
+    if n == 0:
+        errs.append(f"{path}: no spans")
+    return n, errs
+
+
+def main(argv=None) -> int:
+    paths = argv or []
+    if not paths:
+        print("usage: trace_schema.py TRACE.jsonl [...]", file=sys.stderr)
+        return 2
+    all_errs = []
+    for p in paths:
+        n, errs = check(p)
+        status = f"{n} span(s) OK" if not errs else f"{len(errs)} problem(s)"
+        print(f"[trace_schema] {p}: {status}")
+        all_errs.extend(errs)
+    for e in all_errs:
+        print(f"[trace_schema]   {e}")
+    return 1 if all_errs else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

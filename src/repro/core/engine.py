@@ -98,6 +98,12 @@ class EngineState(NamedTuple):
     pull_iters: jnp.ndarray
     switches: jnp.ndarray
     mode_trace: jnp.ndarray        # (trace_len,) int8: 0 push, 1 pull, -1 unused
+    #: (trace_len,) int32 — the frontier's out-edge volume ENTERING each
+    #: iteration (the quantity the JIT controller decides on), -1 unused.
+    #: Loop-carried like mode_trace: a bounded static buffer, no extra
+    #: device work beyond one vector write per iteration, harvested with
+    #: the final state (repro.obs per-iteration telemetry, DESIGN.md §12).
+    fe_trace: jnp.ndarray
 
 
 # ---------------------------------------------------------------------------
@@ -277,9 +283,10 @@ def _frontier_volume(csr: CSR, ids: jnp.ndarray, count: jnp.ndarray) -> jnp.ndar
 
 def _advance(st, m_new, ids, count, fe_next, ovf, was_mode) -> EngineState:
     it = st.it + 1
-    tr = st.mode_trace.at[jnp.minimum(st.it, st.mode_trace.shape[0] - 1)].set(
-        was_mode.astype(jnp.int8)
-    )
+    slot = jnp.minimum(st.it, st.mode_trace.shape[0] - 1)
+    tr = st.mode_trace.at[slot].set(was_mode.astype(jnp.int8))
+    # st.fe_next is the volume that ENTERED the iteration just executed
+    fe_tr = st.fe_trace.at[slot].set(st.fe_next)
     return EngineState(
         m=m_new,
         frontier=ids,
@@ -293,6 +300,7 @@ def _advance(st, m_new, ids, count, fe_next, ovf, was_mode) -> EngineState:
         pull_iters=st.pull_iters + jnp.where(was_mode == PULL, 1, 0).astype(jnp.int32),
         switches=st.switches,
         mode_trace=tr,
+        fe_trace=fe_tr,
     )
 
 
@@ -353,6 +361,7 @@ def init_state(program: ACCProgram, g: Graph, cfg: EngineConfig,
         pull_iters=jnp.int32(0),
         switches=jnp.int32(0),
         mode_trace=jnp.full((cfg.trace_len,), -1, jnp.int8),
+        fe_trace=jnp.full((cfg.trace_len,), -1, jnp.int32),
     )
     st = st._replace(fe_next=_frontier_volume(g.out, st.frontier, st.count))
     return _policy(program, cfg, g.n_edges, st)
@@ -433,6 +442,7 @@ def run(
         "pull_iters": final.pull_iters,
         "switches": final.switches,
         "mode_trace": final.mode_trace,
+        "fe_trace": final.fe_trace,
         "final_count": final.count,
     }
     return final.m, stats

@@ -60,6 +60,14 @@ def main(argv=None):
     ap.add_argument("--placement", default="replicated",
                     choices=("replicated", "edge_sharded"),
                     help="pool placement on the --mesh")
+    ap.add_argument("--trace", default="",
+                    help="write per-request lifecycle spans (queue-wait / "
+                         "resident / total + per-iteration push-pull modes "
+                         "and frontier volumes) as JSON lines to this path; "
+                         "implies --telemetry")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the unified telemetry layer (engine "
+                         "counters, lifecycle metrics, stats() obs section)")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -97,6 +105,8 @@ def main(argv=None):
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
         result_fields={"ppr": "rank", "ppr_delta": "rank"},
         mesh=mesh, placements=placements,
+        telemetry=args.telemetry or bool(args.trace),
+        trace=args.trace or None,
     )
 
     rng = np.random.default_rng(args.seed)
@@ -118,6 +128,7 @@ def main(argv=None):
         submitted += 1
     comps = srv.drain()
     dt = time.time() - t0
+    srv.obs.close()
 
     stats = srv.stats()
     assert len(comps) == args.requests, (len(comps), args.requests)
@@ -130,6 +141,23 @@ def main(argv=None):
         place = "" if p["placement"] == "single" else f" [{p['placement']}]"
         print(f"[serve_graph]   pool {name}: {p['engine_queries']} engine queries, "
               f"{p['steps']} batched steps x {p['slots']} slots{place}")
+        if "tele" in p:
+            t = p["tele"]
+            print(f"[serve_graph]     tele: {t['push_edges_scanned']} push / "
+                  f"{t['pull_edges_scanned']} pull edges scanned, "
+                  f"{t['compact_hits']} compact hits / "
+                  f"{t['compact_dense_fallbacks']} dense fallbacks")
+    if srv.obs.enabled:
+        m = stats["obs"]["metrics"]
+        for name in stats["pools"]:
+            s = m.get(f"{name}.latency_total_s")
+            if s:
+                print(f"[serve_graph]   latency {name}: "
+                      f"p50={s['p50'] * 1e3:.1f}ms p95={s['p95'] * 1e3:.1f}ms "
+                      f"p99={s['p99'] * 1e3:.1f}ms (n={s['count']})")
+        spans = stats["obs"]["spans"]
+        print(f"[serve_graph] telemetry: {spans['emitted']} spans emitted"
+              + (f" -> {args.trace}" if args.trace else ""))
     for c in comps[:3]:
         head = np.array2string(c.result[:4], precision=3)
         print(f"  rid {c.rid} {c.algo}(src={c.source}) iters={c.iterations} "

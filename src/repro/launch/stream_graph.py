@@ -79,6 +79,12 @@ def main(argv=None):
     ap.add_argument("--placement", default="replicated",
                     choices=("replicated", "edge_sharded"),
                     help="pool placement on the --mesh")
+    ap.add_argument("--trace", default="",
+                    help="write per-request lifecycle spans as JSON lines "
+                         "to this path (implies --telemetry); spans carry "
+                         "the graph version each request completed on")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the unified telemetry layer")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -115,6 +121,8 @@ def main(argv=None):
         cache_capacity=args.cache_cap, delta_cap=args.delta_cap,
         result_fields={"ppr": "rank", "ppr_delta": "rank"},
         mesh=mesh, placements=placements,
+        telemetry=args.telemetry or bool(args.trace),
+        trace=args.trace or None,
     )
     # version -> overlay views, for --verify of historical completions.
     # Only kept under --verify: each version pins full-size device arrays,
@@ -151,8 +159,13 @@ def main(argv=None):
                   f"rebuild={st['rebuild']}")
     comps = srv.drain()
     dt = time.time() - t0
+    srv.obs.close()
 
     stats = srv.stats()
+    if srv.obs.enabled:
+        spans = stats["obs"]["spans"]
+        print(f"[stream_graph] telemetry: {spans['emitted']} spans emitted"
+              + (f" -> {args.trace}" if args.trace else ""))
     print(f"[stream_graph] {len(comps)} completions in {dt:.2f}s "
           f"({len(comps) / dt:.1f} q/s) across "
           f"{stats['updates']} update batches "

@@ -1,0 +1,150 @@
+"""`repro.obs` — unified telemetry for the serving stack (DESIGN.md §12).
+
+Three pieces, one enable switch:
+
+  metrics.py -- host-side registry: counters, gauges, fixed-bucket
+                histograms with interpolated p50/p95/p99 summaries.
+  trace.py   -- request-lifecycle spans (submit -> admit -> harvest ->
+                complete) exported as JSON lines.
+  (engine)   -- per-iteration device counters: the batched engines carry an
+                optional `BatchState.tele` accumulator (see TELE_* indices
+                below) and the scheduler harvests one small packed array
+                per pump — ONE device->host transfer per pool per
+                iteration, never per lane.
+
+Everything funnels through :class:`Observability`, which `GraphServer`
+owns. Disabled (`enabled=False`, the default construction), every hook is
+a no-op, the engines carry `tele=None` (no extra loop state), and NO
+device->host transfer is issued on behalf of telemetry — every telemetry
+transfer in the repo goes through :func:`device_fetch`, whose global call
+counter is what the overhead-guard test pins (tests/test_obs.py).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    NOOP,
+    default_count_buckets,
+    default_latency_buckets,
+)
+from repro.obs.trace import (  # noqa: F401
+    MODE_NAMES,
+    Span,
+    TraceRecorder,
+    iters_from_trace,
+)
+
+# ---------------------------------------------------------------------------
+# engine telemetry accumulator layout (BatchState.tele, (TELE_LEN,) int32)
+# ---------------------------------------------------------------------------
+
+#: edges expanded by push iterations (union volume clamped to the edge
+#: budget, plus streaming-delta COO lanes)
+TELE_PUSH_EDGES = 0
+#: ELL/COO slots scanned by pull / dense-shard iterations
+TELE_PULL_EDGES = 1
+#: edge-sharded shard-iterations served from the frontier-compacted buffer
+#: (cfg.shard_compact light iterations that fit the bounded buffer)
+TELE_COMPACT_HITS = 2
+#: light shard-iterations whose compaction buffer overflowed -> dense scan
+TELE_COMPACT_DENSE = 3
+#: masked-pull slice scans forced dense (cache invalid or row-buffer
+#: overflow)
+TELE_MASKED_DENSE = 4
+#: masked-pull ELL rows actually recomputed (hot rows, or all rows on a
+#: dense fallback)
+TELE_MASKED_ROWS = 5
+TELE_LEN = 6
+
+TELE_FIELDS = (
+    "push_edges_scanned",
+    "pull_edges_scanned",
+    "compact_hits",
+    "compact_dense_fallbacks",
+    "masked_dense_fallbacks",
+    "masked_rows_recomputed",
+)
+
+
+def tele_dict(tele) -> dict:
+    """Name a (TELE_LEN,) accumulator vector (host ints)."""
+    if tele is None:
+        return {}
+    vals = [int(x) for x in np.asarray(tele)]
+    return dict(zip(TELE_FIELDS, vals))
+
+
+# ---------------------------------------------------------------------------
+# the device->host chokepoint
+# ---------------------------------------------------------------------------
+
+#: number of telemetry-initiated device->host transfers since import. Every
+#: telemetry read of device state MUST go through `device_fetch` so the
+#: overhead-guard test can assert the disabled path issues none.
+TRANSFER_COUNT = 0
+
+
+def device_fetch(x) -> np.ndarray:
+    """Fetch one device array to host, counting the transfer."""
+    global TRANSFER_COUNT
+    TRANSFER_COUNT += 1
+    return np.asarray(x)
+
+
+class Observability:
+    """One switch, one registry, one trace recorder — what `GraphServer`
+    threads through the serving stack. `trace` is a path or writable text
+    file; passing one implies enabled."""
+
+    def __init__(self, enabled: bool = False, trace=None,
+                 keep_spans: int = 1024, name: str = "g0"):
+        self.enabled = bool(enabled) or trace is not None
+        self.registry = MetricsRegistry(enabled=self.enabled)
+        self.tracer = TraceRecorder(enabled=self.enabled, sink=trace,
+                                    keep=keep_spans, name=name)
+
+    def close(self) -> None:
+        self.tracer.close()
+
+    def snapshot(self) -> dict:
+        if not self.enabled:
+            return {"enabled": False}
+        return {
+            "enabled": True,
+            "metrics": self.registry.snapshot(),
+            "spans": self.tracer.stats(),
+        }
+
+
+__all__ = [
+    "Observability",
+    "MetricsRegistry",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "NOOP",
+    "TraceRecorder",
+    "Span",
+    "iters_from_trace",
+    "MODE_NAMES",
+    "device_fetch",
+    "tele_dict",
+    "default_latency_buckets",
+    "default_count_buckets",
+    "TELE_LEN",
+    "TELE_FIELDS",
+    "TELE_PUSH_EDGES",
+    "TELE_PULL_EDGES",
+    "TELE_COMPACT_HITS",
+    "TELE_COMPACT_DENSE",
+    "TELE_MASKED_DENSE",
+    "TELE_MASKED_ROWS",
+]

@@ -61,6 +61,13 @@ from repro.core.acc import ACCProgram
 from repro.core.engine import PULL, PUSH, EngineConfig, expand_frontier
 from repro.graph.csr import CSR, EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
+from repro.obs import (
+    TELE_LEN,
+    TELE_MASKED_DENSE,
+    TELE_MASKED_ROWS,
+    TELE_PULL_EDGES,
+    TELE_PUSH_EDGES,
+)
 
 
 class GraphDims(NamedTuple):
@@ -106,6 +113,13 @@ class BatchState(NamedTuple):
     #: frontiers already capture every change, and the tol-thresholded pull
     #: programs (ppr/pagerank) keep the documented frozen-drift semantics.
     hot: Optional[jnp.ndarray] = None
+    #: (TELE_LEN,) int32 — cumulative engine telemetry counters (edges
+    #: scanned per direction, masked-pull / shard-compaction fallback
+    #: events; layout in repro/obs/__init__.py). None when telemetry is off
+    #: (`init_batch(telemetry=False)`, the default): the loop then carries
+    #: no extra state and executes no extra ops — the telemetry-disabled
+    #: overhead guard in tests/test_obs.py pins this.
+    tele: Optional[jnp.ndarray] = None
 
 
 def _ident(program: ACCProgram, m: dict):
@@ -190,10 +204,17 @@ def _push_step(program: ACCProgram, csr: CSR, cfg: EngineConfig, st: BatchState,
     upd = jnp.where(eactive, upd, ident)
     seg = comb.segment(upd, dst, n + 1)                  # (n+1, Q)
 
+    tele = st.tele
+    if tele is not None:
+        scanned = jnp.minimum(_total, jnp.int32(cfg.edge_cap))
+        if delta is not None:
+            scanned = scanned + jnp.sum(delta.src < n).astype(jnp.int32)
+        tele = tele.at[TELE_PUSH_EDGES].add(scanned)
+
     m_new, nxt, count, fe, ovf, hot = _apply_and_refilter(
         program, cfg, csr, st, seg)
     return _advance(st, m_new, nxt, count, fe, ovf, was_mode=PUSH, cfg=cfg,
-                    hot=hot)
+                    hot=hot, tele=tele)
 
 
 def _slice_partial_dense(program, comb, m, s, n, ident):
@@ -217,6 +238,10 @@ def _slice_partial_masked(program, comb, m, s, n, ident, hot_v, prev,
     for this slice. Exact for min/max programs, whose `active` masks capture
     every value change; for tol-thresholded programs sub-tolerance drift
     outside the frontier stays frozen (push-mode semantics).
+
+    Returns (partial, dense_taken, rows_recomputed) — the trailing pair
+    feeds the telemetry accumulator (ignored when telemetry is off; both
+    are byproducts of values this function computes anyway).
     """
     r, w = s.nbr.shape
     capR = min(r, max(8, int(math.ceil(r * cfg.masked_pull_frac))))
@@ -240,7 +265,9 @@ def _slice_partial_masked(program, comb, m, s, n, ident, hot_v, prev,
         buf = jnp.concatenate([prev, jnp.zeros((1, prev.shape[1]), prev.dtype)])
         return buf.at[tgt].set(p_sel)[:r]
 
-    return jax.lax.cond(ovf | force_dense, dense, sparse, prev)
+    dense_taken = ovf | force_dense
+    rows = jnp.where(dense_taken, jnp.int32(r), cnt)
+    return jax.lax.cond(dense_taken, dense, sparse, prev), dense_taken, rows
 
 
 def _pull_step(
@@ -266,25 +293,35 @@ def _pull_step(
     else:
         hot_v = jnp.any(st.active, axis=-1)
     pseg_new = []
+    tele = st.tele
     for si, s in enumerate(pack.slices):
         if cfg.masked_pull:
-            partial = _slice_partial_masked(
+            partial, dense_taken, rows = _slice_partial_masked(
                 program, comb, st.m, s, n, ident, hot_v, st.pseg[si],
                 st.pull_dense, cfg)
             pseg_new.append(partial)
+            if tele is not None:
+                w = s.nbr.shape[1]
+                tele = (tele
+                        .at[TELE_MASKED_DENSE].add(dense_taken.astype(jnp.int32))
+                        .at[TELE_MASKED_ROWS].add(rows)
+                        .at[TELE_PULL_EDGES].add(rows * jnp.int32(w)))
         else:
             partial = _slice_partial_dense(program, comb, st.m, s, n, ident)
+            if tele is not None:
+                tele = tele.at[TELE_PULL_EDGES].add(
+                    jnp.int32(s.nbr.shape[0] * s.nbr.shape[1]))
         seg = comb.pair(seg, comb.segment(partial, s.row_id, n + 1))
 
     m_new, nxt, count, fe, ovf, hot = _apply_and_refilter(
         program, cfg, csr_for_deg, st, seg)
     return _advance(st, m_new, nxt, count, fe, ovf, was_mode=PULL, cfg=cfg,
                     pseg=tuple(pseg_new) if cfg.masked_pull else None,
-                    hot=hot)
+                    hot=hot, tele=tele)
 
 
 def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode, cfg=None,
-             pseg=None, hot=None) -> BatchState:
+             pseg=None, hot=None, tele=None) -> BatchState:
     live = ~st.done
     it = st.it + jnp.where(live, 1, 0)
     q = it.shape[0]
@@ -310,6 +347,7 @@ def _advance(st, m_new, nxt, count, union_fe, overflow, was_mode, cfg=None,
         pseg=st.pseg if pseg is None else pseg,
         pull_dense=pull_dense,
         hot=st.hot if hot is None else hot,
+        tele=st.tele if tele is None else tele,
     )
 
 
@@ -380,7 +418,8 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
                sources, done=None, pack: Optional[EllPack] = None,
                check_caps: bool = True,
                delta: Optional[EdgeDelta] = None,
-               deg: Optional[jnp.ndarray] = None) -> BatchState:
+               deg: Optional[jnp.ndarray] = None,
+               telemetry: bool = False) -> BatchState:
     """Stack Q fresh query states (one per source), vertex-major.
 
     `done` marks lanes to create as empty/inactive (the scheduler starts
@@ -396,6 +435,10 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     vector instead (the O(m) count is constant per graph version, so the
     per-admission hot path supplies the pool's cached one rather than
     recounting every edge per admitted lane).
+
+    `telemetry=True` seeds the cumulative `tele` counter vector (layout in
+    repro/obs) that the steps then maintain; the default leaves `tele=None`
+    — no extra loop-carried state, no extra ops (DESIGN.md §12).
 
     `g` may be a bare :class:`GraphDims` (with `deg` required) on the
     CSR-free path: everything init computes from the adjacency — the union
@@ -468,6 +511,7 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
         pseg=pseg,
         pull_dense=pull_dense,
         hot=hot,
+        tele=jnp.zeros((TELE_LEN,), jnp.int32) if telemetry else None,
     )
     return st._replace(gmode=_consensus_mode(program, cfg, g.n_edges, st),
                        mode=jnp.where(st.done, st.mode,
@@ -510,6 +554,7 @@ def run_state(
         "switches": final.switches,
         "final_count": final.count,
         "mode_trace": final.mode_trace,
+        "tele": final.tele,
     }
     return final.m, stats
 
@@ -522,12 +567,15 @@ def run_batch(
     sources,
     fusion: str = "all",
     delta: Optional[EdgeDelta] = None,
+    telemetry: bool = False,
 ):
     """Run Q point queries of `program` (one per entry of `sources`) to
     convergence as one batch. Returns (metadata dict, field -> (n+1, Q),
     stats). `cfg.pull_impl`/`cfg.sparse_combine` are single-query fast paths
-    and are ignored here."""
-    st0 = init_batch(program, g, cfg, sources, pack=pack, delta=delta)
+    and are ignored here. `telemetry=True` carries the cumulative engine
+    counters (stats['tele'], layout in repro/obs)."""
+    st0 = init_batch(program, g, cfg, sources, pack=pack, delta=delta,
+                     telemetry=telemetry)
     return run_state(program, g, pack, cfg, st0, delta=delta, fusion=fusion)
 
 

@@ -62,6 +62,12 @@ class ResultCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        #: entries lost to STALENESS rather than capacity: explicit
+        #: `invalidate` hits, plus the take_version entries a streaming
+        #: update could not retain/refresh (the caller reports those via
+        #: `note_invalidated` — the cache cannot see which taken entries
+        #: come back). The unified stats surface reads this (DESIGN.md §12).
+        self.invalidations = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -88,7 +94,15 @@ class ResultCache:
             self.evictions += 1
 
     def invalidate(self, key: Hashable) -> bool:
-        return self._entries.pop(key, None) is not None
+        hit = self._entries.pop(key, None) is not None
+        if hit:
+            self.invalidations += 1
+        return hit
+
+    def note_invalidated(self, n: int) -> None:
+        """Record `n` entries dropped by a streaming update's selective
+        invalidation pass (`take_version` entries never re-`put`)."""
+        self.invalidations += int(n)
 
     def take_version(self, graph_version: int) -> list:
         """Remove and return every entry keyed to `graph_version`, in recency
@@ -114,5 +128,6 @@ class ResultCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "invalidations": self.invalidations,
             "hit_rate": self.hits / total if total else 0.0,
         }

@@ -94,7 +94,7 @@ class ShardedAlgoPool(_LanePool):
     def __init__(self, name: str, program: ACCProgram, g: Graph,
                  pack: EllPack, cfg: EngineConfig, slots: int, mesh,
                  placement, result_field: Optional[str] = None,
-                 delta: Optional[EdgeDelta] = None):
+                 delta: Optional[EdgeDelta] = None, telemetry: bool = False):
         self.placement = Placement.of(placement)
         self.placement.check_mesh(mesh)
         self.name = name
@@ -108,7 +108,8 @@ class ShardedAlgoPool(_LanePool):
             "query shards")
         self.engine = ShardedBatchEngine(
             program, g, pack, cfg, mesh, placement=self.placement.kind,
-            consensus=self.placement.consensus, delta=delta)
+            consensus=self.placement.consensus, delta=delta,
+            telemetry=telemetry)
         self.g, self.pack, self.delta = (
             self.engine.g, self.engine.pack, self.engine.delta)
         self.lane_rid: List[Optional[int]] = [None] * slots
@@ -129,6 +130,7 @@ class ShardedAlgoPool(_LanePool):
             self.cache_extra_fields = (program.param("residual", "resid"),)
         self.engine_queries = 0
         self.steps = 0
+        self._init_obs(telemetry)
 
     # -- scheduling interface: live/admit/harvest/readmit from _LanePool ----
 

@@ -39,6 +39,15 @@ pool's lanes shard across the mesh ('replicated' query sharding or
 'edge_sharded' graph partitioning — `serving/placement.py`); the scheduler
 drives both pool kinds through the same admit/step/harvest loop.
 
+Telemetry (`telemetry=True` / `trace=`, DESIGN.md §12): the server owns an
+`repro.obs.Observability` — request-lifecycle spans (submit -> admit ->
+harvest -> complete), per-pool latency/volume histograms, and the engines'
+cumulative `BatchState.tele` counters, read back as ONE jit-packed vector
+per live pool per pump (`_pack_pump` via the counted `device_fetch`
+chokepoint) plus one mode-trace fetch per yielding harvest. Disabled (the
+default), every hook is a no-op and no telemetry transfer is ever issued;
+`stats()` documents the unified read-only schema.
+
 Streaming graphs: constructed with `delta_cap > 0` the server owns a
 `repro.streaming.StreamingGraph`; `apply_updates` absorbs an edge-update
 batch, swaps the overlaid views into every pool (traced args — no
@@ -61,6 +70,15 @@ from repro.core.acc import ACCProgram
 from repro.core.engine import EngineConfig
 from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
+from repro.obs import (
+    Observability,
+    TELE_LEN,
+    default_count_buckets,
+    default_latency_buckets,
+    device_fetch,
+    iters_from_trace,
+    tele_dict,
+)
 from repro.serving import batch_engine as B
 from repro.serving.cache import (
     CachedEntry,
@@ -108,11 +126,62 @@ def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
     )
 
 
+#: bounded length of a pool's per-iteration telemetry log (`iter_log`) — a
+#: lane resident longer than this loses its OLDEST per-iteration samples
+#: (the span's `iters` list keeps alignment via None gaps; see
+#: `GraphServer._complete_span`)
+OBS_LOG_LEN = 512
+
+
+@jax.jit
+def _pack_pump(st: B.BatchState) -> jnp.ndarray:
+    """Pack one pump's pool telemetry into ONE int32 vector so the
+    scheduler's per-iteration harvest costs a single device->host transfer
+    per pool per pump (never per lane): [gmode, union_fe, overflow,
+    live_lanes, tele(TELE_LEN), per-lane frontier counts(S)]."""
+    head = jnp.stack([
+        st.gmode.astype(jnp.int32),
+        st.union_fe.astype(jnp.int32),
+        st.overflow.astype(jnp.int32),
+        jnp.sum(~st.done).astype(jnp.int32),
+    ])
+    tele = (st.tele if st.tele is not None
+            else jnp.zeros((TELE_LEN,), jnp.int32))
+    return jnp.concatenate([head, tele, st.count.astype(jnp.int32)])
+
+
 class _LanePool:
     """Lane bookkeeping shared by the single-device and sharded pools — the
     scheduler drives both kinds through exactly this contract. Subclasses
     provide `state`, `lane_rid`, `slots`, `program`, `result_field`, `cfg`,
     `pack`, and a jitted `_admit(st, source, lane, graph)`."""
+
+    #: telemetry flag + bounded per-iteration log, set up by `_init_obs` in
+    #: each concrete pool's ctor
+    telemetry = False
+
+    def _init_obs(self, telemetry: bool) -> None:
+        self.telemetry = bool(telemetry)
+        self.iter_log: deque = deque(maxlen=OBS_LOG_LEN)
+        #: pool step count at each lane's (re)admission — the lane's
+        #: iteration i ran during pool step `lane_admit_step[lane] + 1 + i`
+        self.lane_admit_step: List[int] = [0] * self.slots
+
+    def log_iter(self) -> dict:
+        """Record one executed pool iteration (call right after `step()`):
+        one `device_fetch` of the packed sample, appended to `iter_log`."""
+        packed = device_fetch(_pack_pump(self.state))
+        entry = {
+            "step": self.steps,
+            "gmode": int(packed[0]),
+            "union_fe": int(packed[1]),
+            "overflow": bool(packed[2]),
+            "live": int(packed[3]),
+            "tele": packed[4:4 + TELE_LEN],
+            "counts": packed[4 + TELE_LEN:],
+        }
+        self.iter_log.append(entry)
+        return entry
 
     def free_lanes(self) -> List[int]:
         done = np.asarray(self.state.done)
@@ -129,6 +198,7 @@ class _LanePool:
             self._admit_graph(), self._admit_delta(), self.live_deg,
         )
         self.lane_rid[lane] = rid
+        self.lane_admit_step[lane] = self.steps
         self.engine_queries += 1
 
     def readmit(self, lane: int, source: int) -> None:
@@ -140,6 +210,7 @@ class _LanePool:
             self.state, jnp.int32(source), jnp.int32(lane),
             self._admit_graph(), self._admit_delta(), self.live_deg,
         )
+        self.lane_admit_step[lane] = self.steps
         self.engine_queries += 1
 
     def _refresh_live_deg(self) -> None:
@@ -229,7 +300,7 @@ class AlgoPool(_LanePool):
 
     def __init__(self, name: str, program: ACCProgram, g: Graph, pack: EllPack,
                  cfg: EngineConfig, slots: int, result_field: Optional[str] = None,
-                 delta: Optional[EdgeDelta] = None):
+                 delta: Optional[EdgeDelta] = None, telemetry: bool = False):
         assert slots >= 1
         self.name = name
         self.program = program
@@ -247,6 +318,7 @@ class AlgoPool(_LanePool):
             done=jnp.ones((slots,), bool),
             pack=pack,
             delta=delta,
+            telemetry=telemetry,
         )
         # graph/pack/delta are TRACED pytree args (not closure constants), so
         # the CSR/ELL/overlay arrays are not baked into each pool's
@@ -263,6 +335,7 @@ class AlgoPool(_LanePool):
         self._refresh_live_deg()
         self.engine_queries = 0
         self.steps = 0
+        self._init_obs(telemetry)
         #: extra cache-key params; single-device results are the bitwise
         #: reference, so no distinguishing params (see serving/placement.py)
         self.cache_params: tuple = ()
@@ -345,9 +418,18 @@ class GraphServer:
         delta_cap: int = 0,
         mesh=None,
         placements: Optional[Dict[str, object]] = None,
+        telemetry: bool = False,
+        trace=None,
+        obs: Optional[Observability] = None,
     ):
         cfg = cfg or default_config(g)
         self.cfg = cfg
+        # one switch for the whole stack (DESIGN.md §12): a trace sink or
+        # an injected Observability implies enabled; disabled servers carry
+        # tele=None engine states and never call device_fetch
+        self.obs = obs if obs is not None else Observability(
+            enabled=telemetry, trace=trace)
+        telemetry = self.obs.enabled
         delta = None
         self.sg = None
         if delta_cap > 0:
@@ -375,13 +457,13 @@ class GraphServer:
                 self.pools[name] = ShardedAlgoPool(
                     name, prog, g, pack, cfg, s, mesh, placements[name],
                     result_field=result_fields.get(name),
-                    delta=delta,
+                    delta=delta, telemetry=telemetry,
                 )
             else:
                 self.pools[name] = AlgoPool(
                     name, prog, g, pack, cfg, s,
                     result_field=result_fields.get(name),
-                    delta=delta,
+                    delta=delta, telemetry=telemetry,
                 )
         # weighted fair queuing at the admission edge: per-(tenant, algo)
         # queues, each owning (algo share) x (tenant share) of the budget
@@ -429,8 +511,14 @@ class GraphServer:
         key = make_key(self.graph_version, algo, source,
                        self.pools[algo].cache_params)
         hit = self.cache.get(key)
+        reg = self.obs.registry
+        reg.counter("requests_total").inc()
         if hit is not None:
             self._next_rid += 1
+            reg.counter("cache_hits_total").inc()
+            tr = self.obs.tracer
+            tr.begin(rid, algo, int(source), tenant, self.graph_version)
+            tr.complete(rid, from_cache=True, iterations=0)
             self.completions.append(Completion(
                 rid=rid, algo=algo, source=int(source),
                 result=served_result(hit),
@@ -440,6 +528,7 @@ class GraphServer:
             return rid
         if len(self.queues[algo][tenant]) >= self.tenant_quota[(algo, tenant)]:
             self.rejected += 1
+            reg.counter("rejected_total").inc()
             if strict:
                 raise QueueFull(
                     f"queue for tenant {tenant!r} of {algo!r} at its share "
@@ -447,6 +536,8 @@ class GraphServer:
                     f"{self.queue_cap}")
             return None
         self._next_rid += 1
+        self.obs.tracer.begin(rid, algo, int(source), tenant,
+                              self.graph_version)
         self.queues[algo][tenant].append(
             Request(rid=rid, algo=algo, source=int(source), tenant=tenant))
         return rid
@@ -475,17 +566,35 @@ class GraphServer:
                         pool.admit(lanes.popleft(), req.rid, req.source)
                         self._inflight_sources[req.rid] = req.source
                         self._inflight_tenants[req.rid] = req.tenant
+                        self.obs.tracer.mark(req.rid, "admit")
 
         new: List[Completion] = []
         for name, pool in self.pools.items():
+            stepped = pool.live()
             pool.step()
+            if stepped and self.obs.enabled:
+                entry = pool.log_iter()
+                reg = self.obs.registry
+                reg.histogram(f"{name}.union_fe",
+                              default_count_buckets()).observe(
+                    entry["union_fe"])
+                reg.gauge(f"{name}.live_lanes").set(entry["live"])
             new.extend(self._harvest_pool(name, pool))
+        if self.obs.enabled:
+            self.obs.registry.gauge("queued").set(self._queued())
         self.completions.extend(new)
         return new
 
     def _harvest_pool(self, name: str, pool: AlgoPool) -> List[Completion]:
         out = []
-        for _lane, rid, result, iters, extras in pool.harvest():
+        harvested = pool.harvest()
+        mode_rows = None
+        if harvested and self.obs.enabled:
+            # per-request per-iteration modes come from the existing
+            # mode-trace machinery: ONE matrix transfer per harvest that
+            # actually yields lanes (never per lane)
+            mode_rows = device_fetch(pool.state.mode_trace)
+        for lane, rid, result, iters, extras in harvested:
             comp = Completion(
                 rid=rid, algo=name, source=self._source_of(rid, name, result),
                 result=result, iterations=iters, from_cache=False,
@@ -497,8 +606,46 @@ class GraphServer:
                          pool.cache_params),
                 CachedEntry(comp.result, extras) if extras else comp.result,
             )
+            if self.obs.enabled:
+                self._complete_span(name, pool, lane, rid, iters, mode_rows)
             out.append(comp)
         return out
+
+    def _complete_span(self, name: str, pool: AlgoPool, lane: int, rid: int,
+                       iters: int, mode_rows) -> None:
+        """Close an engine-served request's span: assemble its per-iteration
+        list from the lane's mode-trace row + the pool iteration log's
+        per-lane frontier counts / union volumes, observe the lifecycle
+        latency histograms."""
+        tr = self.obs.tracer
+        tr.mark(rid, "harvest")
+        admit_step = pool.lane_admit_step[lane]
+        counts: List[Optional[int]] = []
+        unions: List[Optional[int]] = []
+        for e in pool.iter_log:
+            i = e["step"] - admit_step - 1     # this lane's iteration index
+            if i < 0:
+                continue
+            while len(counts) < i:             # bounded log dropped samples:
+                counts.append(None)            # None gaps keep alignment
+                unions.append(None)
+            counts.append(int(e["counts"][lane]))
+            unions.append(int(e["union_fe"]))
+        span = tr.complete(rid, from_cache=False, iterations=iters,
+                           iters=iters_from_trace(mode_rows[lane], counts,
+                                                  unions),
+                           graph_version=self.graph_version)
+        if span is None:
+            return
+        d = span.durations()
+        reg = self.obs.registry
+        lat = default_latency_buckets()
+        reg.histogram(f"{name}.latency_total_s", lat).observe(d["total_s"])
+        reg.histogram(f"{name}.queue_wait_s", lat).observe(d["queue_wait_s"])
+        reg.histogram(f"{name}.resident_s", lat).observe(d["resident_s"])
+        reg.histogram(f"{name}.iterations",
+                      default_count_buckets()).observe(iters)
+        reg.counter("completions_engine_total").inc()
 
     def _source_of(self, rid: int, algo: str, result) -> int:
         return self._inflight_sources.pop(rid)
@@ -568,6 +715,7 @@ class GraphServer:
             dropped += dropped2
         else:
             dropped += sum(len(v) for v in dirty_entries.values())
+        self.cache.note_invalidated(dropped)
 
         # (4) dirtied in-flight queries: residual-push pools RESUME every
         # live lane from Maiter-corrected residuals (clean lanes' corrections
@@ -700,31 +848,79 @@ class GraphServer:
         return refreshed, dropped
 
     def stats(self) -> dict:
+        """The serving stack's ONE stats surface (DESIGN.md §12) — every
+        scattered counter unified behind a documented schema:
+
+          completed / queued / rejected / inflight   request-side totals
+          cache          ResultCache.stats(): size, capacity, hits, misses,
+                         hit_rate, evictions, invalidations
+          graph_version  version served right now
+          graph          {n_nodes, n_edges, streaming} — `streaming` is
+                         StreamingGraph.stats() (delta overlay occupancy
+                         `delta_fill`, rebuilds) or None for static servers
+          updates        count of absorbed update batches
+          last_update    the newest `apply_updates` stats dict (also carries
+                         per-pool `shipped` = engine.last_ship) or None
+          shard_delta    graph.partition.SHARD_DELTA_STATS process counters
+                         (full_reslice / short_circuit overlay re-slices)
+          pools          per-algo: slots, engine_queries, steps, queue
+                         depths/quotas/weights, placement kind, and — when
+                         telemetry is on — `tele` (cumulative named engine
+                         counters, see obs.TELE_FIELDS) + `last_iter`
+                         (newest iteration-log sample) + `shipped`
+          obs            Observability.snapshot(): metrics registry dump
+                         (counters/gauges/histogram p50-p95-p99 summaries)
+                         + span recorder totals; {"enabled": False} when off
+
+        Reading it never issues a device transfer: telemetry values come
+        from the host-side iteration log the pump already harvested."""
+        from repro.graph.partition import SHARD_DELTA_STATS
+
+        pools = {}
+        for name, p in self.pools.items():
+            d = {
+                "slots": p.slots,
+                "engine_queries": p.engine_queries,
+                "steps": p.steps,
+                "queued": sum(len(q) for q in self.queues[name].values()),
+                "queue_quota": self.queue_quota[name],
+                "weight": self.weights[name],
+                "placement": (
+                    p.placement.kind if hasattr(p, "placement") else "single"
+                ),
+                "tenant_queued": {
+                    t: len(q) for t, q in self.queues[name].items()
+                },
+                "tenant_quota": {
+                    t: self.tenant_quota[(name, t)] for t in self.tenants
+                },
+            }
+            if hasattr(p, "engine"):
+                d["shipped"] = dict(p.engine.last_ship)
+            if self.obs.enabled and p.iter_log:
+                last = p.iter_log[-1]
+                d["tele"] = tele_dict(last["tele"])
+                d["last_iter"] = {
+                    "step": last["step"], "gmode": last["gmode"],
+                    "union_fe": last["union_fe"],
+                    "overflow": last["overflow"], "live": last["live"],
+                }
+            pools[name] = d
         return {
             "completed": len(self.completions),
             "queued": self._queued(),
             "rejected": self.rejected,
+            "inflight": len(self._inflight_sources),
             "cache": self.cache.stats(),
             "graph_version": self.graph_version,
-            "updates": len(self.update_log),
-            "pools": {
-                name: {
-                    "slots": p.slots,
-                    "engine_queries": p.engine_queries,
-                    "steps": p.steps,
-                    "queued": sum(len(q) for q in self.queues[name].values()),
-                    "queue_quota": self.queue_quota[name],
-                    "weight": self.weights[name],
-                    "placement": (
-                        p.placement.kind if hasattr(p, "placement") else "single"
-                    ),
-                    "tenant_queued": {
-                        t: len(q) for t, q in self.queues[name].items()
-                    },
-                    "tenant_quota": {
-                        t: self.tenant_quota[(name, t)] for t in self.tenants
-                    },
-                }
-                for name, p in self.pools.items()
+            "graph": {
+                "n_nodes": self.g.n_nodes,
+                "n_edges": self.g.n_edges,
+                "streaming": self.sg.stats() if self.sg is not None else None,
             },
+            "updates": len(self.update_log),
+            "last_update": self.update_log[-1] if self.update_log else None,
+            "shard_delta": dict(SHARD_DELTA_STATS),
+            "pools": pools,
+            "obs": self.obs.snapshot(),
         }

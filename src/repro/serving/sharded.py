@@ -75,6 +75,13 @@ from repro.core.engine import PULL, PUSH, EngineConfig
 from repro.graph import partition
 from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
+from repro.obs import (
+    TELE_COMPACT_DENSE,
+    TELE_COMPACT_HITS,
+    TELE_LEN,
+    TELE_PULL_EDGES,
+    TELE_PUSH_EDGES,
+)
 from repro.serving import batch_engine as B
 
 DATA_AXIS = "data"     # query shards
@@ -125,6 +132,9 @@ def state_specs(st: B.BatchState, mesh=None) -> B.BatchState:
         pseg=tuple(qv for _ in st.pseg),
         pull_dense=None if st.pull_dense is None else P(),
         hot=None if st.hot is None else qv,
+        # cumulative telemetry counters are mesh-global (increments are
+        # psum'd across shards inside the steps), hence replicated
+        tele=None if st.tele is None else P(),
     )
 
 
@@ -172,7 +182,14 @@ def _normalize_scalars(st, comb_gmode_axes):
     fe = jax.lax.psum(st.union_fe, comb_gmode_axes)
     ovf = jax.lax.psum(st.overflow.astype(jnp.int32), comb_gmode_axes) > 0
     gmode = jax.lax.pmax(st.gmode, comb_gmode_axes)
-    return st._replace(union_fe=fe, overflow=ovf, gmode=gmode)
+    st = st._replace(union_fe=fe, overflow=ovf, gmode=gmode)
+    if st.tele is not None:
+        # fused edge-sharded bodies keep tele 'data'-local (a psum over
+        # 'data' inside the while_loop would deadlock: rows exit at
+        # independent trip counts); globalize once here at loop exit.
+        # Within a 'model' group the body already summed, so 'data' only.
+        st = st._replace(tele=jax.lax.psum(st.tele, DATA_AXIS))
+    return st
 
 
 # ---------------------------------------------------------------------------
@@ -205,13 +222,21 @@ def _make_replicated_step(program: ACCProgram, cfg: EngineConfig,
             deg = g.out.row_ptr[1:] - g.out.row_ptr[:-1]
             fe, ovf = _global_union_volume(deg, cfg, new.active, DATA_AXIS)
             new = new._replace(union_fe=fe, overflow=ovf)
+            if st.tele is not None:
+                # the inner step added this shard's lanes' increments; the
+                # carried accumulator is mesh-global (replicated spec), so
+                # globalize the increment the same way as the controller
+                # inputs — unconditional psum, uniform collective schedule
+                inc = jax.lax.psum(new.tele - st.tele, DATA_AXIS)
+                new = new._replace(tele=st.tele + inc)
         return B._policy(program, cfg, n_edges, new)
 
     return step
 
 
 def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
-                            n: int, n_edges: int):
+                            n: int, n_edges: int,
+                            tele_axes=(DATA_AXIS, MODEL_AXIS)):
     """One edge-shard iteration: scan the shard's COO partition (masked by
     the union frontier for push-semantics programs, unmasked for pull-only
     programs), segment-combine locally, monoid-all-reduce across 'model'.
@@ -277,8 +302,10 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
             w = jnp.concatenate([w, dwgt.reshape(-1)])
         valid = (src < n) & (dst < n)     # sentinel pads / neutralized slots
 
+        e_tot = int(src.shape[0])
+        tele_inc = (None if st.tele is None
+                    else jnp.zeros((TELE_LEN,), jnp.int32))
         if masked and cfg.shard_compact:
-            e_tot = int(src.shape[0])
             cap = min(e_tot, max(128, int(
                 math.ceil(e_tot * cfg.shard_compact_frac))))
             union = jnp.any(st.active, axis=-1)              # (n+1,)
@@ -296,9 +323,32 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
                 lambda s: scan_compacted(s, src, dst, w, eact, cap),
                 st,
             )
+            if tele_inc is not None:
+                light = ~(heavy | c_ovf)                  # compacted branch
+                tele_inc = (
+                    tele_inc
+                    .at[TELE_COMPACT_HITS].add(light.astype(jnp.int32))
+                    .at[TELE_COMPACT_DENSE].add(
+                        (~heavy & c_ovf).astype(jnp.int32))
+                    # buffer lanes gathered vs full shard slots scanned
+                    .at[TELE_PUSH_EDGES].add(
+                        jnp.where(light, jnp.int32(cap), jnp.int32(e_tot))))
         else:
             seg = scan_dense(st, src, dst, w, valid)
+            if tele_inc is not None:
+                slot = TELE_PUSH_EDGES if masked else TELE_PULL_EDGES
+                tele_inc = tele_inc.at[slot].add(jnp.int32(e_tot))
         seg = _monoid_all_reduce(comb, seg, MODEL_AXIS)      # cross-shard merge
+        if tele_inc is not None:
+            # each (data, model) shard counted its own slice's work.
+            # Host-stepped bodies sum over BOTH axes (every shard steps
+            # exactly once per call, and the replicated out-spec needs the
+            # mesh-global value); fused-loop bodies sum over 'model' only —
+            # data rows exit the while_loop at independent trip counts, so
+            # a 'data' collective inside the loop would deadlock, and
+            # `_normalize_scalars` globalizes at exit instead.
+            # Unconditional collective (sits outside the cond above).
+            tele_inc = jax.lax.psum(tele_inc, tele_axes)
 
         m_new = program.run_apply(st.m, seg, st.it)
         nxt = program.active(m_new, st.m, st.it)
@@ -306,8 +356,9 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
         nxt = nxt & ~st.done[None, :]
         count = jnp.sum(nxt, axis=0).astype(jnp.int32)
         fe, ovf = B._union_volume_deg(deg, cfg, nxt)
+        tele = None if tele_inc is None else st.tele + tele_inc
         new = B._advance(st, m_new, nxt, count, fe, ovf,
-                         was_mode=was_mode, cfg=cfg)
+                         was_mode=was_mode, cfg=cfg, tele=tele)
         max_it = (program.fixed_iters if program.fixed_iters is not None
                   else cfg.max_iters)
         done = new.done | (new.count == 0) | (new.it >= max_it)
@@ -334,12 +385,19 @@ class ShardedBatchEngine:
     def __init__(self, program: ACCProgram, g: Graph, pack: EllPack,
                  cfg: EngineConfig, mesh, *, placement: str = "replicated",
                  consensus: str = "global",
-                 delta: Optional[EdgeDelta] = None):
+                 delta: Optional[EdgeDelta] = None,
+                 telemetry: bool = False):
         assert placement in ("replicated", "edge_sharded"), placement
         assert consensus in ("global", "local"), consensus
         if placement == "edge_sharded":
             assert not cfg.masked_pull, (
                 "masked pull's per-slice caches assume a replicated pack")
+        assert not (telemetry and consensus == "local"), (
+            "telemetry counters are mesh-global (psum'd increments) — "
+            "consensus='local' promises NO collectives, so the replicated "
+            "accumulator spec cannot hold; run telemetry with "
+            "consensus='global'")
+        self.telemetry = bool(telemetry)
         self.program = program
         self.cfg = cfg
         self.mesh = mesh
@@ -555,11 +613,12 @@ class ShardedBatchEngine:
             st = B.init_batch(self.program,
                               B.GraphDims(self.n, self.n_edges), self.cfg,
                               sources, done=done, check_caps=False,
-                              deg=self.deg)
+                              deg=self.deg, telemetry=self.telemetry)
         else:
             pack = self.pack if self.cfg.masked_pull else None
             st = B.init_batch(self.program, self.g, self.cfg, sources,
-                              done=done, pack=pack, delta=self.delta)
+                              done=done, pack=pack, delta=self.delta,
+                              telemetry=self.telemetry)
         if self._specs is None:
             self._build(st)
         return jax.device_put(st, self._shardings)
@@ -590,8 +649,17 @@ class ShardedBatchEngine:
         self._step_j = jax.jit(compat.shard_map(
             body, mesh=self.mesh, in_specs=(self._specs,) + view_specs,
             out_specs=self._specs))
+        if self.placement == "edge_sharded":
+            # the fused loop needs a 'data'-collective-free body (rows run
+            # independent trip counts) — tele sums over 'model' in-loop and
+            # over 'data' at exit (_normalize_scalars)
+            run_body = _make_edge_sharded_step(
+                self.program, self.cfg, self.n, self.n_edges,
+                tele_axes=(MODEL_AXIS,))
+        else:
+            run_body = body
         self._run_j = jax.jit(compat.shard_map(
-            self._make_run(body), mesh=self.mesh,
+            self._make_run(run_body), mesh=self.mesh,
             in_specs=(self._specs,) + view_specs, out_specs=self._specs))
 
     def _make_run(self, body):
@@ -644,6 +712,7 @@ class ShardedBatchEngine:
             "switches": final.switches,
             "final_count": final.count,
             "mode_trace": final.mode_trace,
+            "tele": final.tele,
         }
         return final.m, stats
 

@@ -1,0 +1,247 @@
+"""Unified telemetry layer (repro.obs, DESIGN.md §12).
+
+Pins the three contracts the observability tentpole rests on:
+
+  * **histogram accuracy** — fixed-bucket interpolated percentiles track
+    `numpy.quantile` to within one bucket's growth factor (the
+    Prometheus-style bound metrics.py documents), and are exact when the
+    owning bucket holds one value;
+  * **span lifecycle** — every emitted span has non-decreasing
+    submit/admit/harvest/complete timestamps, non-negative durations with
+    queue_wait + resident <= total, per-iteration push/pull modes from the
+    real mode-trace machinery, and survives scripts/trace_schema.py;
+  * **zero disabled overhead** — a telemetry-off server runs with
+    `BatchState.tele is None` and issues NO telemetry device->host
+    transfers (every telemetry read goes through `repro.obs.device_fetch`,
+    whose global counter this test pins), and telemetry on/off servers
+    produce bit-identical results.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core import algorithms as alg
+from repro.graph import generators, pack_ell
+from repro.obs import (
+    Histogram,
+    MetricsRegistry,
+    NOOP,
+    TELE_FIELDS,
+    default_latency_buckets,
+    iters_from_trace,
+)
+from repro.serving import GraphServer, default_config
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
+import trace_schema  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(mean=-4.0, sigma=1.5, size=2000)   # latency-shaped
+    h = Histogram("lat", default_latency_buckets())
+    for v in vals:
+        h.observe(float(v))
+    # default latency buckets grow by 1.6x: an interpolated percentile is
+    # within one bucket of the true quantile, i.e. a factor-1.6 band
+    for q in (0.50, 0.95, 0.99):
+        want = float(np.quantile(vals, q))
+        got = h.percentile(q)
+        assert want / 1.6 - 1e-12 <= got <= want * 1.6 + 1e-12, (q, want, got)
+    s = h.summary()
+    assert s["count"] == len(vals)
+    assert s["min"] == pytest.approx(vals.min())
+    assert s["max"] == pytest.approx(vals.max())
+    assert s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_histogram_single_value_and_empty():
+    h = Histogram("x", [1.0, 10.0])
+    assert math.isnan(h.percentile(0.5))
+    for _ in range(5):
+        h.observe(3.0)
+    # one distinct value: every percentile is exactly it (min==max clamp)
+    assert h.percentile(0.0) == h.percentile(0.5) == h.percentile(0.99) == 3.0
+    h.observe(100.0)                      # overflow bucket stays in range
+    assert h.percentile(1.0) == 100.0
+
+
+def test_registry_disabled_is_noop():
+    reg = MetricsRegistry(enabled=False)
+    c, g, h = reg.counter("a"), reg.gauge("b"), reg.histogram("c")
+    assert c is NOOP and g is NOOP and h is NOOP
+    c.inc()
+    g.set(4)
+    h.observe(1.0)
+    assert reg.snapshot() == {}
+    on = MetricsRegistry(enabled=True)
+    assert on.counter("a") is on.counter("a")        # create-or-return
+    on.counter("a").inc(3)
+    assert on.snapshot()["a"] == 3
+
+
+def test_iters_from_trace_bounded_log_gaps():
+    # -1 terminates the mode row; None marks iterations the bounded pool
+    # log did not retain — those records keep the mode but drop counters
+    recs = iters_from_trace(
+        np.asarray([0, 1, 0, -1], np.int8), [5, None, 7], [None, 11])
+    assert [r["mode"] for r in recs] == ["push", "pull", "push"]
+    assert recs[0]["frontier"] == 5 and "union_fe" not in recs[0]
+    assert "frontier" not in recs[1] and recs[1]["union_fe"] == 11
+    assert recs[2] == {"mode": "push", "frontier": 7}
+
+
+# ---------------------------------------------------------------------------
+# serving-stack integration
+# ---------------------------------------------------------------------------
+
+
+def _graph():
+    g = generators.rmat(7, 4, seed=3, directed=True)
+    return g, pack_ell(g.inc)
+
+
+def _server(g, pack, **kw):
+    # pack=None + delta_cap builds the STREAMING server (apply_updates works)
+    return GraphServer(
+        g, pack, {"bfs": alg.bfs(0), "ppr_delta": alg.ppr_delta(0)},
+        slots=4, cfg=default_config(g),
+        result_fields={"ppr_delta": "rank"}, **kw)
+
+
+def test_span_lifecycle_and_trace_schema(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    g, pack = _graph()
+    srv = _server(g, pack, telemetry=True, trace=path)
+    for s in (0, 9, 33, 70):
+        srv.submit("bfs", s)
+        srv.submit("ppr_delta", s)
+    srv.drain()
+    srv.submit("bfs", 9)                      # repeat -> cache-hit span
+    comps = srv.drain()
+    srv.obs.close()
+
+    spans = list(srv.obs.tracer.finished)
+    assert len(spans) == len(comps) == 9
+    assert srv.obs.tracer.open_count() == 0
+    eng = [sp for sp in spans if not sp.from_cache]
+    hits = [sp for sp in spans if sp.from_cache]
+    assert len(hits) == 1 and hits[0].iterations == 0 and not hits[0].iters
+    for sp in spans:
+        ev = sp.events
+        seq = [ev[k] for k in ("submit", "admit", "harvest", "complete")
+               if k in ev]
+        assert all(b >= a for a, b in zip(seq, seq[1:])), ev
+        d = sp.durations()
+        assert all(v >= 0 for v in d.values()), d
+        assert d["queue_wait_s"] + d["resident_s"] <= d["total_s"] + 1e-6, d
+    for sp in eng:
+        assert sp.iterations > 0 and sp.iters
+        assert len(sp.iters) <= sp.iterations
+        for it in sp.iters:
+            assert it["mode"] in ("push", "pull")
+            assert it.get("frontier", 0) >= 0
+            assert it.get("union_fe", 0) >= 0
+
+    n, errs = trace_schema.check(path)        # the shipped validator agrees
+    assert n == 9 and not errs, errs
+    with open(path) as f:
+        recs = [json.loads(line) for line in f]
+    assert {r["trace_id"] for r in recs} == {sp.trace_id for sp in spans}
+
+    snap = srv.stats()["obs"]
+    assert snap["enabled"] and snap["spans"]["emitted"] == 9
+    lat = snap["metrics"]["bfs.latency_total_s"]
+    assert lat["count"] == 4 and lat["p50"] <= lat["p99"]
+
+
+def test_disabled_path_is_transfer_free_and_bit_neutral():
+    g, pack = _graph()
+    sources = [0, 5, 17, 40, 99]
+
+    off = _server(g, pack, telemetry=False)
+    for name, pool in off.pools.items():
+        assert pool.state.tele is None, name  # no extra loop state
+    before = obs.TRANSFER_COUNT
+    for s in sources:
+        off.submit("bfs", s)
+        off.submit("ppr_delta", s)
+    comps_off = off.drain()
+    assert obs.TRANSFER_COUNT == before, (
+        "telemetry-disabled serving issued device transfers through the "
+        "telemetry chokepoint")
+    assert off.stats()["obs"] == {"enabled": False}
+    assert "tele" not in off.stats()["pools"]["bfs"]
+
+    on = _server(g, pack, telemetry=True)
+    for s in sources:
+        on.submit("bfs", s)
+        on.submit("ppr_delta", s)
+    comps_on = on.drain()
+    assert obs.TRANSFER_COUNT > before        # enabled path does fetch
+
+    by_key = {(c.algo, c.source): c.result for c in comps_off}
+    for c in comps_on:                        # telemetry is bit-neutral
+        assert np.array_equal(c.result, by_key[(c.algo, c.source)]), (
+            c.algo, c.source)
+        assert not c.from_cache
+
+    tele = on.stats()["pools"]["bfs"]["tele"]
+    assert set(tele) == set(TELE_FIELDS)
+    assert all(v >= 0 for v in tele.values())
+    assert tele["push_edges_scanned"] + tele["pull_edges_scanned"] > 0
+
+
+def test_unified_stats_schema():
+    g, _ = _graph()
+    srv = _server(g, None, telemetry=True, delta_cap=16)
+    srv.submit("bfs", 3)
+    srv.drain()
+    srv.submit("bfs", 3)                      # hit
+    srv.drain()
+    srv.apply_updates(inserts=[(0, 77)])
+    st = srv.stats()
+    for k in ("completed", "inflight", "queued", "rejected", "cache",
+              "graph", "graph_version", "updates", "last_update",
+              "shard_delta", "pools", "obs"):
+        assert k in st, k
+    assert st["graph"]["n_nodes"] == g.n_nodes
+    cache = st["cache"]
+    for k in ("hits", "misses", "evictions", "invalidations", "hit_rate"):
+        assert k in cache, k
+    assert cache["hits"] >= 1
+    pool = st["pools"]["bfs"]
+    for k in ("slots", "engine_queries", "steps", "tele", "last_iter"):
+        assert k in pool, k
+    assert st["obs"]["enabled"] is True
+    # reading stats() must not touch the device through the telemetry path
+    before = obs.TRANSFER_COUNT
+    srv.stats()
+    assert obs.TRANSFER_COUNT == before
+
+
+def test_cache_invalidation_counter_on_update():
+    g, _ = _graph()
+    srv = _server(g, None, telemetry=True, delta_cap=16)
+    srv.submit("bfs", 0)
+    srv.submit("bfs", 1)
+    srv.drain()
+    inv0 = srv.cache.stats()["invalidations"]
+    # refresh="drop" discards every cached entry under the old version that
+    # the affected-region test cannot retain — those are staleness losses
+    srv.apply_updates(inserts=[(0, 1)], refresh="drop")
+    st = srv.stats()["last_update"]
+    assert srv.cache.stats()["invalidations"] == inv0 + st["cache_dropped"]
