@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-schema
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs smoke-slo bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-slo bench-schema flake-hunt
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -43,6 +43,24 @@ smoke-obs:
 		--slots 4 --scale 8 --trace /tmp/repro_trace_smoke.jsonl
 	python scripts/trace_schema.py /tmp/repro_trace_smoke.jsonl
 
+# SLO smoke: seeded bursty (MMPP) open-loop replay with per-query deadlines
+# through a sharded server on a forced 4-device host mesh; asserts goodput
+# > 0 with zero crashed lanes, then replays with --trace and validates the
+# emitted spans (drop/degrade/preempt flags included) against the schema
+smoke-slo:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		python -m repro.launch.slo_replay --scale 8 --rate 40 \
+		--duration 3 --slots 4 --mesh 4x1 --update-every 1 \
+		--assert-goodput
+	PYTHONPATH=src python -m repro.launch.slo_replay --scale 8 --rate 40 \
+		--duration 2 --slots 4 --cohorts 2 --assert-goodput \
+		--trace /tmp/repro_trace_slo_smoke.jsonl
+	python scripts/trace_schema.py /tmp/repro_trace_slo_smoke.jsonl
+
+# thread-sweep flake hunter for the parallel-edge residual property test
+flake-hunt:
+	bash scripts/flake_hunt.sh
+
 # full serving throughput benchmark (writes BENCH_serving.json; ~2 min on CPU)
 bench-serving:
 	PYTHONPATH=src python benchmarks/serving_bench.py
@@ -69,6 +87,12 @@ bench-streaming:
 # per algo x placement (writes BENCH_obs.json)
 bench-obs:
 	PYTHONPATH=src python benchmarks/obs_bench.py
+
+# open-loop SLO benchmark: arrival-process x policy grid + cohort-isolation
+# experiment (writes BENCH_slo.json; the isolation cell builds a scale-15
+# graph — several minutes on CPU)
+bench-slo:
+	PYTHONPATH=src python benchmarks/slo_bench.py
 
 # lint the BENCH_*.json records (also part of `make check`)
 bench-schema:

@@ -9,7 +9,13 @@ bit-rotted:
   * a "graph" object with integer n_nodes / n_edges;
   * every "pass_*" key is a bool (the gate flags benches exit on);
   * every number in the tree is finite (no NaN/inf smuggled through);
-  * every "*_seconds" / "*_qps" / "speedup" value is positive.
+  * every "*_seconds" / "*_qps" / "speedup" value is positive;
+  * every "goodput" value (open-loop fraction of offered queries answered
+    in time) lies in [0, 1];
+  * records with "bench": "slo_open_loop" (benchmarks/slo_bench.py)
+    additionally need >= 2 arrival processes under "arrivals", ordered
+    p50 <= p95 <= p99 in every percentile block, and an "isolation"
+    section comparing pooled vs cohort serving.
 
 Usage: python scripts/bench_schema.py [paths...]   (default: BENCH_*.json)
 """
@@ -40,6 +46,39 @@ def _walk(node, path, errs):
         if (key.endswith("_seconds") or key.endswith("_qps")
                 or key == "speedup") and node <= 0:
             errs.append(f"{path}: {key} must be positive, got {node!r}")
+        if key == "goodput" and not (0.0 <= node <= 1.0):
+            errs.append(f"{path}: goodput must be in [0, 1], got {node!r}")
+
+
+def _walk_percentiles(node, path, errs):
+    """Every block carrying p50/p95/p99_seconds must be ordered."""
+    if isinstance(node, dict):
+        if all(f"p{q}_seconds" in node for q in (50, 95, 99)):
+            p50, p95, p99 = (node[f"p{q}_seconds"] for q in (50, 95, 99))
+            if not (p50 <= p95 + 1e-12 and p95 <= p99 + 1e-12):
+                errs.append(f"{path}: percentiles regress: "
+                            f"p50={p50!r} p95={p95!r} p99={p99!r}")
+        for k, v in node.items():
+            _walk_percentiles(v, f"{path}.{k}", errs)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _walk_percentiles(v, f"{path}[{i}]", errs)
+
+
+def _check_slo_record(rec: dict, path: str, errs: list) -> None:
+    """Extra contract for the open-loop SLO bench (DESIGN.md §13)."""
+    arrivals = rec.get("arrivals")
+    if not isinstance(arrivals, dict) or len(arrivals) < 2:
+        errs.append(f"{path}: slo_open_loop needs an 'arrivals' object "
+                    f"covering >= 2 arrival processes")
+    iso = rec.get("isolation")
+    if not isinstance(iso, dict):
+        errs.append(f"{path}: slo_open_loop needs an 'isolation' section")
+    else:
+        for k in ("pooled", "cohorts"):
+            if not isinstance(iso.get(k), dict):
+                errs.append(f"{path}: isolation.{k} must be an object")
+    _walk_percentiles(rec, path, errs)
 
 
 def check(path: str) -> list:
@@ -59,6 +98,8 @@ def check(path: str) -> list:
             if not isinstance(graph.get(k), int) or graph.get(k) <= 0:
                 errs.append(f"{path}: graph.{k} must be a positive int")
     _walk(rec, path, errs)
+    if rec.get("bench") == "slo_open_loop":
+        _check_slo_record(rec, path, errs)
     return errs
 
 

@@ -104,7 +104,21 @@ python -m repro.launch.serve_graph --requests 8 --slots 4 --scale 8 \
     --trace /tmp/repro_trace_check.jsonl
 python scripts/trace_schema.py /tmp/repro_trace_check.jsonl
 
-echo "== bench schema (BENCH_*.json incl. BENCH_ppr.json) =="
+echo "== slo smoke: bursty open-loop replay + deadline policy (4-dev mesh) =="
+# seeded MMPP arrivals with per-query deadlines replayed open-loop against
+# a sharded server on the forced host mesh; --assert-goodput fails the
+# check unless goodput > 0 with zero crashed lanes
+XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m repro.launch.slo_replay --scale 8 --rate 40 --duration 3 \
+    --slots 4 --mesh 4x1 --update-every 1 --assert-goodput
+# traced replay through consensus cohorts: every span (including dropped /
+# degraded / preempted outcomes and the slo flag block) must validate
+python -m repro.launch.slo_replay --scale 8 --rate 40 --duration 2 \
+    --slots 4 --cohorts 2 --assert-goodput \
+    --trace /tmp/repro_trace_slo_check.jsonl
+python scripts/trace_schema.py /tmp/repro_trace_slo_check.jsonl
+
+echo "== bench schema (BENCH_*.json incl. BENCH_slo.json) =="
 python scripts/bench_schema.py
 
 echo "== check OK =="

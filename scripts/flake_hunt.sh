@@ -1,0 +1,53 @@
+#!/usr/bin/env bash
+# Flake hunter for the parallel-edge-multiplicity residual regression.
+#
+#   scripts/flake_hunt.sh [N_PER_CONFIG]      # default 10 runs per config
+#
+# tests/test_ppr_delta.py::test_residual_correct_keeps_parallel_edge_multiplicity
+# has flaked under load: the Maiter correction's floating-point
+# reassociation noise depends on how XLA's CPU thread pool splits the
+# reduction, which depends on intra-op parallelism. This script replays the
+# test across a sweep of thread counts (the axis the flake correlates with)
+# and reports per-config pass/fail tallies. On a failing run the
+# instrumented test dumps full rank/resid/deg state to
+# /tmp/repro_flake_residual_dump.npz (preserved per-config here as
+# /tmp/repro_flake_dump_t<threads>_r<run>.npz) for offline diffing.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+RUNS="${1:-10}"
+TEST="tests/test_ppr_delta.py::test_residual_correct_keeps_parallel_edge_multiplicity"
+DUMP=/tmp/repro_flake_residual_dump.npz
+
+overall=0
+for threads in 1 2 4 8 0; do
+    # 0 = XLA's own default (no override) — the baseline CI environment
+    if [ "$threads" = 0 ]; then
+        flags=""
+        label="default"
+    else
+        flags="--xla_cpu_multi_thread_eigen=true intra_op_parallelism_threads=$threads"
+        label="$threads"
+    fi
+    fails=0
+    for run in $(seq 1 "$RUNS"); do
+        rm -f "$DUMP"
+        if ! XLA_FLAGS="$flags" python -m pytest "$TEST" -x -q \
+                >/tmp/repro_flake_hunt_last.log 2>&1; then
+            fails=$((fails + 1))
+            overall=1
+            [ -f "$DUMP" ] && cp "$DUMP" \
+                "/tmp/repro_flake_dump_t${label}_r${run}.npz"
+            echo "[flake_hunt] threads=$label run=$run FAILED" \
+                 "(log: /tmp/repro_flake_hunt_last.log)"
+            tail -5 /tmp/repro_flake_hunt_last.log | sed 's/^/    /'
+        fi
+    done
+    echo "[flake_hunt] threads=$label: $((RUNS - fails))/$RUNS passed"
+done
+
+if [ "$overall" = 0 ]; then
+    echo "[flake_hunt] no flake reproduced across thread sweep"
+fi
+exit "$overall"

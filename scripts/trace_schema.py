@@ -16,7 +16,13 @@ documents:
     optional non-negative `frontier` / `union_fe` counters; cache hits have
     iterations == 0 and no iters; engine spans may have len(iters) <=
     iterations (bounded mode trace / iteration log), never more than the
-    trace-cap, and at least one entry.
+    trace-cap, and at least one entry;
+  * slo (optional, DESIGN.md §13): an object with bool
+    deadline_missed/dropped/degraded/preempted flags and a null-or-finite
+    deadline_s. Policy-DROPPED spans carry no result: like cache hits they
+    have iterations == 0 and empty iters, and (when shed straight from the
+    queue) may lack an `admit` event; a preempt-then-evicted drop keeps its
+    `admit` and `preempt` events.
 
 Usage: python scripts/trace_schema.py TRACE.jsonl [more.jsonl...]
 """
@@ -31,7 +37,26 @@ REQUIRED = ("trace_id", "rid", "algo", "source", "tenant", "graph_version",
             "from_cache", "events", "durations", "iterations", "iters")
 LIFECYCLE = ("submit", "admit", "harvest", "complete")
 MODES = ("push", "pull")
+SLO_FLAGS = ("deadline_missed", "dropped", "degraded", "preempted")
 EPS = 1e-6
+
+
+def _check_slo(slo, where: str, errs: list) -> bool:
+    """Validate an optional span `slo` object; returns its `dropped` flag."""
+    if not isinstance(slo, dict):
+        errs.append(f"{where}: slo must be an object, got {type(slo).__name__}")
+        return False
+    for k in SLO_FLAGS:
+        if not isinstance(slo.get(k), bool):
+            errs.append(f"{where}: slo.{k} must be a bool, got {slo.get(k)!r}")
+    ds = slo.get("deadline_s")
+    if ds is not None and not (isinstance(ds, (int, float))
+                               and math.isfinite(ds)):
+        errs.append(f"{where}: slo.deadline_s must be null or finite, "
+                    f"got {ds!r}")
+    if slo.get("dropped") and not slo.get("deadline_missed"):
+        errs.append(f"{where}: dropped span must also count deadline_missed")
+    return bool(slo.get("dropped"))
 
 
 def check_span(rec: dict, where: str, errs: list) -> None:
@@ -63,9 +88,15 @@ def check_span(rec: dict, where: str, errs: list) -> None:
     if not isinstance(n_it, int) or n_it < 0:
         errs.append(f"{where}: iterations must be a non-negative int")
         return
+    dropped = "slo" in rec and _check_slo(rec["slo"], where, errs)
     if rec["from_cache"]:
         if n_it != 0 or iters:
             errs.append(f"{where}: cache-hit span with engine iterations")
+        return
+    if dropped:
+        # policy-shed: no result, no residency contract — may never admit
+        if n_it != 0 or iters:
+            errs.append(f"{where}: dropped span with engine iterations")
         return
     if "admit" not in ev:
         errs.append(f"{where}: engine-served span missing 'admit' event")

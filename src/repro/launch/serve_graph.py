@@ -25,7 +25,13 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.graph import generators, pack_ell
-from repro.serving import GraphServer, Placement, default_config, make_serving_mesh
+from repro.serving import (
+    GraphServer,
+    Placement,
+    SLOPolicy,
+    default_config,
+    make_serving_mesh,
+)
 
 
 def build_graph(kind: str, scale: int, edge_factor: int, seed: int):
@@ -68,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--telemetry", action="store_true",
                     help="enable the unified telemetry layer (engine "
                          "counters, lifecycle metrics, stats() obs section)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="attach this latency SLO to every query and drop "
+                         "already-expired queued queries (DESIGN.md §13); "
+                         "0 = no deadlines")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -100,6 +110,7 @@ def main(argv=None):
         print(f"[serve_graph] sharded pools: mesh {d}x{s}, "
               f"placement={args.placement}")
 
+    deadline_ms = args.deadline_ms if args.deadline_ms > 0 else None
     srv = GraphServer(
         g, pack, programs, slots=args.slots, cfg=default_config(g),
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
@@ -107,6 +118,7 @@ def main(argv=None):
         mesh=mesh, placements=placements,
         telemetry=args.telemetry or bool(args.trace),
         trace=args.trace or None,
+        slo=SLOPolicy() if deadline_ms is not None else None,
     )
 
     rng = np.random.default_rng(args.seed)
@@ -120,7 +132,7 @@ def main(argv=None):
             src = int(rng.choice(hot))
         else:
             src = int(rng.integers(0, n))
-        rid = srv.submit(algo, src)
+        rid = srv.submit(algo, src, deadline_ms=deadline_ms)
         if rid is None:                 # queue full: serve a round, retry
             backpressured += 1
             srv.pump()
@@ -134,6 +146,10 @@ def main(argv=None):
     assert len(comps) == args.requests, (len(comps), args.requests)
     print(f"[serve_graph] {len(comps)} queries in {dt:.2f}s "
           f"({len(comps) / dt:.1f} q/s), backpressure events: {backpressured}")
+    if deadline_ms is not None:
+        s = stats["slo"]
+        print(f"[serve_graph] slo: deadline={deadline_ms:.0f}ms, "
+              f"{s['deadline_missed']} missed, {s['dropped']} dropped")
     cache = stats["cache"]
     print(f"[serve_graph] cache: {cache['hits']} hits / {cache['misses']} misses "
           f"(hit rate {cache['hit_rate']:.0%})")
@@ -159,7 +175,8 @@ def main(argv=None):
         print(f"[serve_graph] telemetry: {spans['emitted']} spans emitted"
               + (f" -> {args.trace}" if args.trace else ""))
     for c in comps[:3]:
-        head = np.array2string(c.result[:4], precision=3)
+        head = ("DROPPED" if c.result is None
+                else np.array2string(c.result[:4], precision=3))
         print(f"  rid {c.rid} {c.algo}(src={c.source}) iters={c.iterations} "
               f"cache={c.from_cache} result[:4]={head}")
     return 0

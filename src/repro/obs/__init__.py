@@ -74,6 +74,13 @@ TELE_FIELDS = (
 )
 
 
+#: the serving stack's SLO outcome counters (DESIGN.md §13) — the scheduler
+#: keeps an always-on host dict under these names (`GraphServer.slo_counts`,
+#: surfaced at stats()["slo"]) and mirrors each into a `slo.<name>` registry
+#: counter when telemetry is enabled
+SLO_FIELDS = ("deadline_missed", "dropped", "degraded", "preempted")
+
+
 def tele_dict(tele) -> dict:
     """Name a (TELE_LEN,) accumulator vector (host ints)."""
     if tele is None:
@@ -141,6 +148,7 @@ __all__ = [
     "default_count_buckets",
     "TELE_LEN",
     "TELE_FIELDS",
+    "SLO_FIELDS",
     "TELE_PUSH_EDGES",
     "TELE_PULL_EDGES",
     "TELE_COMPACT_HITS",

@@ -61,6 +61,10 @@ class Span:
     events: Dict[str, float] = dataclasses.field(default_factory=dict)
     iterations: int = 0
     iters: List[dict] = dataclasses.field(default_factory=list)
+    #: SLO outcome (DESIGN.md §13), present only for requests that carried a
+    #: deadline or were touched by policy: {"deadline_s": float|None,
+    #: "deadline_missed"/"dropped"/"degraded"/"preempted": bool}
+    slo: Optional[dict] = None
 
     def durations(self) -> dict:
         ev = self.events
@@ -73,7 +77,7 @@ class Span:
                 "total_s": total}
 
     def to_json(self) -> dict:
-        return {
+        rec = {
             "trace_id": self.trace_id,
             "rid": self.rid,
             "algo": self.algo,
@@ -87,6 +91,9 @@ class Span:
             "iterations": self.iterations,
             "iters": self.iters,
         }
+        if self.slo is not None:   # absent pre-SLO field stays absent
+            rec["slo"] = self.slo
+        return rec
 
 
 class TraceRecorder:
@@ -142,7 +149,8 @@ class TraceRecorder:
 
     def complete(self, rid: int, *, from_cache: bool = False,
                  iterations: int = 0, iters: Optional[List[dict]] = None,
-                 graph_version: Optional[int] = None) -> Optional[Span]:
+                 graph_version: Optional[int] = None,
+                 slo: Optional[dict] = None) -> Optional[Span]:
         if not self.enabled:
             return None
         span = self._open.pop(rid, None)
@@ -154,6 +162,8 @@ class TraceRecorder:
             span.iters = iters
         if graph_version is not None:
             span.graph_version = int(graph_version)
+        if slo is not None:
+            span.slo = slo
         span.events["complete"] = self.now()
         self.finished.append(span)
         if self._file is not None:

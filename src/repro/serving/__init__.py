@@ -12,6 +12,9 @@ The layer between the single-query ACC engine and serving traffic:
                      mesh: query-sharded replicas or 1-D edge partitions,
                      with a psum'd global consensus controller (DESIGN.md §9)
   placement.py    -- pool placement layer: sharded pools behind GraphServer
+  slo.py          -- deadline-aware policy: admission drop, degraded shadow
+                     pools, lane preemption/resume (DESIGN.md §13; the load
+                     harness lives in `repro.slo`)
 
 Entry points: `GraphServer` for request streams (pass `mesh`/`placements`
 for sharded pools), `run_batch` / `run_sharded` for one fixed batch,
@@ -36,6 +39,7 @@ from repro.serving.scheduler import (  # noqa: F401
     Request,
     default_config,
 )
+from repro.serving.slo import SLOPolicy, degraded_variant  # noqa: F401
 from repro.serving.placement import (  # noqa: F401
     Placement,
     ShardedAlgoPool,
@@ -69,4 +73,6 @@ __all__ = [
     "QueueFull",
     "Request",
     "default_config",
+    "SLOPolicy",
+    "degraded_variant",
 ]

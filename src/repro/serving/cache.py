@@ -93,6 +93,14 @@ class ResultCache:
             self._entries.popitem(last=False)
             self.evictions += 1
 
+    def pop(self, key: Hashable) -> Optional[Any]:
+        """Remove and return an entry WITHOUT touching hit/miss/invalidation
+        accounting. This is for internal scheduler bookkeeping traffic —
+        e.g. reclaiming a preempted query's parked partial state at
+        re-admission (DESIGN.md §13) — which is not request-serving activity
+        and must not skew the cache's observable hit rate."""
+        return self._entries.pop(key, None)
+
     def invalidate(self, key: Hashable) -> bool:
         hit = self._entries.pop(key, None) is not None
         if hit:

@@ -54,13 +54,30 @@ batch, swaps the overlaid views into every pool (traced args — no
 recompile), selectively invalidates the LRU by the reverse-reachability
 test (optionally refreshing dirty monotone entries incrementally), and
 restarts dirtied in-flight lanes on the new graph (DESIGN.md §8).
+
+SLO serving (DESIGN.md §13): `submit(deadline_ms=...)` attaches a per-query
+deadline that is accounted end-to-end (missed deadlines are counted and
+flagged on completions/spans even without a policy); a `slo=SLOPolicy(...)`
+additionally drops already-hopeless queued queries at admission, routes
+overflow residual-push queries to a loosened-tolerance degraded shadow pool
+under queue pressure, and preempts long-resident lanes — parking their full
+metadata columns in the result cache and resuming the fixpoint later via
+`reseed_from_residuals`, so preempted work is never thrown away.
+
+Consensus cohorts (`cohorts={'algo': k}`): an algorithm's slot budget is
+split across k independent leaf pools sharing ONE compiled step. Each
+cohort takes its own push/pull consensus vote, so a single heavy query
+holding consensus in pull mode drags only its own (narrower, cheaper)
+cohort — the tail-latency isolation fix the ROADMAP demanded, demonstrated
+in BENCH_slo.json. (The sharded analogue is `Placement(consensus='local')`.)
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +89,7 @@ from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 from repro.obs import (
     Observability,
+    SLO_FIELDS,
     TELE_LEN,
     default_count_buckets,
     default_latency_buckets,
@@ -86,6 +104,7 @@ from repro.serving.cache import (
     make_key,
     served_result,
 )
+from repro.serving.slo import SLOPolicy, degraded_variant
 
 
 class QueueFull(Exception):
@@ -98,6 +117,9 @@ class Request:
     algo: str
     source: int
     tenant: str = "default"
+    #: absolute deadline on the server's monotonic clock, or None — set by
+    #: `submit(deadline_ms=...)` (DESIGN.md §13)
+    deadline_t: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +127,7 @@ class Completion:
     rid: int
     algo: str
     source: int
-    result: np.ndarray          # (n,) primary metadata field
+    result: Optional[np.ndarray]  # (n,) primary field; None when dropped
     iterations: int
     from_cache: bool
     #: graph version the result is valid for (the version at completion —
@@ -113,6 +135,15 @@ class Completion:
     #: lane spanning an update is bitwise valid for both end versions).
     graph_version: int = 0
     tenant: str = "default"
+    # -- SLO outcome (DESIGN.md §13) ------------------------------------
+    #: finished (or was dropped) after its deadline passed
+    deadline_missed: bool = False
+    #: shed by policy without a result (`result is None`)
+    dropped: bool = False
+    #: served from the loosened-tolerance degraded shadow pool
+    degraded: bool = False
+    #: was preempted at least once before completing
+    preempted: bool = False
 
 
 def default_config(g: Graph, max_iters: int = 4096) -> EngineConfig:
@@ -166,6 +197,17 @@ class _LanePool:
         #: pool step count at each lane's (re)admission — the lane's
         #: iteration i ran during pool step `lane_admit_step[lane] + 1 + i`
         self.lane_admit_step: List[int] = [0] * self.slots
+        #: host wall clock (time.monotonic) at each lane's (re)admission —
+        #: the scheduler's residency measure for SLO decisions; always kept
+        #: (cheap host floats), works with telemetry off
+        self.lane_admit_t: List[float] = [0.0] * self.slots
+        #: iterations a lane had ALREADY run when (re)admitted — 0 normally,
+        #: the saved iteration count for a preempt-resumed lane, so span
+        #: iteration logs stay aligned (`GraphServer._complete_span`)
+        self.lane_it_base: List[int] = [0] * self.slots
+        #: EWMA of harvested lanes' resident seconds — the policy's
+        #: service-time estimate for hopeless-drop / preemption triggers
+        self.ewma_resident_s: Optional[float] = None
 
     def log_iter(self) -> dict:
         """Record one executed pool iteration (call right after `step()`):
@@ -199,6 +241,8 @@ class _LanePool:
         )
         self.lane_rid[lane] = rid
         self.lane_admit_step[lane] = self.steps
+        self.lane_admit_t[lane] = time.monotonic()
+        self.lane_it_base[lane] = 0
         self.engine_queries += 1
 
     def readmit(self, lane: int, source: int) -> None:
@@ -211,6 +255,78 @@ class _LanePool:
             self._admit_graph(), self._admit_delta(), self.live_deg,
         )
         self.lane_admit_step[lane] = self.steps
+        self.lane_admit_t[lane] = time.monotonic()
+        self.lane_it_base[lane] = 0
+        self.engine_queries += 1
+
+    def observe_resident(self, resident_s: float) -> None:
+        """Fold one harvested lane's residency into the pool's EWMA
+        service-time estimate (host floats only)."""
+        prev = self.ewma_resident_s
+        self.ewma_resident_s = (
+            resident_s if prev is None else 0.8 * prev + 0.2 * resident_s)
+
+    def preempt(self, lane: int) -> dict:
+        """Evict a LIVE lane mid-run, returning its full metadata columns,
+        executed iteration count, and mode-trace row (host numpy) so the
+        scheduler can park the partial state and `admit_resume` it later.
+
+        Only meaningful for residual-push programs, whose invariant holds at
+        every iteration: the settled (rank, resid) mass is preserved, so the
+        evicted query RESUMES its fixpoint instead of restarting (DESIGN.md
+        §13). The lane itself is returned to the free pool (done, inactive,
+        empty frontier) and the pool's consensus inputs are recomputed
+        without the victim's frontier."""
+        assert self.lane_rid[lane] is not None
+        st = self.state
+        saved = {
+            "planes": {k: np.asarray(st.m[k][:, lane]) for k in st.m},
+            "it": int(st.it[lane]),
+            "trace": np.asarray(st.mode_trace[lane]).copy(),
+        }
+        active = st.active.at[:, lane].set(False)
+        st = st._replace(
+            active=active,
+            done=st.done.at[lane].set(True),
+            count=st.count.at[lane].set(0),
+        )
+        if st.hot is not None:
+            st = st._replace(hot=st.hot.at[:, lane].set(False))
+        union_fe, overflow = B._union_volume(self.g.out, self.cfg, active)
+        st = st._replace(union_fe=union_fe, overflow=overflow)
+        st = st._replace(gmode=B._consensus_mode(
+            self.program, self.cfg, self.g.n_edges, st))
+        self.state = self._place_state(st)
+        self.lane_rid[lane] = None
+        return saved
+
+    def admit_resume(self, lane: int, rid: int, saved: dict) -> None:
+        """Re-admit a preempted query into a free lane from its saved
+        partial state: write the metadata columns back, restore the
+        iteration count and mode trace, and re-derive the frontier from the
+        FULL residual field via the shared `reseed_from_residuals` path —
+        the same contract the streaming resume uses. Other live lanes'
+        recomputed frontiers equal their current ones (the active set of a
+        residual program is a pure function of the metadata), so this
+        perturbs nobody else."""
+        from repro.streaming.incremental import reseed_from_residuals
+
+        assert self.lane_rid[lane] is None
+        st = self.state
+        m = {k: st.m[k].at[:, lane].set(jnp.asarray(saved["planes"][k]))
+             for k in st.m}
+        st = st._replace(
+            m=m,
+            done=st.done.at[lane].set(False),
+            it=st.it.at[lane].set(saved["it"]),
+            mode_trace=st.mode_trace.at[lane].set(jnp.asarray(saved["trace"])),
+        )
+        st = reseed_from_residuals(self.program, self.cfg, self.g, st, st.m)
+        self.state = self._place_state(st)
+        self.lane_rid[lane] = rid
+        self.lane_admit_step[lane] = self.steps
+        self.lane_admit_t[lane] = time.monotonic()
+        self.lane_it_base[lane] = int(saved["it"])
         self.engine_queries += 1
 
     def _refresh_live_deg(self) -> None:
@@ -421,6 +537,9 @@ class GraphServer:
         telemetry: bool = False,
         trace=None,
         obs: Optional[Observability] = None,
+        cohorts: Optional[Dict[str, int]] = None,
+        slo: Optional[SLOPolicy] = None,
+        cohort_affinity: Optional[Dict[str, Sequence[int]]] = None,
     ):
         cfg = cfg or default_config(g)
         self.cfg = cfg
@@ -447,24 +566,76 @@ class GraphServer:
         assert not placements or mesh is not None, (
             "placements require a serving mesh "
             "(serving.placement.make_serving_mesh)")
-        self.pools: Dict[str, AlgoPool] = {}
         result_fields = result_fields or {}
+        # consensus cohorts (DESIGN.md §13): an algorithm's slot budget
+        # splits across k leaf pools with INDEPENDENT push/pull consensus,
+        # sharing one compiled step (identical shapes) — a heavy pull-mode
+        # query drags only its own narrow cohort, not every lane
+        self.cohorts = {
+            name: int((cohorts or {}).get(name, 1)) for name in programs}
+        self.pool_groups: Dict[str, List[AlgoPool]] = {}
         for name, prog in programs.items():
             s = slots[name] if isinstance(slots, dict) else slots
+            k = self.cohorts[name]
+            assert k >= 1, (name, k)
             if name in placements:
                 from repro.serving.placement import ShardedAlgoPool
 
-                self.pools[name] = ShardedAlgoPool(
+                assert k == 1, (
+                    "cohorts split a single-device pool; sharded pools "
+                    "isolate via Placement(consensus='local') instead")
+                leaves = [ShardedAlgoPool(
                     name, prog, g, pack, cfg, s, mesh, placements[name],
                     result_field=result_fields.get(name),
                     delta=delta, telemetry=telemetry,
-                )
+                )]
             else:
-                self.pools[name] = AlgoPool(
-                    name, prog, g, pack, cfg, s,
+                assert s % k == 0, (
+                    f"slots={s} for {name!r} must divide into {k} cohorts")
+                leaves = []
+                for i in range(k):
+                    leaf = AlgoPool(
+                        name if k == 1 else f"{name}#c{i}", prog, g, pack,
+                        cfg, s // k,
+                        result_field=result_fields.get(name),
+                        delta=delta, telemetry=telemetry,
+                    )
+                    if i:   # same shapes + program -> share the executables
+                        leaf._step = leaves[0]._step
+                        leaf._admit = leaves[0]._admit
+                    leaves.append(leaf)
+            self.pool_groups[name] = leaves
+        #: primary leaf per algorithm — the stable lookup surface
+        #: (cache_params, program, result_field are identical across a
+        #: group); cohorted groups' full lane sets live in `pool_groups`
+        self.pools: Dict[str, AlgoPool] = {
+            name: grp[0] for name, grp in self.pool_groups.items()}
+        # SLO policy state (DESIGN.md §13)
+        self.slo = slo
+        self.degraded_pools: Dict[str, AlgoPool] = {}
+        if slo is not None:
+            for name in slo.degrade_algos:
+                assert name in programs, name
+                dprog = degraded_variant(programs[name], slo.degrade_factor)
+                dp = AlgoPool(
+                    f"{name}@degraded", dprog, g, pack, cfg,
+                    slo.degrade_slots,
                     result_field=result_fields.get(name),
                     delta=delta, telemetry=telemetry,
                 )
+                # degraded results are NEVER cached (tagged pool, and
+                # _harvest_pool skips the put) — the bit-exact key must not
+                # serve a loosened-tolerance answer
+                dp.cache_params = (("degraded", float(slo.degrade_factor)),)
+                self.degraded_pools[name] = dp
+        #: always-on SLO outcome counters (stats()["slo"]) — mirrored into
+        #: `slo.*` registry counters when telemetry is enabled
+        self.slo_counts = {f: 0 for f in SLO_FIELDS}
+        self._deadline_t: Dict[int, float] = {}
+        #: rid -> times preempted (policy budget) / parked-state cache key
+        self._preempt_counts: Dict[int, int] = {}
+        self._preempt_saved: Dict[int, tuple] = {}
+        self._degraded_rids: set = set()
         # weighted fair queuing at the admission edge: per-(tenant, algo)
         # queues, each owning (algo share) x (tenant share) of the budget
         weights = weights or {}
@@ -478,14 +649,37 @@ class GraphServer:
             {t: float(w) for t, w in tenant_weights.items()}
             if tenant_weights else {"default": 1.0}
         )
-        total_t = sum(self.tenants.values())
+        # `or 1.0`: all-zero declared weights still yield the max(1, ...)
+        # floor share below instead of a ZeroDivisionError
+        total_t = sum(self.tenants.values()) or 1.0
         self.tenant_quota = {
             (name, t): max(1, int(self.queue_quota[name] * tw / total_t))
             for name in programs for t, tw in self.tenants.items()
         }
+        # tenant -> cohort affinity (DESIGN.md §13): a listed tenant only
+        # admits into leaf ordinals `i % k` of each algorithm's k-leaf
+        # cohort group; unlisted tenants land anywhere. Confining a heavy
+        # best-effort tenant to one cohort is what lets the step cadence
+        # (SLOPolicy.cohort_burst / best_effort_stride) starve only that
+        # leaf instead of every lane in the pool.
+        self.cohort_affinity: Dict[str, Tuple[int, ...]] = {}
+        for t, idxs in (cohort_affinity or {}).items():
+            assert t in self.tenants, (
+                f"cohort_affinity tenant {t!r} not declared "
+                f"(declared: {sorted(self.tenants)})")
+            norm = tuple(sorted({int(i) for i in idxs}))
+            assert norm, f"cohort_affinity for {t!r} must list >= 1 cohort"
+            self.cohort_affinity[t] = norm
+        #: pump round counter — the clock `best_effort_stride` gates on
+        self._round = 0
         self.queues: Dict[str, Dict[str, deque]] = {
             name: {t: deque() for t in self.tenants} for name in programs
         }
+        #: per-algo rotation pointer into the tenant list — dealing resumes
+        #: AFTER the last-served tenant instead of restarting at the first,
+        #: so a tenant whose weight rounds to the minimum share still gets a
+        #: lane every rotation (starvation fix, tests/test_serving.py)
+        self._rr: Dict[str, int] = {name: 0 for name in programs}
         self._next_rid = 0
         self._inflight_sources: Dict[int, int] = {}
         self._inflight_tenants: Dict[int, str] = {}
@@ -496,17 +690,28 @@ class GraphServer:
     # -- request side --------------------------------------------------------
 
     def submit(self, algo: str, source: int, strict: bool = False,
-               tenant: str = "default") -> Optional[int]:
+               tenant: str = "default",
+               deadline_ms: Optional[float] = None) -> Optional[int]:
         """Enqueue a query; returns its rid, or None when the (tenant, algo)
         queue share is full (backpressure — caller sheds or retries;
         `strict=True` raises). One tenant flooding one algorithm exhausts
         only its own share of that algorithm's budget; every other
-        (tenant, algo) share is untouched."""
+        (tenant, algo) share is untouched.
+
+        `deadline_ms` attaches a latency SLO: the completion (and span) is
+        flagged `deadline_missed` if it finishes late, and an active
+        `SLOPolicy` may drop/degrade/preempt around it (DESIGN.md §13). A
+        deadline already expired at submit completes immediately as
+        `dropped` under a drop policy (the rid is still returned — the
+        outcome is in the completion)."""
         if algo not in self.pools:
             raise KeyError(f"no pool for algorithm {algo!r}")
         if tenant not in self.tenants:
             raise KeyError(
                 f"unknown tenant {tenant!r} (declared: {sorted(self.tenants)})")
+        now = time.monotonic()
+        deadline_t = (None if deadline_ms is None
+                      else now + float(deadline_ms) / 1e3)
         rid = self._next_rid
         key = make_key(self.graph_version, algo, source,
                        self.pools[algo].cache_params)
@@ -515,16 +720,30 @@ class GraphServer:
         reg.counter("requests_total").inc()
         if hit is not None:
             self._next_rid += 1
+            missed = deadline_t is not None and now > deadline_t
+            if missed:
+                self._count_slo("deadline_missed")
             reg.counter("cache_hits_total").inc()
             tr = self.obs.tracer
             tr.begin(rid, algo, int(source), tenant, self.graph_version)
-            tr.complete(rid, from_cache=True, iterations=0)
+            tr.complete(rid, from_cache=True, iterations=0,
+                        slo=self._span_slo(deadline_t, missed=missed))
             self.completions.append(Completion(
                 rid=rid, algo=algo, source=int(source),
                 result=served_result(hit),
                 iterations=0, from_cache=True,
                 graph_version=self.graph_version, tenant=tenant,
+                deadline_missed=missed,
             ))
+            return rid
+        if (self.slo is not None and self.slo.drop_expired
+                and deadline_t is not None and now >= deadline_t):
+            self._next_rid += 1
+            self.obs.tracer.begin(rid, algo, int(source), tenant,
+                                  self.graph_version)
+            self._drop_request(Request(
+                rid=rid, algo=algo, source=int(source), tenant=tenant,
+                deadline_t=deadline_t))
             return rid
         if len(self.queues[algo][tenant]) >= self.tenant_quota[(algo, tenant)]:
             self.rejected += 1
@@ -536,56 +755,348 @@ class GraphServer:
                     f"{self.queue_cap}")
             return None
         self._next_rid += 1
+        if deadline_t is not None:
+            self._deadline_t[rid] = deadline_t
         self.obs.tracer.begin(rid, algo, int(source), tenant,
                               self.graph_version)
         self.queues[algo][tenant].append(
-            Request(rid=rid, algo=algo, source=int(source), tenant=tenant))
+            Request(rid=rid, algo=algo, source=int(source), tenant=tenant,
+                    deadline_t=deadline_t))
         return rid
+
+    # -- SLO bookkeeping -----------------------------------------------------
+
+    def _count_slo(self, field: str) -> None:
+        self.slo_counts[field] += 1
+        self.obs.registry.counter(f"slo.{field}").inc()
+
+    @staticmethod
+    def _span_slo(deadline_t: Optional[float], *, missed: bool = False,
+                  dropped: bool = False, degraded: bool = False,
+                  preempted: bool = False) -> Optional[dict]:
+        """Span `slo` payload; None when the request had no deadline and no
+        policy action touched it (keeps pre-SLO traces byte-stable)."""
+        if deadline_t is None and not (missed or dropped or degraded
+                                       or preempted):
+            return None
+        return {
+            "deadline_s": None if deadline_t is None else round(
+                float(deadline_t), 9),
+            "deadline_missed": bool(missed),
+            "dropped": bool(dropped),
+            "degraded": bool(degraded),
+            "preempted": bool(preempted),
+        }
+
+    def _drop_request(self, req: Request) -> None:
+        """Complete a queued (or just-submitted, or just-evicted) request as
+        DROPPED: no result, counted, span-closed. Drops imply a missed
+        deadline — the policy only sheds work that cannot finish in time."""
+        rid = req.rid
+        self._count_slo("dropped")
+        self._count_slo("deadline_missed")
+        self._deadline_t.pop(rid, None)
+        was_preempted = rid in self._preempt_counts
+        self._preempt_counts.pop(rid, None)
+        key = self._preempt_saved.pop(rid, None)
+        if key is not None:
+            self.cache.pop(key)   # parked partial state dies with the query
+        self.obs.tracer.complete(
+            rid, from_cache=False, iterations=0,
+            slo=self._span_slo(req.deadline_t, missed=True, dropped=True,
+                               preempted=was_preempted))
+        self.completions.append(Completion(
+            rid=rid, algo=req.algo, source=req.source, result=None,
+            iterations=0, from_cache=False,
+            graph_version=self.graph_version, tenant=req.tenant,
+            deadline_missed=True, dropped=True, preempted=was_preempted,
+        ))
 
     # -- serving loop --------------------------------------------------------
 
     def _queued(self) -> int:
         return sum(len(q) for qs in self.queues.values() for q in qs.values())
 
+    def _leaves(self):
+        """Every concrete lane pool the scheduling loop drives: each
+        algorithm's cohort leaves, then the degraded shadow pools.
+        Yields (algo, pool, degraded)."""
+        for name, grp in self.pool_groups.items():
+            for p in grp:
+                yield name, p, False
+        for name, p in self.degraded_pools.items():
+            yield name, p, True
+
     def pump(self) -> List[Completion]:
-        """One scheduling round: admit each algorithm's tenant queues into
-        its own free lanes, dealt round-robin across tenants (fairness
-        across algorithms comes from the weighted queue shares enforced at
-        submit; round-robin dealing keeps one deep tenant queue from
-        monopolizing a burst of freed lanes), one batched step per live
-        pool, harvest converged lanes. Returns this round's completions."""
-        for name, pool in self.pools.items():
-            qs = self.queues[name]
-            lanes = deque(pool.free_lanes())
-            while lanes and any(qs.values()):
-                for t in self.tenants:
-                    if not lanes:
-                        break
-                    if qs[t]:
-                        req = qs[t].popleft()
-                        pool.admit(lanes.popleft(), req.rid, req.source)
-                        self._inflight_sources[req.rid] = req.source
-                        self._inflight_tenants[req.rid] = req.tenant
-                        self.obs.tracer.mark(req.rid, "admit")
+        """One scheduling round per algorithm: SLO admission scan (drop
+        expired/hopeless queued queries, maybe preempt a long-resident lane
+        for deadline-critical queued work), deal free lanes — interleaved
+        across cohort leaves, rotation-fair across tenants — then route
+        overflow to the degraded shadow pool under queue pressure; one
+        batched step per live leaf, harvest converged lanes. Returns this
+        round's completions (drops included). Fairness across algorithms
+        comes from the weighted queue shares enforced at submit."""
+        n0 = len(self.completions)
+        now = time.monotonic()
+        for name, grp in self.pool_groups.items():
+            if self.slo is not None:
+                self._slo_admission_scan(name, grp, now)
+                self._maybe_preempt(name, grp, now)
+            lanes = self._deal_lanes(grp)
+            self._admit_from_queues(name, lanes, degraded=False)
+            dp = self.degraded_pools.get(name)
+            if dp is not None and self._pressure(name, now):
+                dlanes = deque((0, dp, l) for l in dp.free_lanes())
+                self._admit_from_queues(name, dlanes, degraded=True)
 
         new: List[Completion] = []
-        for name, pool in self.pools.items():
-            stepped = pool.live()
-            pool.step()
-            if stepped and self.obs.enabled:
-                entry = pool.log_iter()
-                reg = self.obs.registry
-                reg.histogram(f"{name}.union_fe",
-                              default_count_buckets()).observe(
-                    entry["union_fe"])
-                reg.gauge(f"{name}.live_lanes").set(entry["live"])
-            new.extend(self._harvest_pool(name, pool))
+        self._round += 1
+        for name, grp in self.pool_groups.items():
+            for ordinal, pool in enumerate(grp):
+                self._step_leaf(pool, self._leaf_cadence(name, pool, ordinal))
+                new.extend(self._harvest_pool(name, pool, degraded=False))
+        for name, dp in self.degraded_pools.items():
+            self._step_leaf(dp, 1)
+            new.extend(self._harvest_pool(name, dp, degraded=True))
         if self.obs.enabled:
             self.obs.registry.gauge("queued").set(self._queued())
         self.completions.extend(new)
-        return new
+        return self.completions[n0:]
 
-    def _harvest_pool(self, name: str, pool: AlgoPool) -> List[Completion]:
+    def _step_leaf(self, pool: AlgoPool, k: int) -> None:
+        """Advance one leaf pool up to `k` batched steps this round (0 = a
+        stride-skipped best-effort cohort; >1 = a deadline burst), stopping
+        early once nothing is live."""
+        for _ in range(k):
+            if not pool.live():
+                break
+            pool.step()
+            if self.obs.enabled:
+                entry = pool.log_iter()
+                reg = self.obs.registry
+                reg.histogram(f"{pool.name}.union_fe",
+                              default_count_buckets()).observe(
+                    entry["union_fe"])
+                reg.gauge(f"{pool.name}.live_lanes").set(entry["live"])
+
+    def _leaf_cadence(self, name: str, pool: AlgoPool, ordinal: int) -> int:
+        """Steps this cohort leaf gets this round (DESIGN.md §13). The
+        measured cost model behind the knobs: a batched step prices by
+        ALLOCATED lanes Q (plus an m-bound constant), not by live content,
+        and the host backend pumps leaves sequentially with no dispatch
+        overlap — so a leaf's only isolation lever is step frequency.
+        Deadline-bearing leaves may burst `cohort_burst` steps per round;
+        best-effort-only leaves step every `best_effort_stride`-th round.
+        Defaults (1/1) reproduce the flat one-step-per-leaf schedule."""
+        pol = self.slo
+        if pol is None or len(self.pool_groups[name]) <= 1:
+            return 1
+        burst = max(1, pol.cohort_burst)
+        stride = max(1, pol.best_effort_stride)
+        if burst == 1 and stride == 1:
+            return 1
+        if any(rid is not None and rid in self._deadline_t
+               for rid in pool.lane_rid):
+            return burst
+        return 1 if (self._round + ordinal) % stride == 0 else 0
+
+    def _deal_lanes(self, grp: List[AlgoPool]) -> deque:
+        """Free lanes of a cohort group as (ordinal, pool, lane) triples,
+        interleaved round-robin across leaves so admissions spread load (and
+        pull-mode risk) instead of filling one cohort first."""
+        per = [deque(p.free_lanes()) for p in grp]
+        lanes: deque = deque()
+        while any(per):
+            for i, (p, q) in enumerate(zip(grp, per)):
+                if q:
+                    lanes.append((i, p, q.popleft()))
+        return lanes
+
+    def _take_lane(self, lanes: deque, tenant: str, k: int,
+                   degraded: bool) -> Optional[tuple]:
+        """Pop the first dealt lane this tenant may use: any lane when the
+        tenant has no cohort affinity (or for the degraded shadow pool —
+        a single leaf, no cohorts to pin), else the first whose leaf
+        ordinal falls in the tenant's allowed set mod the group size.
+        Returns None when no allowed lane remains (the tenant waits)."""
+        allowed = None if degraded else self.cohort_affinity.get(tenant)
+        if allowed is None:
+            return lanes.popleft()
+        allow = {i % k for i in allowed}
+        for idx, (ordinal, _p, _l) in enumerate(lanes):
+            if ordinal in allow:
+                item = lanes[idx]
+                del lanes[idx]
+                return item
+        return None
+
+    def _admit_from_queues(self, name: str, lanes: deque,
+                           degraded: bool) -> None:
+        """Deal `lanes` to this algorithm's tenant queues, resuming the
+        rotation AFTER the last-served tenant (`self._rr`): a minimum-share
+        tenant is guaranteed a lane every full rotation even when lanes free
+        one per pump — restarting at the first tenant each sweep starved
+        everyone behind a persistently-backlogged tenant. Affinity-pinned
+        tenants only take lanes in their allowed cohorts; a full sweep that
+        places nothing (every backlogged tenant pinned away from every
+        remaining lane) ends the deal."""
+        qs = self.queues[name]
+        tl = list(self.tenants)
+        k = len(self.pool_groups[name]) if name in self.pool_groups else 1
+        while lanes and any(qs.values()):
+            placed = False
+            for j in range(len(tl)):
+                t = tl[(self._rr[name] + j) % len(tl)]
+                if not qs[t]:
+                    continue
+                dealt = self._take_lane(lanes, t, k, degraded)
+                if dealt is None:
+                    continue
+                self._rr[name] = (self._rr[name] + j + 1) % len(tl)
+                req = qs[t].popleft()
+                _ordinal, pool, lane = dealt
+                self._admit_one(pool, lane, req, degraded)
+                placed = True
+                break
+            if not placed:
+                break
+
+    def _admit_one(self, pool: AlgoPool, lane: int, req: Request,
+                   degraded: bool) -> None:
+        rid = req.rid
+        resumed = False
+        if not degraded and rid in self._preempt_saved:
+            key = self._preempt_saved.pop(rid)
+            entry = self.cache.pop(key)
+            if entry is not None:
+                # resume the fixpoint from the parked partial state instead
+                # of restarting (preemption contract, DESIGN.md §13); a
+                # capacity-evicted entry falls back to a fresh admit
+                pool.admit_resume(lane, rid, {
+                    "planes": entry.extras["planes"],
+                    "it": entry.extras["it"],
+                    "trace": entry.extras["trace"],
+                })
+                resumed = True
+        if not resumed:
+            pool.admit(lane, rid, req.source)
+        self._inflight_sources[rid] = req.source
+        self._inflight_tenants[rid] = req.tenant
+        if degraded:
+            self._degraded_rids.add(rid)
+            self._count_slo("degraded")
+        self.obs.tracer.mark(rid, "admit")
+
+    def _group_ewma(self, grp: List[AlgoPool]) -> Optional[float]:
+        seen = [p.ewma_resident_s for p in grp
+                if p.ewma_resident_s is not None]
+        return sum(seen) / len(seen) if seen else None
+
+    def _slo_admission_scan(self, name: str, grp: List[AlgoPool],
+                            now: float) -> None:
+        """Shed queued queries that cannot make their deadline: already
+        expired (`drop_expired`), or hopeless — even admitted RIGHT NOW the
+        EWMA service-time estimate overshoots the deadline by the policy
+        margin."""
+        pol = self.slo
+        est = self._group_ewma(grp)
+        for t, q in self.queues[name].items():
+            kept: deque = deque()
+            while q:
+                req = q.popleft()
+                dt = req.deadline_t
+                drop = False
+                if dt is not None:
+                    if pol.drop_expired and now >= dt:
+                        drop = True
+                    elif (pol.hopeless_margin > 0 and est is not None
+                          and now + pol.hopeless_margin * est > dt):
+                        drop = True
+                if drop:
+                    self._drop_request(req)
+                else:
+                    kept.append(req)
+            self.queues[name][t] = kept
+
+    def _pressure(self, name: str, now: float) -> bool:
+        """Queue pressure that justifies degraded-pool routing: the
+        algorithm's backlog at/above the policy depth, or any queued
+        deadline's slack under the policy floor."""
+        pol = self.slo
+        queued = sum(len(q) for q in self.queues[name].values())
+        if queued == 0:
+            return False
+        if queued >= pol.degrade_queue_depth:
+            return True
+        slacks = [r.deadline_t - now for q in self.queues[name].values()
+                  for r in q if r.deadline_t is not None]
+        return bool(slacks) and min(slacks) < pol.degrade_slack_s
+
+    def _maybe_preempt(self, name: str, grp: List[AlgoPool],
+                       now: float) -> None:
+        """Evict (at most) one long-resident lane per algorithm per pump
+        when the group is lane-starved and queued deadline-critical work
+        would otherwise miss: the victim's partial state parks in the cache
+        and the query re-queues at the FRONT of its tenant queue (it has
+        already waited once). Residual-push pools only — their mid-run state
+        is resumable. A victim already past its own deadline is dropped
+        outright (eviction)."""
+        pol = self.slo
+        if not pol.preempt:
+            return
+        if grp[0].program.param("kind") != "residual":
+            return
+        if any(p.free_lanes() for p in grp):
+            return
+        slacks = [r.deadline_t - now for q in self.queues[name].values()
+                  for r in q if r.deadline_t is not None]
+        if not slacks:
+            return
+        est = self._group_ewma(grp)
+        trigger = max(pol.preempt_slack_s,
+                      pol.preempt_slack_factor * (est or 0.0))
+        if min(slacks) >= trigger:
+            return
+        victim = None   # (resident_s, pool, lane, rid)
+        for p in grp:
+            for lane, rid in enumerate(p.lane_rid):
+                if rid is None:
+                    continue
+                resident = now - p.lane_admit_t[lane]
+                if resident < pol.preempt_min_resident_s:
+                    continue
+                if self._preempt_counts.get(rid, 0) >= pol.max_preempts:
+                    continue
+                if victim is None or resident > victim[0]:
+                    victim = (resident, p, lane, rid)
+        if victim is None:
+            return
+        _resident, pool, lane, rid = victim
+        saved = pool.preempt(lane)
+        source = self._inflight_sources.pop(rid)
+        tenant = self._inflight_tenants.pop(rid, "default")
+        self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
+        self._count_slo("preempted")
+        self.obs.tracer.mark(rid, "preempt")
+        dt = self._deadline_t.get(rid)
+        req = Request(rid=rid, algo=name, source=source, tenant=tenant,
+                      deadline_t=dt)
+        if dt is not None and now >= dt and pol.drop_expired:
+            self._drop_request(req)
+            return
+        key = make_key(self.graph_version, name, source,
+                       (("partial", rid),))
+        self.cache.put(key, CachedEntry(
+            saved["planes"][pool.result_field][:-1],
+            {"planes": saved["planes"], "it": saved["it"],
+             "trace": saved["trace"]},
+        ))
+        if key in self.cache:   # capacity 0 stores nothing -> fresh restart
+            self._preempt_saved[rid] = key
+        self.queues[name][tenant].appendleft(req)
+
+    def _harvest_pool(self, name: str, pool: AlgoPool,
+                      degraded: bool = False) -> List[Completion]:
         out = []
         harvested = pool.harvest()
         mode_rows = None
@@ -594,39 +1105,61 @@ class GraphServer:
             # mode-trace machinery: ONE matrix transfer per harvest that
             # actually yields lanes (never per lane)
             mode_rows = device_fetch(pool.state.mode_trace)
+        now = time.monotonic()
         for lane, rid, result, iters, extras in harvested:
+            pool.observe_resident(now - pool.lane_admit_t[lane])
+            dt = self._deadline_t.pop(rid, None)
+            missed = dt is not None and now > dt
+            if missed:
+                self._count_slo("deadline_missed")
+            was_preempted = rid in self._preempt_counts
+            self._preempt_counts.pop(rid, None)
+            self._degraded_rids.discard(rid)
             comp = Completion(
                 rid=rid, algo=name, source=self._source_of(rid, name, result),
                 result=result, iterations=iters, from_cache=False,
                 graph_version=self.graph_version,
                 tenant=self._inflight_tenants.pop(rid, "default"),
+                deadline_missed=missed, degraded=degraded,
+                preempted=was_preempted,
             )
-            self.cache.put(
-                make_key(self.graph_version, comp.algo, comp.source,
-                         pool.cache_params),
-                CachedEntry(comp.result, extras) if extras else comp.result,
-            )
+            if not degraded:
+                # degraded answers never cache-fill: the bit-exact key must
+                # keep serving full-tolerance results only
+                self.cache.put(
+                    make_key(self.graph_version, comp.algo, comp.source,
+                             pool.cache_params),
+                    CachedEntry(comp.result, extras) if extras
+                    else comp.result,
+                )
             if self.obs.enabled:
-                self._complete_span(name, pool, lane, rid, iters, mode_rows)
+                self._complete_span(
+                    name, pool, lane, rid, iters, mode_rows,
+                    slo=self._span_slo(dt, missed=missed, degraded=degraded,
+                                       preempted=was_preempted))
             out.append(comp)
         return out
 
     def _complete_span(self, name: str, pool: AlgoPool, lane: int, rid: int,
-                       iters: int, mode_rows) -> None:
+                       iters: int, mode_rows,
+                       slo: Optional[dict] = None) -> None:
         """Close an engine-served request's span: assemble its per-iteration
         list from the lane's mode-trace row + the pool iteration log's
         per-lane frontier counts / union volumes, observe the lifecycle
-        latency histograms."""
+        latency histograms. A preempt-resumed lane's pre-preemption
+        iterations predate this pool residency's log, so they pad as None
+        gaps (`lane_it_base`), keeping mode-trace alignment."""
         tr = self.obs.tracer
         tr.mark(rid, "harvest")
         admit_step = pool.lane_admit_step[lane]
-        counts: List[Optional[int]] = []
-        unions: List[Optional[int]] = []
+        it0 = pool.lane_it_base[lane]
+        counts: List[Optional[int]] = [None] * it0
+        unions: List[Optional[int]] = [None] * it0
         for e in pool.iter_log:
-            i = e["step"] - admit_step - 1     # this lane's iteration index
+            i = e["step"] - admit_step - 1     # iters run THIS residency
             if i < 0:
                 continue
-            while len(counts) < i:             # bounded log dropped samples:
+            while len(counts) < it0 + i:       # bounded log dropped samples:
                 counts.append(None)            # None gaps keep alignment
                 unions.append(None)
             counts.append(int(e["counts"][lane]))
@@ -634,16 +1167,20 @@ class GraphServer:
         span = tr.complete(rid, from_cache=False, iterations=iters,
                            iters=iters_from_trace(mode_rows[lane], counts,
                                                   unions),
-                           graph_version=self.graph_version)
+                           graph_version=self.graph_version, slo=slo)
         if span is None:
             return
         d = span.durations()
         reg = self.obs.registry
         lat = default_latency_buckets()
-        reg.histogram(f"{name}.latency_total_s", lat).observe(d["total_s"])
-        reg.histogram(f"{name}.queue_wait_s", lat).observe(d["queue_wait_s"])
-        reg.histogram(f"{name}.resident_s", lat).observe(d["resident_s"])
-        reg.histogram(f"{name}.iterations",
+        # cohort leaves aggregate under the ALGORITHM name (capacity split is
+        # an implementation detail); the degraded shadow pool keeps its own
+        # series — its latencies are not comparable to full-tolerance serving
+        hname = pool.name if slo is not None and slo["degraded"] else name
+        reg.histogram(f"{hname}.latency_total_s", lat).observe(d["total_s"])
+        reg.histogram(f"{hname}.queue_wait_s", lat).observe(d["queue_wait_s"])
+        reg.histogram(f"{hname}.resident_s", lat).observe(d["resident_s"])
+        reg.histogram(f"{hname}.iterations",
                       default_count_buckets()).observe(iters)
         reg.counter("completions_engine_total").inc()
 
@@ -654,7 +1191,7 @@ class GraphServer:
         """Pump until the queues and every pool are empty; returns ALL
         completions accumulated so far (cache hits included)."""
         rounds = 0
-        while self._queued() or any(p.live() for p in self.pools.values()):
+        while self._queued() or any(p.live() for _n, p, _d in self._leaves()):
             self.pump()
             rounds += 1
             if rounds >= max_rounds:
@@ -683,15 +1220,22 @@ class GraphServer:
         assert self.sg is not None, "GraphServer built without delta_cap"
         assert refresh in ("incremental", "drop")
         # (1) don't let finished old-graph results leak into the new version
-        for name, pool in self.pools.items():
-            self.completions.extend(self._harvest_pool(name, pool))
+        for name, pool, degraded in self._leaves():
+            self.completions.extend(
+                self._harvest_pool(name, pool, degraded=degraded))
 
         old_version = self.graph_version
         report = self.sg.apply(inserts, deletes)
         self.graph_version = report.version
         self.g = self.sg.graph
-        for pool in self.pools.values():
+        for _name, pool, _degraded in self._leaves():
             pool.set_graph(self.sg.graph, self.sg.pack, self.sg.delta)
+        # parked preempted state is version-bound: the saved residuals are
+        # only Maiter-correctable while resident in a pool, so a version
+        # bump invalidates the parked copies and those queries restart
+        for rid, key in list(self._preempt_saved.items()):
+            self.cache.pop(key)
+            del self._preempt_saved[rid]
 
         # (3) selective cache invalidation / refresh
         retained = dropped = refreshed = 0
@@ -725,7 +1269,7 @@ class GraphServer:
 
         re_enqueued_rids = []
         resumed_inflight = 0
-        for name, pool in self.pools.items():
+        for _name, pool, _degraded in self._leaves():
             if is_residual(pool.program):
                 if pool.live():
                     resumed_inflight += pool.resume_residual(self.sg, report)
@@ -753,8 +1297,8 @@ class GraphServer:
             # touched-delta slice shipping (DESIGN.md §11): what each
             # sharded pool's view swap actually moved to the mesh
             "shipped": {
-                name: dict(p.engine.last_ship)
-                for name, p in self.pools.items() if hasattr(p, "engine")
+                p.name: dict(p.engine.last_ship)
+                for _n, p, _d in self._leaves() if hasattr(p, "engine")
             },
         }
         self.update_log.append(stats)
@@ -863,11 +1407,19 @@ class GraphServer:
                          per-pool `shipped` = engine.last_ship) or None
           shard_delta    graph.partition.SHARD_DELTA_STATS process counters
                          (full_reslice / short_circuit overlay re-slices)
-          pools          per-algo: slots, engine_queries, steps, queue
-                         depths/quotas/weights, placement kind, and — when
-                         telemetry is on — `tele` (cumulative named engine
-                         counters, see obs.TELE_FIELDS) + `last_iter`
-                         (newest iteration-log sample) + `shipped`
+          pools          per-algo (cohort groups aggregated: slots and
+                         engine_queries summed, steps/tele from the leaves,
+                         `cohorts` = leaf count): slots, engine_queries,
+                         steps, queue depths/quotas/weights, placement kind,
+                         and — when telemetry is on — `tele` (cumulative
+                         named engine counters, see obs.TELE_FIELDS) +
+                         `last_iter` (newest iteration-log sample) +
+                         `shipped`; degraded shadow pools appear as
+                         '<algo>@degraded' entries with a `degraded` flag
+          slo            {"enabled": bool, deadline_missed/dropped/degraded/
+                         preempted counts (obs.SLO_FIELDS, always live),
+                         "policy": SLOPolicy.describe() or None,
+                         "cohort_affinity": tenant -> pinned cohort list}
           obs            Observability.snapshot(): metrics registry dump
                          (counters/gauges/histogram p50-p95-p99 summaries)
                          + span recorder totals; {"enabled": False} when off
@@ -877,11 +1429,13 @@ class GraphServer:
         from repro.graph.partition import SHARD_DELTA_STATS
 
         pools = {}
-        for name, p in self.pools.items():
+        for name, grp in self.pool_groups.items():
+            p = grp[0]
             d = {
-                "slots": p.slots,
-                "engine_queries": p.engine_queries,
-                "steps": p.steps,
+                "slots": sum(q.slots for q in grp),
+                "cohorts": len(grp),
+                "engine_queries": sum(q.engine_queries for q in grp),
+                "steps": max(q.steps for q in grp),
                 "queued": sum(len(q) for q in self.queues[name].values()),
                 "queue_quota": self.queue_quota[name],
                 "weight": self.weights[name],
@@ -897,15 +1451,34 @@ class GraphServer:
             }
             if hasattr(p, "engine"):
                 d["shipped"] = dict(p.engine.last_ship)
-            if self.obs.enabled and p.iter_log:
-                last = p.iter_log[-1]
-                d["tele"] = tele_dict(last["tele"])
+            if self.obs.enabled and any(q.iter_log for q in grp):
+                # cumulative counters sum across cohort leaves; the sample
+                # fields come from the most recently stepped leaf
+                logged = [q for q in grp if q.iter_log]
+                tele_sum = np.sum(
+                    [np.asarray(q.iter_log[-1]["tele"]) for q in logged],
+                    axis=0)
+                last = max((q.iter_log[-1] for q in logged),
+                           key=lambda e: e["step"])
+                d["tele"] = tele_dict(tele_sum)
                 d["last_iter"] = {
                     "step": last["step"], "gmode": last["gmode"],
                     "union_fe": last["union_fe"],
                     "overflow": last["overflow"], "live": last["live"],
                 }
             pools[name] = d
+        for name, p in self.degraded_pools.items():
+            d = {
+                "slots": p.slots,
+                "engine_queries": p.engine_queries,
+                "steps": p.steps,
+                "placement": "single",
+                "degraded": True,
+            }
+            if self.obs.enabled and p.iter_log:
+                last = p.iter_log[-1]
+                d["tele"] = tele_dict(last["tele"])
+            pools[p.name] = d
         return {
             "completed": len(self.completions),
             "queued": self._queued(),
@@ -922,5 +1495,13 @@ class GraphServer:
             "last_update": self.update_log[-1] if self.update_log else None,
             "shard_delta": dict(SHARD_DELTA_STATS),
             "pools": pools,
+            "slo": {
+                "enabled": self.slo is not None,
+                **self.slo_counts,
+                "policy": (self.slo.describe()
+                           if self.slo is not None else None),
+                "cohort_affinity": {
+                    t: list(v) for t, v in self.cohort_affinity.items()},
+            },
             "obs": self.obs.snapshot(),
         }

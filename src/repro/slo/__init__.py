@@ -1,0 +1,48 @@
+"""`repro.slo` — SLO-grade serving: open-loop load + deadline policy.
+
+Two halves (DESIGN.md §13):
+
+  workload.py -- seeded open-loop arrival specs: Poisson / bursty (MMPP)
+                 clocks, multi-tenant algorithm mixes with per-class
+                 deadlines and source skew, interleaved streaming update
+                 batches; `generate` expands a spec deterministically.
+  harness.py  -- `replay`: fire the arrival list at a `GraphServer` on the
+                 wall clock WITHOUT closing the loop on completions, then
+                 report goodput, shed/drop/degrade/preempt counts, and
+                 p50/p95/p99 latency.
+
+The enforcement half lives inside the serving stack (`repro.serving.slo`,
+re-exported here): `SLOPolicy` drives admission-time drops, degraded
+shadow pools, and lane preemption/resume; consensus cohorts
+(`GraphServer(cohorts=...)`) give tail isolation. `benchmarks/slo_bench.py`
+ties both halves together into BENCH_slo.json.
+"""
+
+from repro.serving.slo import SLOPolicy, degraded_variant  # noqa: F401
+from repro.slo.harness import (  # noqa: F401
+    ReplayReport,
+    percentiles,
+    replay,
+    warmup,
+)
+from repro.slo.workload import (  # noqa: F401
+    Arrival,
+    TenantClass,
+    Workload,
+    describe,
+    generate,
+)
+
+__all__ = [
+    "SLOPolicy",
+    "degraded_variant",
+    "Workload",
+    "TenantClass",
+    "Arrival",
+    "generate",
+    "describe",
+    "replay",
+    "warmup",
+    "ReplayReport",
+    "percentiles",
+]

@@ -252,6 +252,41 @@ def test_tenant_round_robin_admission(served_graph):
     assert len(comps) == 5
 
 
+def test_tenant_rotation_prevents_starvation_under_backlog(served_graph):
+    """REGRESSION (weighted-admission starvation): with ONE lane freeing per
+    pump and a persistently-topped-up whale queue ahead in the tenant
+    order, the old dealing loop restarted its sweep at the FIRST tenant
+    every pump — the minnow behind the whale never got a lane. The
+    rotation pointer (`GraphServer._rr`) resumes dealing AFTER the
+    last-served tenant, so the minnow is served within one full rotation
+    no matter how deep the whale's backlog stays."""
+    g, pack = served_graph
+    cfg = default_config(g, max_iters=64)
+    srv = GraphServer(
+        g, pack, {"bfs": alg.bfs(0)}, slots=1, cfg=cfg,
+        queue_cap=64, cache_capacity=0,
+        tenant_weights={"whale": 8.0, "minnow": 1.0},
+    )
+    for s in range(8):
+        assert srv.submit("bfs", s, tenant="whale") is not None
+    minnow_rid = srv.submit("bfs", 100, tenant="minnow")
+    assert minnow_rid is not None
+    done = set()
+    for pump in range(200):
+        for c in srv.pump():
+            done.add(c.rid)
+        # keep the whale's backlog topped up so its queue never drains
+        srv.submit("bfs", 200 + pump, tenant="whale")
+        if minnow_rid in done:
+            break
+    assert minnow_rid in done, "minnow starved behind whale backlog"
+    # and not merely eventually: with 2 tenants and 1 lane the minnow gets
+    # the SECOND admission, so at most one whale query completes first
+    assert len(done) <= 2, (
+        f"minnow waited behind {len(done) - 1} whale completions — rotation "
+        f"pointer not honored")
+
+
 def test_scheduler_backpressure(served_graph):
     g, pack = served_graph
     cfg = default_config(g, max_iters=64)

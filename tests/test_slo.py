@@ -1,0 +1,372 @@
+"""SLO subsystem: seeded workloads, deadline accounting, policy actions.
+
+The deadline-aware serving contracts from DESIGN.md §13:
+
+  * workload expansion is deterministic per (spec, n_nodes) and open-loop
+    replay accounts every query exactly once (good/shed/dropped/missed);
+  * deadline EDGE CASES: expired at submit (dropped under a policy,
+    accounted-but-served without one); expiring mid-residency (never
+    dropped — resident queries always finish, flagged missed); hopeless
+    (EWMA says it cannot finish in time — dropped while still unexpired);
+  * degradation routes overflow to the loosened-tolerance shadow pool,
+    flags completions, and NEVER fills the bit-exact result cache;
+  * a preempted-then-resumed query is BIT-IDENTICAL to an uninterrupted
+    run (same result, same total iterations) — preemption parks and
+    resumes the residual fixpoint, it never restarts or corrupts it;
+  * consensus cohorts with default policy knobs are bit-identical to
+    pooled serving; `cohort_burst`/`best_effort_stride` reshape WHICH
+    leaves step per round without changing any result; tenant cohort
+    affinity confines a tenant's admissions to its pinned leaves.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.graph import generators, pack_ell
+from repro.serving import GraphServer, default_config
+from repro.serving.cache import make_key
+from repro.slo import (
+    SLOPolicy,
+    TenantClass,
+    Workload,
+    describe,
+    generate,
+    replay,
+    warmup,
+)
+
+
+@pytest.fixture(scope="module")
+def slo_graph():
+    g = generators.rmat(9, 8, seed=3)          # 512 nodes, power-law
+    return g, pack_ell(g.inc)
+
+
+def _server(g, pack, *, algos=("ppr_delta",), slots=2, policy=None,
+            cohorts=None, affinity=None, tenant_weights=None, **kw):
+    factories = {"bfs": alg.bfs(0), "sssp": alg.sssp(0),
+                 "ppr_delta": alg.ppr_delta(0)}
+    return GraphServer(
+        g, pack, {a: factories[a] for a in algos}, slots=slots,
+        cfg=default_config(g), queue_cap=64,
+        result_fields={"ppr_delta": "rank"},
+        tenant_weights=tenant_weights, cohorts=cohorts, slo=policy,
+        cohort_affinity=affinity, **kw)
+
+
+# ---------------------------------------------------------------------------
+# workload generation
+# ---------------------------------------------------------------------------
+
+
+def test_workload_generation_deterministic():
+    w = Workload(arrival="mmpp", rate_qps=80.0, duration_s=4.0,
+                 update_every_s=1.0,
+                 tenants=(TenantClass("a", 2.0, (("bfs", 1.0),),
+                                      deadline_ms=100.0, hot_frac=0.5),
+                          TenantClass("b", 1.0, (("ppr_delta", 1.0),))),
+                 seed=11)
+    first, second = generate(w, 512), generate(w, 512)
+    assert first == second, "same spec must expand identically"
+    assert generate(Workload(**{**w.__dict__, "seed": 12}), 512) != first
+    queries = [a for a in first if a.kind == "query"]
+    updates = [a for a in first if a.kind == "update"]
+    assert len(updates) == 3                    # t = 1, 2, 3 < duration 4
+    assert all(u.inserts for u in updates)
+    assert {q.tenant for q in queries} == {"a", "b"}
+    # per-tenant contracts flow through to every arrival
+    assert all(q.algo == "bfs" and q.deadline_ms == 100.0
+               for q in queries if q.tenant == "a")
+    assert all(q.algo == "ppr_delta" and q.deadline_ms is None
+               for q in queries if q.tenant == "b")
+    assert all(first[i].t <= first[i + 1].t for i in range(len(first) - 1))
+    d = describe(w)
+    assert d["arrival"] == "mmpp" and len(d["tenants"]) == 2
+
+
+def test_workload_fixed_source_pool():
+    hubs = (3, 5)
+    w = Workload(rate_qps=200.0, duration_s=1.0,
+                 tenants=(TenantClass("h", 1.0, (("bfs", 1.0),),
+                                      sources=hubs),))
+    arr = generate(w, 512)
+    assert arr and all(a.source in hubs for a in arr)
+
+
+# ---------------------------------------------------------------------------
+# deadline edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expired_at_submit_drops_under_policy(slo_graph):
+    g, pack = slo_graph
+    srv = _server(g, pack, policy=SLOPolicy())
+    rid = srv.submit("ppr_delta", 7, deadline_ms=0.0)
+    assert rid is not None, "drop outcome still returns the rid"
+    comp = [c for c in srv.completions if c.rid == rid][0]
+    assert comp.dropped and comp.deadline_missed and comp.result is None
+    assert srv.slo_counts["dropped"] == 1
+    assert srv.slo_counts["deadline_missed"] == 1
+
+
+def test_deadline_expired_at_submit_still_served_without_policy(slo_graph):
+    g, pack = slo_graph
+    srv = _server(g, pack, policy=None)
+    rid = srv.submit("ppr_delta", 7, deadline_ms=0.0)
+    comp = {c.rid: c for c in srv.drain()}[rid]
+    assert not comp.dropped and comp.result is not None
+    assert comp.deadline_missed, "late completion must still be accounted"
+
+
+def test_deadline_expiring_mid_residency_completes_as_missed(slo_graph):
+    """A RESIDENT query is never dropped — only queued ones are; expiry
+    mid-run flags the completion `deadline_missed` with a full result."""
+    g, pack = slo_graph
+    srv = _server(g, pack, slots=1, policy=SLOPolicy())
+    rid = srv.submit("ppr_delta", 11, deadline_ms=150.0)
+    srv.pump()                                  # admits + first step
+    assert rid in srv._inflight_sources, "query must be resident"
+    time.sleep(0.2)                             # deadline passes mid-run
+    comp = {c.rid: c for c in srv.drain()}[rid]
+    assert not comp.dropped and comp.result is not None
+    assert comp.deadline_missed
+    assert srv.slo_counts["dropped"] == 0
+
+
+def test_hopeless_queued_query_drops_before_expiry(slo_graph):
+    """`hopeless_margin`: a queued query whose deadline the EWMA says is
+    unreachable drops NOW instead of wasting its queue slot to expiry."""
+    g, pack = slo_graph
+    srv = _server(g, pack, slots=1, policy=SLOPolicy(hopeless_margin=1.0))
+    blocker = srv.submit("ppr_delta", 3)        # no deadline, fills the lane
+    srv.pump()
+    srv.pools["ppr_delta"].ewma_resident_s = 10.0   # pool "takes 10s"
+    t0 = time.monotonic()
+    rid = srv.submit("ppr_delta", 9, deadline_ms=5000.0)
+    srv.pump()                                  # admission scan sheds it
+    comp = [c for c in srv.completions if c.rid == rid][0]
+    assert comp.dropped and comp.deadline_missed
+    assert time.monotonic() - t0 < 5.0, "dropped while still unexpired"
+    done = {c.rid: c for c in srv.drain()}
+    assert done[blocker].result is not None     # the resident one finishes
+
+
+def test_warmup_resets_ewma_estimate(slo_graph):
+    """Warmup's first query pays JIT compile inside its residency; leaking
+    that into the EWMA makes every deadline look hopeless (regression:
+    hopeless_margin dropped 100% of a replay after a warmed start)."""
+    g, pack = slo_graph
+    srv = _server(g, pack, policy=SLOPolicy(
+        degrade_algos=("ppr_delta",), degrade_slots=2))
+    warmup(srv, {"ppr_delta": 1})
+    assert all(p.ewma_resident_s is None for _n, p, _d in srv._leaves())
+
+
+# ---------------------------------------------------------------------------
+# degradation
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_pool_serves_overflow_and_never_caches(slo_graph):
+    g, pack = slo_graph
+    srv = _server(g, pack, slots=1, policy=SLOPolicy(
+        degrade_algos=("ppr_delta",), degrade_slots=2,
+        degrade_queue_depth=1))
+    rids = [srv.submit("ppr_delta", s) for s in (20, 21, 22)]
+    comps = {c.rid: c for c in srv.drain()}
+    degraded = [comps[r] for r in rids if comps[r].degraded]
+    assert len(degraded) == 2, "queue overflow must route to the shadow pool"
+    assert srv.slo_counts["degraded"] == 2
+    assert all(c.result is not None for c in degraded)
+    main = srv.pools["ppr_delta"]
+    for c in degraded:
+        key = make_key(srv.graph_version, "ppr_delta", c.source,
+                       main.cache_params)
+        assert srv.cache.get(key) is None, (
+            "degraded answer must not fill the bit-exact cache key")
+    # the full-tolerance completion DOES cache
+    full = [comps[r] for r in rids if not comps[r].degraded][0]
+    assert srv.cache.get(make_key(srv.graph_version, "ppr_delta",
+                                  full.source, main.cache_params)) is not None
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_then_resume_bit_identical(slo_graph):
+    """The preemption contract: park the residual fixpoint, resume it later,
+    and the final (result, iteration count) is bit-identical to a run that
+    was never interrupted."""
+    g, pack = slo_graph
+    src = 42
+    ref_srv = _server(g, pack, slots=1)
+    ref_rid = ref_srv.submit("ppr_delta", src)
+    ref = {c.rid: c for c in ref_srv.drain()}[ref_rid]
+    assert ref.iterations > 3, "need a multi-iteration query to interrupt"
+
+    srv = _server(g, pack, slots=1,
+                  tenant_weights={"bg": 1.0, "fg": 1.0},
+                  policy=SLOPolicy(preempt=True, preempt_slack_s=100.0,
+                                   preempt_min_resident_s=0.0))
+    rid = srv.submit("ppr_delta", src, tenant="bg")
+    for _ in range(3):
+        srv.pump()                              # victim makes real progress
+    assert rid in srv._inflight_sources
+    other = srv.submit("ppr_delta", 7, tenant="fg", deadline_ms=10_000.0)
+    srv.pump()                                  # deadline pressure -> evict
+    assert srv.slo_counts["preempted"] == 1
+    assert srv._inflight_sources.get(other) == 7, (
+        "the deadline query must take the freed lane")
+    comps = {c.rid: c for c in srv.drain()}
+    victim = comps[rid]
+    assert victim.preempted and not victim.dropped
+    assert victim.iterations == ref.iterations, (
+        f"resume must continue the fixpoint, not restart it "
+        f"({victim.iterations} vs {ref.iterations} iters)")
+    assert np.array_equal(np.asarray(victim.result),
+                          np.asarray(ref.result)), (
+        "preempt-resume result diverges from uninterrupted run")
+    assert comps[other].result is not None
+
+
+# ---------------------------------------------------------------------------
+# cohorts: bit-identity, cadence, affinity
+# ---------------------------------------------------------------------------
+
+
+SOURCES = (5, 17, 40, 99, 123, 200, 310, 400)
+
+
+def _drain_results(srv, tenants=None):
+    rids = {}
+    for i, s in enumerate(SOURCES):
+        t = tenants[i % len(tenants)] if tenants else "default"
+        rids[srv.submit("ppr_delta", s, tenant=t)] = s
+    comps = {c.rid: c for c in srv.drain()}
+    return {rids[r]: np.asarray(comps[r].result) for r in rids}
+
+
+def test_cohorts_default_policy_bit_identical_to_unpoliced(slo_graph):
+    """Attaching SLOPolicy() with default knobs must not perturb cohort
+    scheduling at all: results stay bit-identical to the same cohort
+    topology with no policy. (Pooled vs cohorted can only agree to float
+    tolerance — lane width changes the reduction's reassociation.)"""
+    g, pack = slo_graph
+    plain = _drain_results(_server(g, pack, slots=4,
+                                   cohorts={"ppr_delta": 2}))
+    policed = _drain_results(_server(
+        g, pack, slots=4, cohorts={"ppr_delta": 2}, policy=SLOPolicy()))
+    for s in SOURCES:
+        assert np.array_equal(plain[s], policed[s]), (
+            f"source {s}: default policy perturbed the cohort result")
+    pooled = _drain_results(_server(g, pack, slots=4))
+    for s in SOURCES:
+        np.testing.assert_allclose(pooled[s], policed[s], atol=1e-5)
+
+
+def test_cohort_cadence_reshapes_steps_not_results(slo_graph):
+    """stride/burst change WHICH leaves step per round; results stay equal
+    to float tolerance (shifted admission timing re-slots later queries
+    into different batch lanes, so reassociation noise at the ulp level is
+    expected — anything above that is a scheduling bug). A best-effort-only
+    leaf at stride 3 steps in a third of the rounds; a deadline-bearing
+    leaf bursts >1 step per round."""
+    g, pack = slo_graph
+    plain = _drain_results(_server(g, pack, slots=4,
+                                   cohorts={"ppr_delta": 2}))
+    srv = _server(g, pack, slots=4, cohorts={"ppr_delta": 2},
+                  policy=SLOPolicy(drop_expired=False, cohort_burst=2,
+                                   best_effort_stride=3))
+    shaped = _drain_results(srv)
+    for s in SOURCES:
+        np.testing.assert_allclose(plain[s], shaped[s], atol=1e-6)
+    # stride accounting: best-effort leaves stepped in only ~1/3 of rounds
+    steps = [p.steps for p in srv.pool_groups["ppr_delta"]]
+    assert all(0 < st < srv._round for st in steps), (
+        f"stride must skip rounds: leaf steps {steps} vs "
+        f"{srv._round} rounds")
+
+    # burst: a deadline-bearing resident leaf takes cohort_burst steps/round
+    srv2 = _server(g, pack, slots=4, cohorts={"ppr_delta": 2},
+                   policy=SLOPolicy(drop_expired=False, cohort_burst=3))
+    rid = srv2.submit("ppr_delta", 5, deadline_ms=60_000.0)
+    srv2.pump()
+    leaf = next(p for p in srv2.pool_groups["ppr_delta"]
+                if rid in p.lane_rid)
+    assert leaf.steps == 3, (
+        f"deadline leaf must burst 3 steps in one round, took {leaf.steps}")
+
+
+def test_cohort_affinity_confines_tenant(slo_graph):
+    g, pack = slo_graph
+    srv = _server(g, pack, slots=4, cohorts={"ppr_delta": 2},
+                  tenant_weights={"pinned": 1.0, "free": 1.0},
+                  affinity={"pinned": [1]})
+    for s in SOURCES:
+        srv.submit("ppr_delta", s, tenant="pinned")
+    srv.drain()
+    leaves = srv.pool_groups["ppr_delta"]
+    assert leaves[0].engine_queries == 0, (
+        "pinned tenant admitted into a leaf outside its affinity set")
+    assert leaves[1].engine_queries == len(SOURCES)
+    # the unpinned tenant still lands anywhere (leaf 0 usable again)
+    for s in SOURCES[:4]:
+        srv.submit("ppr_delta", 500 + s, tenant="free")
+    srv.drain()
+    assert leaves[0].engine_queries > 0
+
+
+def test_cohort_affinity_unknown_tenant_rejected(slo_graph):
+    g, pack = slo_graph
+    with pytest.raises(AssertionError):
+        _server(g, pack, cohorts={"ppr_delta": 2},
+                tenant_weights={"a": 1.0}, affinity={"nobody": [0]})
+
+
+# ---------------------------------------------------------------------------
+# open-loop replay + stats surface
+# ---------------------------------------------------------------------------
+
+
+def test_replay_accounts_every_query(slo_graph):
+    g, pack = slo_graph
+    srv = _server(g, pack, algos=("bfs", "ppr_delta"), slots=2,
+                  tenant_weights={"a": 1.0, "b": 1.0},
+                  policy=SLOPolicy(degrade_algos=("ppr_delta",),
+                                   degrade_slots=2))
+    warmup(srv, {"bfs": 1, "ppr_delta": 1})
+    w = Workload(arrival="poisson", rate_qps=150.0, duration_s=1.5,
+                 tenants=(TenantClass("a", 1.0, (("bfs", 1.0),),
+                                      deadline_ms=400.0),
+                          TenantClass("b", 1.0, (("ppr_delta", 1.0),))),
+                 seed=5)
+    rep = replay(srv, generate(w, g.n_nodes), max_wall_s=30.0)
+    assert rep.offered > 0 and rep.crashed_lanes == 0
+    assert rep.completed + rep.shed + rep.dropped == rep.offered
+    assert 0.0 <= rep.goodput <= 1.0
+    assert rep.total is None or (
+        rep.total["p50_seconds"] <= rep.total["p99_seconds"])
+    assert set(rep.per_tenant) <= {"a", "b"}
+
+
+def test_stats_slo_schema(slo_graph):
+    g, pack = slo_graph
+    pol = SLOPolicy(degrade_algos=("ppr_delta",), cohort_burst=2,
+                    best_effort_stride=2)
+    srv = _server(g, pack, slots=4, cohorts={"ppr_delta": 2}, policy=pol,
+                  tenant_weights={"t": 1.0}, affinity={"t": [0]})
+    s = srv.stats()
+    slo = s["slo"]
+    assert slo["enabled"] is True
+    for k in ("deadline_missed", "dropped", "degraded", "preempted"):
+        assert isinstance(slo[k], int)
+    assert slo["policy"]["cohort_burst"] == 2
+    assert slo["policy"]["best_effort_stride"] == 2
+    assert slo["cohort_affinity"] == {"t": [0]}
+    assert s["pools"]["ppr_delta"]["cohorts"] == 2
+    assert "ppr_delta@degraded" in s["pools"]
