@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs smoke-slo bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-slo bench-schema flake-hunt
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs smoke-slo smoke-flight bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-slo bench-schema bench-check flake-hunt
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -97,3 +97,24 @@ bench-slo:
 # lint the BENCH_*.json records (also part of `make check`)
 bench-schema:
 	python scripts/bench_schema.py
+
+# flight-recorder smoke: armed event ring through an SLO replay, dumped to
+# JSONL, validated (--flight schema) and rendered (obs_report)
+smoke-flight:
+	PYTHONPATH=src python -m repro.launch.slo_replay --scale 8 --rate 40 \
+		--duration 2 --slots 4 --assert-goodput \
+		--trace /tmp/repro_trace_flight_smoke.jsonl \
+		--flight-record /tmp/repro_flight_smoke.jsonl
+	python scripts/trace_schema.py --flight /tmp/repro_flight_smoke.jsonl
+	PYTHONPATH=src python -m repro.launch.obs_report \
+		--trace /tmp/repro_trace_flight_smoke.jsonl \
+		--flight /tmp/repro_flight_smoke.jsonl
+
+# full-size regression gate: rerun the obs bench at the committed scale and
+# compare against BENCH_obs.json (pass flags, percentile ordering, and
+# throughput within 20% of baseline — scripts/bench_compare.py)
+bench-check:
+	PYTHONPATH=src python benchmarks/obs_bench.py \
+		--out /tmp/repro_bench_obs_fresh.json
+	python scripts/bench_compare.py /tmp/repro_bench_obs_fresh.json \
+		BENCH_obs.json

@@ -23,7 +23,12 @@ back from the trace recorder (exact numpy quantiles over span durations).
 Every server also writes its spans to a JSONL trace which is validated
 against scripts/trace_schema.py — `pass_spans_valid` gates on it — and the
 cumulative engine telemetry counters (push/pull edges scanned) ride along
-per cell so the record ties latencies to work volume.
+per cell so the record ties latencies to work volume. Each cell also
+carries the §14 diagnostics when populated: the per-shard scan-volume
+`imbalance` block (raw shard edges + max/mean skew) and the push/pull
+consensus decision-`audit` summary; each placement records its streaming
+health snapshot (P² quantiles + windowed goodput), validated by
+`trace_schema.check_health` (`pass_health_valid`).
 
   PYTHONPATH=src python benchmarks/obs_bench.py [--small]
 
@@ -129,16 +134,27 @@ def run_placement(name, g, pack, *, slots, mesh_shape, requests, warmup,
             "queue_wait": _percentiles([d["queue_wait_s"] for d in durs]),
             "resident": _percentiles([d["resident_s"] for d in durs]),
         }
-        tele = srv.stats()["pools"][algo].get("tele")
+        pool_stats = srv.stats()["pools"][algo]
+        tele = pool_stats.get("tele")
         if tele is not None:
             cell["tele"] = tele                # cumulative engine counters
+        imb = pool_stats.get("imbalance")
+        if imb is not None:
+            # per-shard scan-volume plane + max/mean skew (DESIGN.md §14)
+            cell["imbalance"] = imb
+        audit = pool_stats.get("audit")
+        if audit is not None:
+            # push/pull consensus decision-audit summary
+            cell["audit"] = audit
         cells[algo] = cell
         print(f"[obs_bench] {name:8s} {algo:9s} "
               f"p50={cell['total']['p50_seconds'] * 1e3:8.1f}ms "
               f"p99={cell['total']['p99_seconds'] * 1e3:8.1f}ms "
-              f"goodput={cell['goodput_qps']:7.1f} q/s")
+              f"goodput={cell['goodput_qps']:7.1f} q/s"
+              + (f" skew={imb['skew']:.2f}" if imb else ""))
+    health = srv.stats().get("health")
     srv.obs.close()
-    return cells
+    return cells, health
 
 
 def main(argv=None) -> int:
@@ -170,12 +186,19 @@ def main(argv=None) -> int:
     }
     results = {}
     traces = {}
+    health = {}
     for name, cfg in configs.items():
         traces[name] = f"/tmp/repro_obs_bench_{name}.jsonl"
-        results[name] = run_placement(
+        results[name], health[name] = run_placement(
             name, g, pack, slots=cfg["slots"], mesh_shape=cfg["mesh_shape"],
             requests=args.requests, warmup=args.warmup, seed=args.seed + 1,
             trace_path=traces[name])
+
+    health_errs: list = []
+    for name, h in health.items():
+        trace_schema.check_health(h, f"health[{name}]", health_errs)
+    for e in health_errs:
+        print(f"[obs_bench] {e}")
 
     span_errs = []
     for name, path in traces.items():
@@ -201,17 +224,21 @@ def main(argv=None) -> int:
                        "(structure, not device speedup — DESIGN.md §6)",
         },
         "results": results,
+        "health": health,
         "pass_spans_valid": not span_errs,
         "pass_percentiles_ordered": bool(ordered),
+        "pass_health_valid": not health_errs,
     }
     with open(args.out, "w") as f:
         json.dump(rec, f, indent=2)
         f.write("\n")
     print(f"[obs_bench] wrote {args.out} "
           f"(spans_valid={rec['pass_spans_valid']}, "
-          f"percentiles_ordered={rec['pass_percentiles_ordered']})")
+          f"percentiles_ordered={rec['pass_percentiles_ordered']}, "
+          f"health_valid={rec['pass_health_valid']})")
     return 0 if (rec["pass_spans_valid"]
-                 and rec["pass_percentiles_ordered"]) else 1
+                 and rec["pass_percentiles_ordered"]
+                 and rec["pass_health_valid"]) else 1
 
 
 if __name__ == "__main__":

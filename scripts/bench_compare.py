@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Regression gate: compare a fresh bench record against a committed one.
+
+The BENCH_*.json records at the repo root are rerun rarely and cited often;
+this gate catches the failure mode where a change silently degrades the
+serving stack but nobody reruns the full bench. Given a FRESH record (e.g.
+`obs_bench.py --small --out /tmp/fresh.json`) and the committed BASELINE:
+
+  * every `pass_*` flag that is true in the baseline must be true in the
+    fresh record (a gate the repo already passed may not regress);
+  * every percentile block (p50/p95/p99_seconds) in the fresh record must
+    stay ordered (reuses bench_schema's walker);
+  * **throughput**: when the two records measured the SAME graph (equal
+    `graph.n_nodes` / `graph.n_edges`), every `*_qps` value present at the
+    same path in both must be within `--tolerance` (default 20%) below the
+    baseline — faster is always fine. Records from different graph sizes
+    (the cheap `--small` smoke vs a committed full run) are compared
+    structure-only: flags + ordering, no number-vs-number gate.
+
+Usage: python scripts/bench_compare.py FRESH.json BASELINE.json [--tolerance 0.2]
+Exit 0 = no regression, 1 = regression, 2 = usage/IO error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import bench_schema
+
+
+def _collect(node, path, out, pred):
+    """Flatten {path: value} for scalar leaves whose key matches pred."""
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _collect(v, f"{path}.{k}", out, pred)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _collect(v, f"{path}[{i}]", out, pred)
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        if pred(path.rsplit(".", 1)[-1]):
+            out[path] = float(node)
+
+
+def _flags(node, path, out):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            if k.startswith("pass_") and isinstance(v, bool):
+                out[f"{path}.{k}"] = v
+            else:
+                _flags(v, f"{path}.{k}", out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _flags(v, f"{path}[{i}]", out)
+
+
+def compare(fresh: dict, baseline: dict, tolerance: float) -> list:
+    errs: list = []
+
+    # 1. pass flags: anything the baseline passed must still pass
+    ff, bf = {}, {}
+    _flags(fresh, "fresh", ff)
+    _flags(baseline, "base", bf)
+    for path, ok in sorted(bf.items()):
+        fpath = path.replace("base", "fresh", 1)
+        if ok and ff.get(fpath) is False:
+            errs.append(f"{fpath}: pass flag regressed (baseline true)")
+
+    # 2. percentile ordering in the fresh record
+    bench_schema._walk_percentiles(fresh, "fresh", errs)
+
+    # 3. throughput, only when both runs measured the same graph
+    fg = fresh.get("graph") or {}
+    bg = baseline.get("graph") or {}
+    same_graph = (fg.get("n_nodes") == bg.get("n_nodes")
+                  and fg.get("n_edges") == bg.get("n_edges")
+                  and fg.get("n_nodes") is not None)
+    if not same_graph:
+        return errs, False
+
+    is_qps = lambda k: k.endswith("_qps")    # noqa: E731
+    fq, bq = {}, {}
+    _collect(fresh, "", fq, is_qps)
+    _collect(baseline, "", bq, is_qps)
+    for path, base_v in sorted(bq.items()):
+        fresh_v = fq.get(path)
+        if fresh_v is None or base_v <= 0:
+            continue
+        if fresh_v < base_v * (1.0 - tolerance):
+            errs.append(
+                f"{path.lstrip('.')}: throughput regressed "
+                f"{base_v:.1f} -> {fresh_v:.1f} q/s "
+                f"(> {tolerance:.0%} below baseline)")
+    return errs, True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional throughput drop (default 0.2)")
+    args = ap.parse_args(argv)
+    recs = []
+    for p in (args.fresh, args.baseline):
+        try:
+            with open(p) as f:
+                recs.append(json.load(f))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[bench_compare] {p}: unreadable ({e})", file=sys.stderr)
+            return 2
+    errs, compared_qps = compare(recs[0], recs[1], args.tolerance)
+    mode = ("throughput+structure" if compared_qps
+            else "structure-only (different graphs)")
+    if errs:
+        print(f"[bench_compare] {args.fresh} vs {args.baseline} [{mode}]: "
+              f"{len(errs)} regression(s)")
+        for e in errs:
+            print(f"[bench_compare]   {e}")
+        return 1
+    print(f"[bench_compare] {args.fresh} vs {args.baseline} [{mode}]: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -104,6 +104,19 @@ python -m repro.launch.serve_graph --requests 8 --slots 4 --scale 8 \
     --trace /tmp/repro_trace_check.jsonl
 python scripts/trace_schema.py /tmp/repro_trace_check.jsonl
 
+echo "== flight-record smoke: armed ring -> JSONL -> schema + report =="
+# arm the §14 flight recorder on a deadline-pressured replay, dump the
+# event ring, validate the dump (monotonic t, increasing seq, known kinds)
+# and render the post-mortem report from the two artifacts
+python -m repro.launch.slo_replay --scale 8 --rate 40 --duration 2 \
+    --slots 4 --assert-goodput \
+    --trace /tmp/repro_trace_flight_check.jsonl \
+    --flight-record /tmp/repro_flight_check.jsonl
+python scripts/trace_schema.py --flight /tmp/repro_flight_check.jsonl
+python -m repro.launch.obs_report \
+    --trace /tmp/repro_trace_flight_check.jsonl \
+    --flight /tmp/repro_flight_check.jsonl > /dev/null
+
 echo "== slo smoke: bursty open-loop replay + deadline policy (4-dev mesh) =="
 # seeded MMPP arrivals with per-query deadlines replayed open-loop against
 # a sharded server on the forced host mesh; --assert-goodput fails the
@@ -120,5 +133,14 @@ python scripts/trace_schema.py /tmp/repro_trace_slo_check.jsonl
 
 echo "== bench schema (BENCH_*.json incl. BENCH_slo.json) =="
 python scripts/bench_schema.py
+
+echo "== bench compare: fresh small obs bench vs committed baseline =="
+# regression gate (scripts/bench_compare.py): rerun the obs bench at smoke
+# size and diff it against the committed record — pass flags may not
+# regress and percentile blocks must stay ordered; the throughput gate
+# only arms when graph sizes match (a full `make bench-check` run)
+python benchmarks/obs_bench.py --small --out /tmp/repro_bench_obs_fresh.json
+python scripts/bench_compare.py /tmp/repro_bench_obs_fresh.json \
+    BENCH_obs.json
 
 echo "== check OK =="

@@ -11,14 +11,20 @@
 # and reports per-config pass/fail tallies. On a failing run the
 # instrumented test dumps full rank/resid/deg state to
 # /tmp/repro_flake_residual_dump.npz (preserved per-config here as
-# /tmp/repro_flake_dump_t<threads>_r<run>.npz) for offline diffing.
+# /tmp/repro_flake_dump_t<threads>_r<run>.npz) for offline diffing, plus —
+# because REPRO_FLIGHT_RECORD arms the process-global flight recorder
+# (DESIGN.md §14) — the streaming-path event timeline as
+# /tmp/repro_flake_residual_events.jsonl (preserved alongside as
+# /tmp/repro_flake_events_t<threads>_r<run>.jsonl).
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export REPRO_FLIGHT_RECORD=1
 RUNS="${1:-10}"
 TEST="tests/test_ppr_delta.py::test_residual_correct_keeps_parallel_edge_multiplicity"
 DUMP=/tmp/repro_flake_residual_dump.npz
+EVENTS=/tmp/repro_flake_residual_events.jsonl
 
 overall=0
 for threads in 1 2 4 8 0; do
@@ -32,13 +38,15 @@ for threads in 1 2 4 8 0; do
     fi
     fails=0
     for run in $(seq 1 "$RUNS"); do
-        rm -f "$DUMP"
+        rm -f "$DUMP" "$EVENTS"
         if ! XLA_FLAGS="$flags" python -m pytest "$TEST" -x -q \
                 >/tmp/repro_flake_hunt_last.log 2>&1; then
             fails=$((fails + 1))
             overall=1
             [ -f "$DUMP" ] && cp "$DUMP" \
                 "/tmp/repro_flake_dump_t${label}_r${run}.npz"
+            [ -f "$EVENTS" ] && cp "$EVENTS" \
+                "/tmp/repro_flake_events_t${label}_r${run}.jsonl"
             echo "[flake_hunt] threads=$label run=$run FAILED" \
                  "(log: /tmp/repro_flake_hunt_last.log)"
             tail -5 /tmp/repro_flake_hunt_last.log | sed 's/^/    /'

@@ -24,7 +24,16 @@ documents:
     queue) may lack an `admit` event; a preempt-then-evicted drop keeps its
     `admit` and `preempt` events.
 
+With `--flight`, the files are validated as FLIGHT-RECORD dumps instead
+(`GraphServer.dump_flight_record` / `repro.obs.recorder`, DESIGN.md §14):
+one event object per line, each carrying a finite non-decreasing `t`, a
+strictly increasing integer `seq` (gaps are legal — the bounded ring
+dropped events — regressions are not), and a `kind` drawn from the
+recorder's event taxonomy. An empty flight dump is legal (unarmed recorder
+writes an empty file).
+
 Usage: python scripts/trace_schema.py TRACE.jsonl [more.jsonl...]
+       python scripts/trace_schema.py --flight FLIGHT.jsonl [...]
 """
 
 from __future__ import annotations
@@ -39,6 +48,21 @@ LIFECYCLE = ("submit", "admit", "harvest", "complete")
 MODES = ("push", "pull")
 SLO_FLAGS = ("deadline_missed", "dropped", "degraded", "preempted")
 EPS = 1e-6
+
+try:                                    # keep the taxonomy single-sourced…
+    from repro.obs.recorder import EVENT_KINDS
+except ImportError:                     # …but run without PYTHONPATH=src
+    EVENT_KINDS = frozenset({
+        "admit", "resume", "harvest", "preempt", "drop", "degrade",
+        "mode_switch", "compact_overflow", "update_swap", "cache_hit",
+        "crash", "drain_stuck", "imbalance", "stream_apply", "incremental",
+        "flake_dump",
+    })
+
+#: required keys of a health snapshot (stats()["health"] when enabled)
+HEALTH_LATENCY = ("p50_s", "p95_s", "p99_s", "n")
+HEALTH_WINDOW = ("completions", "deadline_missed", "miss_rate", "burn_per_s",
+                 "goodput", "dropped")
 
 
 def _check_slo(slo, where: str, errs: list) -> bool:
@@ -114,6 +138,100 @@ def check_span(rec: dict, where: str, errs: list) -> None:
                             f"non-negative int, got {it[k]!r}")
 
 
+def check_health(health, where: str, errs: list) -> None:
+    """Validate a health snapshot block (ReplayReport.health /
+    stats()["health"]): P² latency quantiles must be finite, ordered
+    p50 <= p95 <= p99 (NaN legal only when n == 0), window rates must be
+    fractions in [0, 1] with non-negative counts."""
+    if not isinstance(health, dict):
+        errs.append(f"{where}: health must be an object")
+        return
+    if not health.get("enabled"):
+        return
+    lat = health.get("latency")
+    win = health.get("window")
+    if not isinstance(lat, dict) or not isinstance(win, dict):
+        errs.append(f"{where}: enabled health needs latency+window objects")
+        return
+    for k in HEALTH_LATENCY:
+        if k not in lat:
+            errs.append(f"{where}: health.latency missing {k!r}")
+    for k in HEALTH_WINDOW:
+        if k not in win:
+            errs.append(f"{where}: health.window missing {k!r}")
+    n = lat.get("n", 0)
+    qs = [lat.get(k) for k in ("p50_s", "p95_s", "p99_s")]
+    if isinstance(n, int) and n > 0:
+        for k, v in zip(("p50_s", "p95_s", "p99_s"), qs):
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v >= 0):
+                errs.append(f"{where}: health.latency.{k} must be finite "
+                            f">= 0 with n={n}, got {v!r}")
+        if all(isinstance(v, (int, float)) and math.isfinite(v) for v in qs):
+            if not (qs[0] <= qs[1] + EPS and qs[1] <= qs[2] + EPS):
+                errs.append(f"{where}: health quantiles regress: {qs}")
+    for k in ("miss_rate", "goodput"):
+        v = win.get(k)
+        if not (isinstance(v, (int, float)) and math.isfinite(v)
+                and 0.0 <= v <= 1.0):
+            errs.append(f"{where}: health.window.{k} must be in [0,1], "
+                        f"got {v!r}")
+    for k in ("completions", "deadline_missed", "dropped"):
+        v = win.get(k)
+        if not (isinstance(v, int) and v >= 0):
+            errs.append(f"{where}: health.window.{k} must be a "
+                        f"non-negative int, got {v!r}")
+
+
+def check_flight(path: str) -> tuple:
+    """Validate one flight-record JSONL dump; returns (n_events, errs)."""
+    errs: list = []
+    n = 0
+    last_t = None
+    last_seq = None
+    try:
+        with open(path) as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                where = f"{path}:{lineno}"
+                try:
+                    ev = json.loads(line)
+                except json.JSONDecodeError as e:
+                    errs.append(f"{where}: bad JSON ({e})")
+                    continue
+                n += 1
+                if not isinstance(ev, dict):
+                    errs.append(f"{where}: event must be an object")
+                    continue
+                t = ev.get("t")
+                if not (isinstance(t, (int, float)) and math.isfinite(t)
+                        and t >= 0):
+                    errs.append(f"{where}: bad event time {t!r}")
+                elif last_t is not None and t < last_t - EPS:
+                    errs.append(f"{where}: event time regresses "
+                                f"{last_t} -> {t}")
+                else:
+                    last_t = t
+                seq = ev.get("seq")
+                if not (isinstance(seq, int) and seq >= 0):
+                    errs.append(f"{where}: bad seq {seq!r}")
+                elif last_seq is not None and seq <= last_seq:
+                    # gaps are legal (ring wrapped); regressions are not
+                    errs.append(f"{where}: seq not increasing "
+                                f"{last_seq} -> {seq}")
+                else:
+                    last_seq = seq
+                kind = ev.get("kind")
+                if kind not in EVENT_KINDS:
+                    errs.append(f"{where}: unknown event kind {kind!r}")
+    except OSError as e:
+        return 0, [f"{path}: unreadable ({e})"]
+    # an empty dump is legal: an unarmed recorder writes an empty file
+    return n, errs
+
+
 def check(path: str) -> tuple:
     errs: list = []
     n = 0
@@ -147,14 +265,20 @@ def check(path: str) -> tuple:
 
 
 def main(argv=None) -> int:
-    paths = argv or []
+    paths = list(argv or [])
+    flight = "--flight" in paths
+    if flight:
+        paths.remove("--flight")
     if not paths:
-        print("usage: trace_schema.py TRACE.jsonl [...]", file=sys.stderr)
+        print("usage: trace_schema.py [--flight] TRACE.jsonl [...]",
+              file=sys.stderr)
         return 2
     all_errs = []
+    unit = "event" if flight else "span"
     for p in paths:
-        n, errs = check(p)
-        status = f"{n} span(s) OK" if not errs else f"{len(errs)} problem(s)"
+        n, errs = (check_flight if flight else check)(p)
+        status = (f"{n} {unit}(s) OK" if not errs
+                  else f"{len(errs)} problem(s)")
         print(f"[trace_schema] {p}: {status}")
         all_errs.extend(errs)
     for e in all_errs:

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core import algorithms as alg
 from repro.graph import generators, pack_ell
+from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
 from repro.serving import (
     GraphServer,
     Placement,
@@ -66,14 +67,7 @@ def main(argv=None):
     ap.add_argument("--placement", default="replicated",
                     choices=("replicated", "edge_sharded"),
                     help="pool placement on the --mesh")
-    ap.add_argument("--trace", default="",
-                    help="write per-request lifecycle spans (queue-wait / "
-                         "resident / total + per-iteration push-pull modes "
-                         "and frontier volumes) as JSON lines to this path; "
-                         "implies --telemetry")
-    ap.add_argument("--telemetry", action="store_true",
-                    help="enable the unified telemetry layer (engine "
-                         "counters, lifecycle metrics, stats() obs section)")
+    add_obs_cli_args(ap)
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="attach this latency SLO to every query and drop "
                          "already-expired queued queries (DESIGN.md §13); "
@@ -116,8 +110,7 @@ def main(argv=None):
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
         result_fields={"ppr": "rank", "ppr_delta": "rank"},
         mesh=mesh, placements=placements,
-        telemetry=args.telemetry or bool(args.trace),
-        trace=args.trace or None,
+        obs=obs_from_cli(args),
         slo=SLOPolicy() if deadline_ms is not None else None,
     )
 
@@ -140,7 +133,6 @@ def main(argv=None):
         submitted += 1
     comps = srv.drain()
     dt = time.time() - t0
-    srv.obs.close()
 
     stats = srv.stats()
     assert len(comps) == args.requests, (len(comps), args.requests)
@@ -171,9 +163,13 @@ def main(argv=None):
                 print(f"[serve_graph]   latency {name}: "
                       f"p50={s['p50'] * 1e3:.1f}ms p95={s['p95'] * 1e3:.1f}ms "
                       f"p99={s['p99'] * 1e3:.1f}ms (n={s['count']})")
-        spans = stats["obs"]["spans"]
-        print(f"[serve_graph] telemetry: {spans['emitted']} spans emitted"
-              + (f" -> {args.trace}" if args.trace else ""))
+        for name, p in stats["pools"].items():
+            imb = p.get("imbalance")
+            if imb:
+                print(f"[serve_graph]   imbalance {name}: "
+                      f"skew={imb['skew']:.2f} "
+                      f"shard_edges={imb['shard_edges']}")
+    finish_obs_cli(srv, args, "serve_graph")
     for c in comps[:3]:
         head = ("DROPPED" if c.result is None
                 else np.array2string(c.result[:4], precision=3))

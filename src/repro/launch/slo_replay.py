@@ -27,6 +27,7 @@ import json
 from repro.core import algorithms as alg
 from repro.graph import pack_ell
 from repro.launch.serve_graph import build_graph
+from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
 from repro.serving import GraphServer, Placement, default_config, make_serving_mesh
 from repro.slo import SLOPolicy, TenantClass, Workload, generate, replay, warmup
 
@@ -57,10 +58,9 @@ def main(argv=None):
                          "consensus — the host-stepped serving loop requires "
                          "it; tail isolation comes from --cohorts on "
                          "single-device pools); empty = single-device")
-    ap.add_argument("--trace", default="",
-                    help="write lifecycle spans (with slo outcomes) as JSON "
-                         "lines to this path")
-    ap.add_argument("--telemetry", action="store_true")
+    add_obs_cli_args(
+        ap, trace_help="write lifecycle spans (with slo outcomes) as JSON "
+                       "lines to this path")
     ap.add_argument("--assert-goodput", action="store_true",
                     help="exit 1 unless goodput > 0 and crashed_lanes == 0")
     ap.add_argument("--json", action="store_true",
@@ -119,12 +119,11 @@ def main(argv=None):
         cohorts=None if args.cohorts <= 1 else {
             a: args.cohorts for a in programs},
         slo=policy,
-        telemetry=args.telemetry or bool(args.trace),
-        trace=args.trace or None,
+        obs=obs_from_cli(args),
     )
     warmup(srv, {a: 1 for a in programs})
     report = replay(srv, arrivals, max_wall_s=4 * args.duration + 60)
-    srv.obs.close()
+    finish_obs_cli(srv, args, "slo_replay")
 
     rep = report.to_json()
     if args.json:
@@ -141,6 +140,13 @@ def main(argv=None):
             print(f"[slo_replay] latency p50={t['p50_seconds'] * 1e3:.1f}ms "
                   f"p95={t['p95_seconds'] * 1e3:.1f}ms "
                   f"p99={t['p99_seconds'] * 1e3:.1f}ms (n={t['n']})")
+        h = report.health
+        if h and h.get("enabled"):
+            lat, win = h["latency"], h["window"]
+            print(f"[slo_replay] health: p²-p50={lat['p50_s'] * 1e3:.1f}ms "
+                  f"p²-p99={lat['p99_s'] * 1e3:.1f}ms "
+                  f"window goodput={win['goodput']:.3f} "
+                  f"burn={win['burn_per_s']:.2f}/s")
     if args.assert_goodput:
         ok = report.goodput > 0 and report.crashed_lanes == 0
         print(f"[slo_replay] smoke gate: goodput>0 and zero crashed lanes -> "

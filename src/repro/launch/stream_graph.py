@@ -29,6 +29,7 @@ import time
 import numpy as np
 
 from repro.core import algorithms as alg
+from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
 from repro.serving import (
     GraphServer,
     Placement,
@@ -79,12 +80,10 @@ def main(argv=None):
     ap.add_argument("--placement", default="replicated",
                     choices=("replicated", "edge_sharded"),
                     help="pool placement on the --mesh")
-    ap.add_argument("--trace", default="",
-                    help="write per-request lifecycle spans as JSON lines "
-                         "to this path (implies --telemetry); spans carry "
-                         "the graph version each request completed on")
-    ap.add_argument("--telemetry", action="store_true",
-                    help="enable the unified telemetry layer")
+    add_obs_cli_args(
+        ap, trace_help="write per-request lifecycle spans as JSON lines "
+                       "to this path (implies --telemetry); spans carry "
+                       "the graph version each request completed on")
     args = ap.parse_args(argv)
 
     g = build_graph(args.graph, args.scale, args.edge_factor, args.seed)
@@ -121,8 +120,7 @@ def main(argv=None):
         cache_capacity=args.cache_cap, delta_cap=args.delta_cap,
         result_fields={"ppr": "rank", "ppr_delta": "rank"},
         mesh=mesh, placements=placements,
-        telemetry=args.telemetry or bool(args.trace),
-        trace=args.trace or None,
+        obs=obs_from_cli(args),
     )
     # version -> overlay views, for --verify of historical completions.
     # Only kept under --verify: each version pins full-size device arrays,
@@ -159,13 +157,9 @@ def main(argv=None):
                   f"rebuild={st['rebuild']}")
     comps = srv.drain()
     dt = time.time() - t0
-    srv.obs.close()
 
     stats = srv.stats()
-    if srv.obs.enabled:
-        spans = stats["obs"]["spans"]
-        print(f"[stream_graph] telemetry: {spans['emitted']} spans emitted"
-              + (f" -> {args.trace}" if args.trace else ""))
+    finish_obs_cli(srv, args, "stream_graph")
     print(f"[stream_graph] {len(comps)} completions in {dt:.2f}s "
           f"({len(comps) / dt:.1f} q/s) across "
           f"{stats['updates']} update batches "

@@ -1,16 +1,25 @@
 """`repro.obs` — unified telemetry for the serving stack (DESIGN.md §12).
 
-Three pieces, one enable switch:
+Five pieces, one enable switch:
 
-  metrics.py -- host-side registry: counters, gauges, fixed-bucket
-                histograms with interpolated p50/p95/p99 summaries.
-  trace.py   -- request-lifecycle spans (submit -> admit -> harvest ->
-                complete) exported as JSON lines.
-  (engine)   -- per-iteration device counters: the batched engines carry an
-                optional `BatchState.tele` accumulator (see TELE_* indices
-                below) and the scheduler harvests one small packed array
-                per pump — ONE device->host transfer per pool per
-                iteration, never per lane.
+  metrics.py  -- host-side registry: counters, gauges, fixed-bucket
+                 histograms with interpolated p50/p95/p99 summaries.
+  trace.py    -- request-lifecycle spans (submit -> admit -> harvest ->
+                 complete) exported as JSON lines.
+  recorder.py -- flight recorder: always-cheap bounded ring of host-side
+                 scheduler/engine/streaming events with post-mortem JSONL
+                 export (DESIGN.md §14). Host-only, so it may be armed
+                 independently of the telemetry switch without costing a
+                 transfer.
+  health.py   -- streaming SLO health: P² latency quantiles + windowed
+                 deadline-miss burn rate / goodput / queue-depth gauges
+                 (stats()["health"]).
+  (engine)    -- per-iteration device counters: the batched engines carry an
+                 optional `BatchState.tele` accumulator (see TELE_* indices
+                 below) plus a trailing per-shard scan-volume plane, and the
+                 scheduler harvests one small packed array per pump — ONE
+                 device->host transfer per pool per iteration, never per
+                 lane or per shard.
 
 Everything funnels through :class:`Observability`, which `GraphServer`
 owns. Disabled (`enabled=False`, the default construction), every hook is
@@ -41,6 +50,15 @@ from repro.obs.trace import (  # noqa: F401
     TraceRecorder,
     iters_from_trace,
 )
+from repro.obs import recorder as _recorder
+from repro.obs.health import HealthMonitor, P2Quantile  # noqa: F401
+from repro.obs.recorder import (  # noqa: F401
+    EVENT_KINDS,
+    FlightRecorder,
+    arm_global,
+    dump_global,
+    record_global,
+)
 
 # ---------------------------------------------------------------------------
 # engine telemetry accumulator layout (BatchState.tele, (TELE_LEN,) int32)
@@ -64,6 +82,15 @@ TELE_MASKED_DENSE = 4
 TELE_MASKED_ROWS = 5
 TELE_LEN = 6
 
+# An enabled accumulator is (TELE_LEN + n_shards,) int32: the first TELE_LEN
+# entries are the named global counters above; the trailing `n_shards`
+# entries are the per-shard scan-volume plane (cumulative push+pull edges
+# scanned by each shard — 'data' rows for replicated pools, 'model' columns
+# for edge-sharded pools, a single slot on one device).  The plane rides the
+# same replicated spec, increment psums and packed pump transfer as the
+# named counters, so workload-imbalance profiling costs zero extra
+# collectives and zero extra transfers (DESIGN.md §14).
+
 TELE_FIELDS = (
     "push_edges_scanned",
     "pull_edges_scanned",
@@ -82,11 +109,33 @@ SLO_FIELDS = ("deadline_missed", "dropped", "degraded", "preempted")
 
 
 def tele_dict(tele) -> dict:
-    """Name a (TELE_LEN,) accumulator vector (host ints)."""
+    """Name the global counters of an accumulator vector (host ints).
+
+    Accepts the legacy (TELE_LEN,) shape or the widened
+    (TELE_LEN + n_shards,) one; the per-shard plane is read separately via
+    :func:`shard_plane` so this dict's keys stay exactly TELE_FIELDS."""
     if tele is None:
         return {}
-    vals = [int(x) for x in np.asarray(tele)]
+    vals = [int(x) for x in np.asarray(tele)[:TELE_LEN]]
     return dict(zip(TELE_FIELDS, vals))
+
+
+def shard_plane(tele) -> np.ndarray:
+    """Per-shard cumulative scanned-edge plane of an accumulator (may be
+    empty for legacy (TELE_LEN,) vectors)."""
+    if tele is None:
+        return np.zeros((0,), np.int64)
+    return np.asarray(tele)[TELE_LEN:].astype(np.int64)
+
+
+def skew_ratio(plane) -> float:
+    """Workload skew: max/mean of per-shard scanned edges (1.0 = balanced;
+    0.0 when nothing was scanned or the plane is empty)."""
+    plane = np.asarray(plane, np.float64)
+    if plane.size == 0:
+        return 0.0
+    mean = float(plane.mean())
+    return float(plane.max() / mean) if mean > 0 else 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -109,14 +158,37 @@ def device_fetch(x) -> np.ndarray:
 class Observability:
     """One switch, one registry, one trace recorder — what `GraphServer`
     threads through the serving stack. `trace` is a path or writable text
-    file; passing one implies enabled."""
+    file; passing one implies enabled.
+
+    `flight` arms the flight recorder: pass a :class:`FlightRecorder`, or
+    True for a fresh default-capacity ring.  When unset, the process-global
+    recorder (armed via REPRO_FLIGHT_RECORD / :func:`arm_global`) is
+    adopted if present, so library callers' scheduler events land in the
+    same timeline as streaming/flake events.  The recorder is host-only and
+    deliberately NOT tied to `enabled` — arming it on a telemetry-disabled
+    server stays transfer-free and bit-neutral.
+
+    `health` gates the streaming SLO monitor (defaults to `enabled`);
+    `health_window_s` is its sliding-window width."""
 
     def __init__(self, enabled: bool = False, trace=None,
-                 keep_spans: int = 1024, name: str = "g0"):
+                 keep_spans: int = 1024, name: str = "g0",
+                 flight=None, flight_capacity: int = 4096,
+                 health: Optional[bool] = None,
+                 health_window_s: float = 10.0):
         self.enabled = bool(enabled) or trace is not None
         self.registry = MetricsRegistry(enabled=self.enabled)
         self.tracer = TraceRecorder(enabled=self.enabled, sink=trace,
                                     keep=keep_spans, name=name)
+        if isinstance(flight, FlightRecorder):
+            self.flight: Optional[FlightRecorder] = flight
+        elif flight:
+            self.flight = FlightRecorder(capacity=flight_capacity)
+        else:
+            self.flight = _recorder.GLOBAL
+        self.health = HealthMonitor(
+            enabled=self.enabled if health is None else bool(health),
+            window_s=health_window_s)
 
     def close(self) -> None:
         self.tracer.close()
@@ -124,11 +196,17 @@ class Observability:
     def snapshot(self) -> dict:
         if not self.enabled:
             return {"enabled": False}
-        return {
+        out = {
             "enabled": True,
             "metrics": self.registry.snapshot(),
             "spans": self.tracer.stats(),
+            "health": self.health.snapshot(),
         }
+        if self.flight is not None:
+            out["flight"] = {"events": len(self.flight),
+                             "seq": self.flight.seq,
+                             "capacity": self.flight.capacity}
+        return out
 
 
 __all__ = [
@@ -144,6 +222,15 @@ __all__ = [
     "MODE_NAMES",
     "device_fetch",
     "tele_dict",
+    "shard_plane",
+    "skew_ratio",
+    "FlightRecorder",
+    "EVENT_KINDS",
+    "arm_global",
+    "record_global",
+    "dump_global",
+    "HealthMonitor",
+    "P2Quantile",
     "default_latency_buckets",
     "default_count_buckets",
     "TELE_LEN",

@@ -190,6 +190,68 @@ class TraceRecorder:
                 "kept": len(self.finished)}
 
 
+# ---------------------------------------------------------------------------
+# shared CLI plumbing (serve_graph / stream_graph / slo_replay)
+# ---------------------------------------------------------------------------
+
+def add_obs_cli_args(ap, trace_help: Optional[str] = None) -> None:
+    """Install the shared observability flags on an argparse parser.
+
+    Every serving CLI gets the same trio: `--trace PATH` (lifecycle spans as
+    JSON lines, implies telemetry), `--telemetry` (the §12 switch), and
+    `--flight-record PATH` (arm the §14 flight recorder; its ring is dumped
+    to PATH at exit and automatically on lane crash)."""
+    ap.add_argument("--trace", default="",
+                    help=trace_help or
+                    "write per-request lifecycle spans (queue-wait / "
+                    "resident / total + per-iteration push-pull modes and "
+                    "frontier volumes) as JSON lines to this path; implies "
+                    "--telemetry")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the unified telemetry layer (engine "
+                         "counters, lifecycle metrics, stats() obs section)")
+    ap.add_argument("--flight-record", default="", metavar="PATH",
+                    help="arm the flight recorder (bounded host-side event "
+                         "ring: admits, harvests, drops, mode switches, "
+                         "update swaps) and dump it to PATH at exit; "
+                         "host-only, works with telemetry off")
+
+
+def obs_from_cli(args, name: str = "g0"):
+    """Build the `Observability` a CLI passes to GraphServer(obs=...).
+
+    `--flight-record` arms the PROCESS-GLOBAL ring (not a private one) so
+    scheduler events and the streaming-path `stream_apply`/`incremental`
+    events land in a single interleaved timeline."""
+    from repro.obs import Observability  # late: repro.obs imports this module
+    flight = None
+    if getattr(args, "flight_record", ""):
+        from repro.obs import recorder
+        flight = recorder.arm_global()
+    return Observability(
+        enabled=bool(getattr(args, "telemetry", False)) or bool(args.trace),
+        trace=args.trace or None,
+        flight=flight,
+        name=name,
+    )
+
+
+def finish_obs_cli(srv, args, tag: str) -> None:
+    """Shared CLI epilogue: close sinks, report spans, dump the flight ring.
+
+    This is the block that used to be copy-pasted across serve_graph /
+    stream_graph / slo_replay."""
+    srv.obs.close()
+    if srv.obs.enabled:
+        spans = srv.obs.tracer.stats()
+        print(f"[{tag}] telemetry: {spans['emitted']} spans emitted"
+              + (f" -> {args.trace}" if args.trace else ""))
+    path = getattr(args, "flight_record", "")
+    if path:
+        n = srv.dump_flight_record(path)
+        print(f"[{tag}] flight record: {n} events -> {path}")
+
+
 def iters_from_trace(mode_row, counts, union_fes) -> List[dict]:
     """Assemble a span's per-iteration list from the harvested machinery:
     `mode_row` is the lane's mode-trace row (int8, -1 = unused slot),

@@ -113,9 +113,11 @@ class BatchState(NamedTuple):
     #: frontiers already capture every change, and the tol-thresholded pull
     #: programs (ppr/pagerank) keep the documented frozen-drift semantics.
     hot: Optional[jnp.ndarray] = None
-    #: (TELE_LEN,) int32 — cumulative engine telemetry counters (edges
-    #: scanned per direction, masked-pull / shard-compaction fallback
-    #: events; layout in repro/obs/__init__.py). None when telemetry is off
+    #: (TELE_LEN + n_shards,) int32 — cumulative engine telemetry counters
+    #: (edges scanned per direction, masked-pull / shard-compaction fallback
+    #: events; layout in repro/obs/__init__.py) followed by the per-shard
+    #: scan-volume plane (cumulative edges scanned by each shard; one slot
+    #: on a single device). None when telemetry is off
     #: (`init_batch(telemetry=False)`, the default): the loop then carries
     #: no extra state and executes no extra ops — the telemetry-disabled
     #: overhead guard in tests/test_obs.py pins this.
@@ -404,6 +406,13 @@ def make_batched_step(program: ACCProgram, g: Graph, pack: EllPack,
                 lambda s: _push_step(program, g.out, cfg, s, delta),
                 st,
             )
+        if st.tele is not None and st.tele.shape[0] > TELE_LEN:
+            # single-device per-shard plane: mirror this iteration's scan
+            # volume into the (only) shard slot so tele[TELE_LEN:] always
+            # equals the per-shard decomposition of the global counters
+            inc = new.tele - st.tele
+            scan = inc[TELE_PUSH_EDGES] + inc[TELE_PULL_EDGES]
+            new = new._replace(tele=new.tele.at[TELE_LEN].add(scan))
         return _policy(program, cfg, g.n_edges, new)
 
     return step
@@ -419,7 +428,8 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
                check_caps: bool = True,
                delta: Optional[EdgeDelta] = None,
                deg: Optional[jnp.ndarray] = None,
-               telemetry: bool = False) -> BatchState:
+               telemetry: bool = False,
+               tele_shards: int = 1) -> BatchState:
     """Stack Q fresh query states (one per source), vertex-major.
 
     `done` marks lanes to create as empty/inactive (the scheduler starts
@@ -439,6 +449,9 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
     `telemetry=True` seeds the cumulative `tele` counter vector (layout in
     repro/obs) that the steps then maintain; the default leaves `tele=None`
     — no extra loop-carried state, no extra ops (DESIGN.md §12).
+    `tele_shards` sizes the trailing per-shard scan-volume plane
+    (DESIGN.md §14): 1 on a single device, the 'data' extent for replicated
+    pools, the 'model' extent for edge-sharded pools.
 
     `g` may be a bare :class:`GraphDims` (with `deg` required) on the
     CSR-free path: everything init computes from the adjacency — the union
@@ -511,7 +524,8 @@ def init_batch(program: ACCProgram, g: Graph, cfg: EngineConfig,
         pseg=pseg,
         pull_dense=pull_dense,
         hot=hot,
-        tele=jnp.zeros((TELE_LEN,), jnp.int32) if telemetry else None,
+        tele=(jnp.zeros((TELE_LEN + int(tele_shards),), jnp.int32)
+              if telemetry else None),
     )
     return st._replace(gmode=_consensus_mode(program, cfg, g.n_edges, st),
                        mode=jnp.where(st.done, st.mode,

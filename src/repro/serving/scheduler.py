@@ -88,13 +88,18 @@ from repro.core.engine import EngineConfig
 from repro.graph.csr import EdgeDelta, Graph, live_degrees
 from repro.graph.packing import EllPack
 from repro.obs import (
+    MODE_NAMES,
     Observability,
     SLO_FIELDS,
+    TELE_COMPACT_DENSE,
+    TELE_COMPACT_HITS,
     TELE_LEN,
+    TELE_MASKED_DENSE,
     default_count_buckets,
     default_latency_buckets,
     device_fetch,
     iters_from_trace,
+    skew_ratio,
     tele_dict,
 )
 from repro.serving import batch_engine as B
@@ -168,8 +173,11 @@ OBS_LOG_LEN = 512
 def _pack_pump(st: B.BatchState) -> jnp.ndarray:
     """Pack one pump's pool telemetry into ONE int32 vector so the
     scheduler's per-iteration harvest costs a single device->host transfer
-    per pool per pump (never per lane): [gmode, union_fe, overflow,
-    live_lanes, tele(TELE_LEN), per-lane frontier counts(S)]."""
+    per pool per pump (never per lane, never per shard): [gmode, union_fe,
+    overflow, live_lanes, tele(TELE_LEN + n_shards — the named counters
+    followed by the per-shard scan-volume plane), per-lane frontier
+    counts(S)]. `log_iter` splits the variable-width tele block by the
+    fetched length."""
     head = jnp.stack([
         st.gmode.astype(jnp.int32),
         st.union_fe.astype(jnp.int32),
@@ -208,11 +216,27 @@ class _LanePool:
         #: EWMA of harvested lanes' resident seconds — the policy's
         #: service-time estimate for hopeless-drop / preemption triggers
         self.ewma_resident_s: Optional[float] = None
+        #: push/pull decision audit log (DESIGN.md §14): one host record per
+        #: executed iteration carrying the consensus inputs (union volume,
+        #: thresholds, overflow) and the decided mode, derived from the
+        #: SAME packed sample `log_iter` already fetched — zero extra
+        #: transfers
+        self.audit_log: deque = deque(maxlen=OBS_LOG_LEN)
+        self._audit_prev: Optional[np.ndarray] = None
+        self._last_gmode: Optional[int] = None
+        #: the consensus controller's volume threshold (batch_engine
+        #: `_consensus_mode`: heavy when union_fe > alpha * n_edges or
+        #: union_fe > edge_cap or overflow)
+        self._audit_alpha_edges = int(self.cfg.alpha * self.g.n_edges)
 
     def log_iter(self) -> dict:
         """Record one executed pool iteration (call right after `step()`):
-        one `device_fetch` of the packed sample, appended to `iter_log`."""
+        one `device_fetch` of the packed sample, appended to `iter_log`.
+        The tele block splits by fetched length into the named counters and
+        the per-shard scan plane; the same sample also feeds the decision
+        audit log."""
         packed = device_fetch(_pack_pump(self.state))
+        tele_w = len(packed) - 4 - self.slots
         entry = {
             "step": self.steps,
             "gmode": int(packed[0]),
@@ -220,10 +244,39 @@ class _LanePool:
             "overflow": bool(packed[2]),
             "live": int(packed[3]),
             "tele": packed[4:4 + TELE_LEN],
-            "counts": packed[4 + TELE_LEN:],
+            "shard_edges": packed[4 + TELE_LEN:4 + tele_w],
+            "counts": packed[4 + tele_w:],
         }
         self.iter_log.append(entry)
+        self._audit_iter(entry)
         return entry
+
+    def _audit_iter(self, entry: dict) -> None:
+        """Append this iteration's consensus decision record: the inputs
+        the controller saw (post-step union volume vs the alpha / edge-cap
+        thresholds, overflow) and the mode it chose for the NEXT iteration,
+        plus compact-vs-dense and masked-dense fallback deltas recovered by
+        differencing consecutive cumulative tele samples (host ints)."""
+        tele = np.asarray(entry["tele"], np.int64)
+        prev = self._audit_prev
+        d = tele - prev if prev is not None else tele
+        self._audit_prev = tele
+        gmode = entry["gmode"]
+        switched = (self._last_gmode is not None
+                    and gmode != self._last_gmode)
+        self._last_gmode = gmode
+        self.audit_log.append({
+            "step": entry["step"],
+            "union_fe": entry["union_fe"],
+            "overflow": entry["overflow"],
+            "alpha_threshold": self._audit_alpha_edges,
+            "edge_cap": int(self.cfg.edge_cap),
+            "mode": MODE_NAMES.get(gmode, str(gmode)),
+            "switched": bool(switched),
+            "compact_hits_d": int(d[TELE_COMPACT_HITS]),
+            "compact_dense_d": int(d[TELE_COMPACT_DENSE]),
+            "masked_dense_d": int(d[TELE_MASKED_DENSE]),
+        })
 
     def free_lanes(self) -> List[int]:
         done = np.asarray(self.state.done)
@@ -683,6 +736,9 @@ class GraphServer:
         self._next_rid = 0
         self._inflight_sources: Dict[int, int] = {}
         self._inflight_tenants: Dict[int, str] = {}
+        #: rid -> submit wall clock, kept only while the health monitor is
+        #: on — feeds end-to-end latency into its P² estimators
+        self._submit_t: Dict[int, float] = {}
         self.completions: List[Completion] = []
         self.rejected = 0
         self.update_log: List[dict] = []
@@ -724,6 +780,8 @@ class GraphServer:
             if missed:
                 self._count_slo("deadline_missed")
             reg.counter("cache_hits_total").inc()
+            self._rec("cache_hit", rid=rid, algo=algo, source=int(source))
+            self.obs.health.on_complete(0.0, deadline_missed=missed)
             tr = self.obs.tracer
             tr.begin(rid, algo, int(source), tenant, self.graph_version)
             tr.complete(rid, from_cache=True, iterations=0,
@@ -739,6 +797,8 @@ class GraphServer:
         if (self.slo is not None and self.slo.drop_expired
                 and deadline_t is not None and now >= deadline_t):
             self._next_rid += 1
+            if self.obs.health.enabled:
+                self._submit_t[rid] = now
             self.obs.tracer.begin(rid, algo, int(source), tenant,
                                   self.graph_version)
             self._drop_request(Request(
@@ -757,6 +817,8 @@ class GraphServer:
         self._next_rid += 1
         if deadline_t is not None:
             self._deadline_t[rid] = deadline_t
+        if self.obs.health.enabled:
+            self._submit_t[rid] = now
         self.obs.tracer.begin(rid, algo, int(source), tenant,
                               self.graph_version)
         self.queues[algo][tenant].append(
@@ -769,6 +831,55 @@ class GraphServer:
     def _count_slo(self, field: str) -> None:
         self.slo_counts[field] += 1
         self.obs.registry.counter(f"slo.{field}").inc()
+
+    # -- flight recorder / health (DESIGN.md §14) ----------------------------
+
+    def _rec(self, kind: str, **payload) -> None:
+        """Record one flight-recorder event (free when unarmed; host-only
+        when armed — never reads device state)."""
+        r = self.obs.flight
+        if r is not None:
+            r.record(kind, **payload)
+
+    def _health_complete(self, rid: int, now: float, *, missed: bool,
+                         dropped: bool = False) -> None:
+        """Feed one finished request into the health monitor's latency
+        estimators and windowed gauges."""
+        t0 = self._submit_t.pop(rid, None)
+        self.obs.health.on_complete(
+            (now - t0) if t0 is not None else 0.0,
+            deadline_missed=missed, dropped=dropped)
+
+    def dump_flight_record(self, path: str) -> int:
+        """Post-mortem export: write the flight ring to `path` as JSONL
+        (scripts/trace_schema.py --flight validates it), after appending one
+        `imbalance` summary event per pool group — the latest per-shard
+        scan-volume plane and its skew ratio, so a dump carries the workload
+        profile alongside the event timeline. Returns events written; an
+        unarmed server writes an empty file (callers may ship the path
+        unconditionally)."""
+        rec = self.obs.flight
+        if rec is None:
+            open(path, "w").close()
+            return 0
+        for name, grp in self.pool_groups.items():
+            plane = self._group_plane(grp)
+            if plane.size:
+                rec.record("imbalance", pool=name,
+                           shard_edges=[int(x) for x in plane],
+                           skew=round(skew_ratio(plane), 4))
+        return rec.dump(path)
+
+    @staticmethod
+    def _group_plane(grp: List["AlgoPool"]) -> np.ndarray:
+        """A pool group's per-shard scan plane: the latest cumulative plane
+        of each cohort leaf, concatenated (sharded groups have one leaf
+        whose plane is the mesh axis; cohort groups expose per-cohort scan
+        volumes). Empty when telemetry is off or nothing has stepped."""
+        parts = [np.asarray(q.iter_log[-1]["shard_edges"], np.int64)
+                 for q in grp if getattr(q, "iter_log", None)]
+        return (np.concatenate(parts) if parts
+                else np.zeros((0,), np.int64))
 
     @staticmethod
     def _span_slo(deadline_t: Optional[float], *, missed: bool = False,
@@ -795,6 +906,9 @@ class GraphServer:
         rid = req.rid
         self._count_slo("dropped")
         self._count_slo("deadline_missed")
+        self._rec("drop", rid=rid, algo=req.algo, tenant=req.tenant)
+        self._health_complete(rid, time.monotonic(), missed=True,
+                              dropped=True)
         self._deadline_t.pop(rid, None)
         was_preempted = rid in self._preempt_counts
         self._preempt_counts.pop(rid, None)
@@ -859,7 +973,9 @@ class GraphServer:
             self._step_leaf(dp, 1)
             new.extend(self._harvest_pool(name, dp, degraded=True))
         if self.obs.enabled:
-            self.obs.registry.gauge("queued").set(self._queued())
+            qd = self._queued()
+            self.obs.registry.gauge("queued").set(qd)
+            self.obs.health.on_queue_depth(qd)
         self.completions.extend(new)
         return self.completions[n0:]
 
@@ -878,6 +994,27 @@ class GraphServer:
                               default_count_buckets()).observe(
                     entry["union_fe"])
                 reg.gauge(f"{pool.name}.live_lanes").set(entry["live"])
+                # workload-imbalance profile (DESIGN.md §14): per-lane
+                # frontier-size distribution + per-shard scan skew, both
+                # read from the sample log_iter already fetched
+                fhist = reg.histogram(f"{pool.name}.frontier",
+                                      default_count_buckets())
+                for c in entry["counts"]:
+                    if c > 0:
+                        fhist.observe(int(c))
+                if len(entry["shard_edges"]):
+                    reg.gauge(f"{pool.name}.shard_skew").set(
+                        skew_ratio(entry["shard_edges"]))
+                audit = pool.audit_log[-1] if pool.audit_log else None
+                if audit is not None and self.obs.flight is not None:
+                    if audit["switched"]:
+                        self._rec("mode_switch", pool=pool.name,
+                                  step=audit["step"], mode=audit["mode"],
+                                  union_fe=audit["union_fe"])
+                    if audit["compact_dense_d"]:
+                        self._rec("compact_overflow", pool=pool.name,
+                                  step=audit["step"],
+                                  n=audit["compact_dense_d"])
 
     def _leaf_cadence(self, name: str, pool: AlgoPool, ordinal: int) -> int:
         """Steps this cohort leaf gets this round (DESIGN.md §13). The
@@ -982,9 +1119,12 @@ class GraphServer:
             pool.admit(lane, rid, req.source)
         self._inflight_sources[rid] = req.source
         self._inflight_tenants[rid] = req.tenant
+        self._rec("resume" if resumed else "admit", rid=rid,
+                  pool=pool.name, lane=lane, algo=req.algo)
         if degraded:
             self._degraded_rids.add(rid)
             self._count_slo("degraded")
+            self._rec("degrade", rid=rid, pool=pool.name)
         self.obs.tracer.mark(rid, "admit")
 
     def _group_ewma(self, grp: List[AlgoPool]) -> Optional[float]:
@@ -1077,6 +1217,8 @@ class GraphServer:
         tenant = self._inflight_tenants.pop(rid, "default")
         self._preempt_counts[rid] = self._preempt_counts.get(rid, 0) + 1
         self._count_slo("preempted")
+        self._rec("preempt", rid=rid, pool=pool.name, lane=lane,
+                  resident_s=round(_resident, 6))
         self.obs.tracer.mark(rid, "preempt")
         dt = self._deadline_t.get(rid)
         req = Request(rid=rid, algo=name, source=source, tenant=tenant,
@@ -1112,6 +1254,9 @@ class GraphServer:
             missed = dt is not None and now > dt
             if missed:
                 self._count_slo("deadline_missed")
+            self._rec("harvest", rid=rid, pool=pool.name, lane=lane,
+                      iters=iters)
+            self._health_complete(rid, now, missed=missed)
             was_preempted = rid in self._preempt_counts
             self._preempt_counts.pop(rid, None)
             self._degraded_rids.discard(rid)
@@ -1195,6 +1340,16 @@ class GraphServer:
             self.pump()
             rounds += 1
             if rounds >= max_rounds:
+                # leave a post-mortem timeline before dying: the wedge is
+                # exactly what the flight recorder exists for
+                self._rec("drain_stuck", rounds=rounds,
+                          queued=self._queued())
+                if self.obs.flight is not None:
+                    path = "/tmp/repro_flight_drain_stuck.jsonl"
+                    n = self.dump_flight_record(path)
+                    raise RuntimeError(
+                        f"drain did not converge "
+                        f"(flight record: {n} events -> {path})")
                 raise RuntimeError("drain did not converge")
         return self.completions
 
@@ -1302,6 +1457,10 @@ class GraphServer:
             },
         }
         self.update_log.append(stats)
+        self._rec("update_swap", version=self.graph_version,
+                  inserted=report.n_inserted, deleted=report.n_deleted,
+                  rebuild=report.rebuild,
+                  resumed=resumed_inflight, reenqueued=len(re_enqueued_rids))
         return stats
 
     def _refresh_cached(self, dirty_entries: Dict[str, list],
@@ -1414,15 +1573,27 @@ class GraphServer:
                          and — when telemetry is on — `tele` (cumulative
                          named engine counters, see obs.TELE_FIELDS) +
                          `last_iter` (newest iteration-log sample) +
-                         `shipped`; degraded shadow pools appear as
-                         '<algo>@degraded' entries with a `degraded` flag
+                         `imbalance` ({shard_edges: per-shard cumulative
+                         scan plane, skew: max/mean}, DESIGN.md §14) +
+                         `audit` (push/pull decision-audit summary: logged /
+                         push / pull / mode_switches / compact_dense
+                         counts, the controller thresholds, and the newest
+                         record) + `shipped`; degraded shadow pools appear
+                         as '<algo>@degraded' entries with a `degraded` flag
           slo            {"enabled": bool, deadline_missed/dropped/degraded/
                          preempted counts (obs.SLO_FIELDS, always live),
                          "policy": SLOPolicy.describe() or None,
                          "cohort_affinity": tenant -> pinned cohort list}
+          health         HealthMonitor.snapshot() (DESIGN.md §14): P²
+                         latency quantiles {p50/p95/p99_s, n} over the whole
+                         stream + windowed {completions, deadline_missed,
+                         miss_rate, burn_per_s, goodput, dropped} +
+                         queue_depth {last, peak}; {"enabled": False} when
+                         the monitor is off
           obs            Observability.snapshot(): metrics registry dump
                          (counters/gauges/histogram p50-p95-p99 summaries)
-                         + span recorder totals; {"enabled": False} when off
+                         + span recorder totals + health snapshot + flight
+                         ring occupancy; {"enabled": False} when off
 
         Reading it never issues a device transfer: telemetry values come
         from the host-side iteration log the pump already harvested."""
@@ -1466,6 +1637,25 @@ class GraphServer:
                     "union_fe": last["union_fe"],
                     "overflow": last["overflow"], "live": last["live"],
                 }
+                plane = self._group_plane(grp)
+                if plane.size:
+                    d["imbalance"] = {
+                        "shard_edges": [int(x) for x in plane],
+                        "skew": skew_ratio(plane),
+                    }
+                audits = [a for q in logged for a in q.audit_log]
+                if audits:
+                    d["audit"] = {
+                        "logged": len(audits),
+                        "push": sum(a["mode"] == "push" for a in audits),
+                        "pull": sum(a["mode"] == "pull" for a in audits),
+                        "mode_switches": sum(a["switched"] for a in audits),
+                        "compact_dense_fallbacks": sum(
+                            a["compact_dense_d"] for a in audits),
+                        "alpha_threshold": p._audit_alpha_edges,
+                        "edge_cap": int(p.cfg.edge_cap),
+                        "last": max(audits, key=lambda a: a["step"]),
+                    }
             pools[name] = d
         for name, p in self.degraded_pools.items():
             d = {
@@ -1503,5 +1693,6 @@ class GraphServer:
                 "cohort_affinity": {
                     t: list(v) for t, v in self.cohort_affinity.items()},
             },
+            "health": self.obs.health.snapshot(),
             "obs": self.obs.snapshot(),
         }

@@ -227,7 +227,16 @@ def _make_replicated_step(program: ACCProgram, cfg: EngineConfig,
                 # carried accumulator is mesh-global (replicated spec), so
                 # globalize the increment the same way as the controller
                 # inputs — unconditional psum, uniform collective schedule
-                inc = jax.lax.psum(new.tele - st.tele, DATA_AXIS)
+                inc = new.tele - st.tele
+                if inc.shape[0] > TELE_LEN:
+                    # per-shard plane: this 'data' row's scan volume lands
+                    # in its own slot BEFORE the psum — the one-hot
+                    # contributions assemble the full plane on every shard,
+                    # reusing the collective the named counters already pay
+                    scan = inc[TELE_PUSH_EDGES] + inc[TELE_PULL_EDGES]
+                    slot = TELE_LEN + jax.lax.axis_index(DATA_AXIS)
+                    inc = inc.at[slot].add(scan)
+                inc = jax.lax.psum(inc, DATA_AXIS)
                 new = new._replace(tele=st.tele + inc)
         return B._policy(program, cfg, n_edges, new)
 
@@ -304,7 +313,7 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
 
         e_tot = int(src.shape[0])
         tele_inc = (None if st.tele is None
-                    else jnp.zeros((TELE_LEN,), jnp.int32))
+                    else jnp.zeros_like(st.tele))
         if masked and cfg.shard_compact:
             cap = min(e_tot, max(128, int(
                 math.ceil(e_tot * cfg.shard_compact_frac))))
@@ -348,6 +357,15 @@ def _make_edge_sharded_step(program: ACCProgram, cfg: EngineConfig,
             # a 'data' collective inside the loop would deadlock, and
             # `_normalize_scalars` globalizes at exit instead.
             # Unconditional collective (sits outside the cond above).
+            if tele_inc.shape[0] > TELE_LEN:
+                # per-shard plane: this 'model' column's slice volume lands
+                # in its own slot before the existing psum — the plane then
+                # resolves to per-edge-shard totals (summed over 'data' by
+                # the same psum / the exit normalize) at zero extra
+                # collectives
+                scan = tele_inc[TELE_PUSH_EDGES] + tele_inc[TELE_PULL_EDGES]
+                slot = TELE_LEN + jax.lax.axis_index(MODEL_AXIS)
+                tele_inc = tele_inc.at[slot].add(scan)
             tele_inc = jax.lax.psum(tele_inc, tele_axes)
 
         m_new = program.run_apply(st.m, seg, st.it)
@@ -613,12 +631,14 @@ class ShardedBatchEngine:
             st = B.init_batch(self.program,
                               B.GraphDims(self.n, self.n_edges), self.cfg,
                               sources, done=done, check_caps=False,
-                              deg=self.deg, telemetry=self.telemetry)
+                              deg=self.deg, telemetry=self.telemetry,
+                              tele_shards=self.n_edge_shards)
         else:
             pack = self.pack if self.cfg.masked_pull else None
             st = B.init_batch(self.program, self.g, self.cfg, sources,
                               done=done, pack=pack, delta=self.delta,
-                              telemetry=self.telemetry)
+                              telemetry=self.telemetry,
+                              tele_shards=self.n_query_shards)
         if self._specs is None:
             self._build(st)
         return jax.device_put(st, self._shardings)

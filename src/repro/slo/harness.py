@@ -75,6 +75,10 @@ class ReplayReport:
     total: Optional[dict]                  # percentiles over all completions
     per_algo: Dict[str, Optional[dict]]
     per_tenant: Dict[str, Optional[dict]]
+    #: server-side streaming health snapshot (stats()["health"]) taken at
+    #: drain — P² quantiles + windowed miss/goodput gauges (DESIGN.md §14).
+    #: {"enabled": False} when the server runs without a health monitor.
+    health: Optional[dict] = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -88,6 +92,9 @@ def replay(srv: GraphServer, arrivals: List[Arrival], *,
     DELTAS over the replay, so a warmed-up server replays cleanly."""
     slo0 = dict(srv.slo_counts)
     updates0 = len(srv.update_log)
+    # P² markers can't be delta'd like the counters above: reset so warmup
+    # JIT-compile latencies never poison the measured-phase quantiles
+    srv.obs.health.reset()
     t0 = time.monotonic()
     sub_t: Dict[int, float] = {}          # rid -> submit wall time
     comp_t: Dict[int, float] = {}         # rid -> completion wall time
@@ -155,6 +162,14 @@ def replay(srv: GraphServer, arrivals: List[Arrival], *,
     slo_d = {k: srv.slo_counts[k] - slo0[k] for k in slo0}
     crashed = sum(
         1 for _n, p, _d in srv._leaves() for r in p.lane_rid if r is not None)
+    if crashed and srv.obs.flight is not None:
+        # post-mortem: a wedged lane is exactly what the flight recorder
+        # exists for — dump the event ring before anyone resets the server
+        crash_path = "/tmp/repro_flight_crash.jsonl"
+        srv.obs.flight.record("crash", crashed_lanes=int(crashed))
+        n = srv.dump_flight_record(crash_path)
+        print(f"[replay] {crashed} crashed lane(s): flight record "
+              f"({n} events) -> {crash_path}")
     return ReplayReport(
         offered=offered,
         completed=completed,
@@ -173,6 +188,7 @@ def replay(srv: GraphServer, arrivals: List[Arrival], *,
         per_algo={a: percentiles(ls) for a, ls in sorted(lat_algo.items())},
         per_tenant={t: percentiles(ls)
                     for t, ls in sorted(lat_tenant.items())},
+        health=srv.stats().get("health"),
     )
 
 

@@ -491,6 +491,14 @@ class StreamingGraph:
         )
         if self._rebuild_inflight is not None:
             self._replay_reports.append(self.last_report)
+        # flight-record timeline (DESIGN.md §14): free when the process ring
+        # is unarmed; lets a post-mortem interleave update batches with the
+        # scheduler events that served around them
+        from repro.obs.recorder import record_global
+
+        record_global("stream_apply", version=self.version,
+                      inserted=n_ins, deleted=n_del, ignored=ignored,
+                      rebuild=rebuild, touched=int(touched.size))
         return self.last_report
 
     # -- affected-region sweeps -----------------------------------------

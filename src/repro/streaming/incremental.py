@@ -41,6 +41,7 @@ import numpy as np
 from repro.core import frontier as F
 from repro.core.acc import ACCProgram
 from repro.core.engine import EngineConfig
+from repro.obs.recorder import record_global
 from repro.serving import batch_engine as B
 from repro.streaming.delta import StreamingGraph, UpdateReport
 
@@ -251,6 +252,8 @@ def incremental_batch(
                 "retained": q - resumed,
                 "iterations": int(stats["iterations"]),
                 "per_query_iters": stats["per_query_iters"]}
+        record_global("incremental", mode=info["mode"], resumed=resumed,
+                      iterations=info["iterations"])
         return m, info
 
     if is_monotone(program):
@@ -260,6 +263,8 @@ def incremental_batch(
         info = {"mode": "monotone-incremental", "reran": q,
                 "iterations": int(stats["iterations"]),
                 "per_query_iters": stats["per_query_iters"]}
+        record_global("incremental", mode=info["mode"], reran=q,
+                      iterations=info["iterations"])
         return m, info
 
     in_range = (sources_np >= 0) & (sources_np < sg.n)
@@ -278,4 +283,6 @@ def incremental_batch(
         iters = int(stats["iterations"])
     info = {"mode": "selective-rerun", "reran": int(dirty_idx.size),
             "retained": q - int(dirty_idx.size), "iterations": iters}
+    record_global("incremental", mode=info["mode"], reran=info["reran"],
+                  retained=info["retained"], iterations=iters)
     return m, info

@@ -1,6 +1,6 @@
-"""Unified telemetry layer (repro.obs, DESIGN.md §12).
+"""Unified telemetry layer (repro.obs, DESIGN.md §12/§14).
 
-Pins the three contracts the observability tentpole rests on:
+Pins the contracts the observability tentpole rests on:
 
   * **histogram accuracy** — fixed-bucket interpolated percentiles track
     `numpy.quantile` to within one bucket's growth factor (the
@@ -14,7 +14,13 @@ Pins the three contracts the observability tentpole rests on:
     `BatchState.tele is None` and issues NO telemetry device->host
     transfers (every telemetry read goes through `repro.obs.device_fetch`,
     whose global counter this test pins), and telemetry on/off servers
-    produce bit-identical results.
+    produce bit-identical results — the guard now also covers the flight
+    recorder (armed, still host-only/transfer-free), the health monitor,
+    and the decision-audit log;
+  * **§14 diagnostics** — P² streaming quantiles track numpy on adversarial
+    streams, the flight-recorder ring is bounded with a monotone seq that
+    survives wrap, and the per-shard scan-volume plane sums to the psum'd
+    global counters on a real forced-8-device mesh.
 """
 
 from __future__ import annotations
@@ -22,7 +28,9 @@ from __future__ import annotations
 import json
 import math
 import os
+import subprocess
 import sys
+import textwrap
 
 import numpy as np
 import pytest
@@ -31,13 +39,18 @@ import repro.obs as obs
 from repro.core import algorithms as alg
 from repro.graph import generators, pack_ell
 from repro.obs import (
+    EVENT_KINDS,
+    FlightRecorder,
     Histogram,
     MetricsRegistry,
     NOOP,
+    Observability,
+    P2Quantile,
     TELE_FIELDS,
     default_latency_buckets,
     iters_from_trace,
 )
+from repro.obs import recorder as flight_recorder
 from repro.serving import GraphServer, default_config
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "scripts"))
@@ -184,7 +197,10 @@ def test_disabled_path_is_transfer_free_and_bit_neutral():
         "telemetry-disabled serving issued device transfers through the "
         "telemetry chokepoint")
     assert off.stats()["obs"] == {"enabled": False}
-    assert "tele" not in off.stats()["pools"]["bfs"]
+    off_pool = off.stats()["pools"]["bfs"]
+    for k in ("tele", "imbalance", "audit"):   # §14 blocks stay absent too
+        assert k not in off_pool, k
+    assert off.stats()["health"] == {"enabled": False}
 
     on = _server(g, pack, telemetry=True)
     for s in sources:
@@ -245,3 +261,265 @@ def test_cache_invalidation_counter_on_update():
     srv.apply_updates(inserts=[(0, 1)], refresh="drop")
     st = srv.stats()["last_update"]
     assert srv.cache.stats()["invalidations"] == inv0 + st["cache_dropped"]
+
+
+# ---------------------------------------------------------------------------
+# P² streaming quantiles (health.py, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def test_p2_exact_for_small_samples():
+    rng = np.random.default_rng(5)
+    for n in (1, 2, 3, 4, 5):
+        vals = rng.lognormal(-4, 1.5, size=n)
+        for q in (0.5, 0.95, 0.99):
+            est = P2Quantile(q)
+            for v in vals:
+                est.observe(float(v))
+            assert est.value() == pytest.approx(
+                float(np.quantile(vals, q))), (n, q)
+    assert math.isnan(P2Quantile(0.5).value())
+
+
+def test_p2_tracks_numpy_on_adversarial_streams():
+    """Five markers must stay close to numpy's exact quantiles on streams
+    chosen to stress the estimator: heavy-tailed latencies, a bimodal
+    mixture (markers must straddle the gap), and fully sorted input (the
+    hardest well-behaved case — every observation lands past the top
+    marker). Tolerances are per-stream: sorted input is legitimately
+    harder for P² (reverse-sorted is its documented pathological case and
+    is not a serving-latency shape)."""
+    rng = np.random.default_rng(0)
+    lognormal = rng.lognormal(-4, 1.5, size=5000)
+    streams = {
+        "lognormal": (lognormal, 0.10),
+        "bimodal": (np.concatenate([rng.normal(0.01, 0.001, 2500),
+                                    rng.normal(1.0, 0.05, 2500)]), 0.15),
+        "sorted": (np.sort(lognormal), 0.35),
+    }
+    for name, (vals, tol) in streams.items():
+        for q in (0.5, 0.95, 0.99):
+            est = P2Quantile(q)
+            for v in vals:
+                est.observe(float(v))
+            want = float(np.quantile(np.asarray(vals), q))
+            got = est.value()
+            assert abs(got - want) <= tol * abs(want), (
+                name, q, want, got)
+            assert est.n == len(vals)
+    # bimodal median sits between the modes: the q=0.5 marker must not
+    # collapse onto either cluster
+    med = P2Quantile(0.5)
+    for v in streams["bimodal"][0]:
+        med.observe(float(v))
+    assert 0.05 < med.value() < 0.95
+
+
+def test_health_monitor_window_and_reset():
+    t = [0.0]
+    mon = obs.HealthMonitor(enabled=True, window_s=1.0, clock=lambda: t[0])
+    for i in range(10):
+        t[0] = i * 0.05
+        mon.on_complete(0.010, deadline_missed=(i % 2 == 0))
+        mon.on_queue_depth(i)
+    snap = mon.snapshot()
+    assert snap["enabled"] and snap["window"]["completions"] == 10
+    assert snap["window"]["deadline_missed"] == 5
+    assert snap["window"]["miss_rate"] == pytest.approx(0.5)
+    assert snap["window"]["goodput"] == pytest.approx(0.5)
+    assert snap["queue_depth"]["peak"] == 9
+    t[0] = 10.0                                # everything ages out
+    aged = mon.snapshot()
+    assert aged["window"]["completions"] == 0
+    assert aged["window"]["goodput"] == 0.0
+    assert aged["latency"]["n"] == 10          # whole-stream quantiles stay
+    mon.reset()
+    assert mon.snapshot()["latency"]["n"] == 0
+    cold = obs.HealthMonitor(enabled=False)
+    cold.on_complete(1.0)
+    assert cold.snapshot() == {"enabled": False}
+
+
+# ---------------------------------------------------------------------------
+# flight recorder (recorder.py, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_ring_bounded_seq_survives_wrap(tmp_path):
+    rec = FlightRecorder(capacity=8)
+    for i in range(20):
+        rec.record("admit", rid=i)
+    assert len(rec) == 8                       # ring stays bounded
+    assert rec.seq == 20                       # total count keeps going
+    evs = rec.events()
+    assert [e["rid"] for e in evs] == list(range(12, 20))
+    seqs = [e["seq"] for e in evs]
+    assert seqs == sorted(seqs) and seqs[0] == 12  # wrap visible as seq gap
+    assert all(e["kind"] in EVENT_KINDS for e in evs)
+    ts = [e["t"] for e in evs]
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+    path = str(tmp_path / "flight.jsonl")
+    assert rec.dump(path) == 8
+    import trace_schema
+    n, errs = trace_schema.check_flight(path)
+    assert n == 8 and not errs, errs
+
+    rec.clear()
+    assert len(rec) == 0 and rec.seq == 20     # clear keeps the counter
+    with pytest.raises(ValueError):
+        FlightRecorder(capacity=0)
+
+
+def test_global_recorder_unarmed_is_noop(tmp_path):
+    saved = flight_recorder.GLOBAL
+    flight_recorder.GLOBAL = None
+    try:
+        flight_recorder.record_global("drop", rid=1)   # free no-op
+        path = str(tmp_path / "empty.jsonl")
+        assert flight_recorder.dump_global(path) == 0
+        assert os.path.getsize(path) == 0              # empty file shipped
+        armed = flight_recorder.arm_global(capacity=16)
+        assert flight_recorder.arm_global() is armed   # idempotent
+        flight_recorder.record_global("drop", rid=2)
+        assert flight_recorder.dump_global(path) == 1
+    finally:
+        flight_recorder.GLOBAL = saved
+
+
+def test_armed_flight_with_telemetry_off_stays_transfer_free():
+    """The §14 decoupling contract: the flight recorder is host-only, so
+    arming it on a telemetry-DISABLED server must not issue a single
+    device->host transfer through the telemetry chokepoint, must keep
+    results bit-identical, and must still capture the scheduler timeline."""
+    g, pack = _graph()
+    sources = [0, 5, 17]
+
+    plain = _server(g, pack, telemetry=False)
+    comps_plain = []
+    for s in sources:
+        plain.submit("bfs", s)
+    comps_plain = plain.drain()
+
+    ring = FlightRecorder(capacity=64)
+    armed = _server(g, pack, obs=Observability(enabled=False, flight=ring))
+    assert not armed.obs.enabled
+    assert armed.pools["bfs"].state.tele is None
+    before = obs.TRANSFER_COUNT
+    for s in sources:
+        armed.submit("bfs", s)
+    comps_armed = armed.drain()
+    assert obs.TRANSFER_COUNT == before, (
+        "armed flight recorder issued telemetry transfers")
+
+    by_src = {c.source: c.result for c in comps_plain if c.algo == "bfs"}
+    for c in comps_armed:
+        if c.algo == "bfs":
+            assert np.array_equal(c.result, by_src[c.source]), c.source
+
+    kinds = {e["kind"] for e in ring.events()}
+    assert "admit" in kinds and "harvest" in kinds
+    # device-derived events need telemetry; none may appear here
+    assert not kinds & {"mode_switch", "compact_overflow", "imbalance"}
+    # dump_flight_record appends imbalance summaries only when a tele plane
+    # exists — with telemetry off it must still write the timeline
+    n = armed.dump_flight_record("/tmp/repro_test_flight_off.jsonl")
+    assert n == len(ring)
+
+
+def test_decision_audit_log_records_consensus_inputs():
+    g, pack = _graph()
+    srv = _server(g, pack, telemetry=True)
+    for s in (0, 9, 33):
+        srv.submit("bfs", s)
+        srv.submit("ppr_delta", s)
+    srv.drain()
+    pool = srv.stats()["pools"]["bfs"]
+    audit = pool["audit"]
+    assert audit["logged"] > 0
+    assert audit["push"] + audit["pull"] == audit["logged"]
+    assert audit["alpha_threshold"] > 0 and audit["edge_cap"] > 0
+    last = audit["last"]
+    for k in ("step", "union_fe", "overflow", "alpha_threshold", "edge_cap",
+              "mode", "switched"):
+        assert k in last, k
+    assert last["mode"] in ("push", "pull")
+    # the recorded decision must be consistent with the consensus rule the
+    # engine JITs (_consensus_mode): heavy -> pull
+    heavy = (bool(last["overflow"])
+             or last["union_fe"] > last["alpha_threshold"]
+             or last["union_fe"] > last["edge_cap"])
+    assert last["mode"] == ("pull" if heavy else "push")
+    # per-pool imbalance block present with a single-slot plane
+    imb = pool["imbalance"]
+    assert len(imb["shard_edges"]) == 1 and imb["skew"] == pytest.approx(1.0)
+    tele = pool["tele"]
+    assert imb["shard_edges"][0] == (tele["push_edges_scanned"]
+                                     + tele["pull_edges_scanned"])
+
+
+# ---------------------------------------------------------------------------
+# per-shard scan-volume plane on a real mesh (subprocess, forced devices)
+# ---------------------------------------------------------------------------
+
+
+def _run_forced(script: str, devices: int = 8, timeout: int = 1200) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices} "
+        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=timeout,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+@pytest.mark.slow
+def test_shard_plane_sums_to_global_counters_on_forced_mesh():
+    """The imbalance plane's accounting identity on a REAL 8-device mesh:
+    each shard's slot accumulates its local push+pull scan volume before
+    the unconditional tele psum, so summing the plane must reproduce the
+    psum'd global push+pull counters exactly — for query-sharded (8x1,
+    plane over 'data' rows) AND edge-sharded (1x8, plane over 'model'
+    columns) placements."""
+    _run_forced(textwrap.dedent("""
+        import numpy as np
+        from repro.core import algorithms as alg
+        from repro.graph import generators, pack_ell
+        from repro.obs import TELE_LEN, shard_plane, skew_ratio, tele_dict
+        from repro.serving import (GraphServer, Placement, default_config,
+                                   make_serving_mesh)
+
+        g = generators.rmat(8, 4, seed=3, directed=True)
+        pack = pack_ell(g.inc)
+
+        for d, s, kind, n_shards in [(8, 1, "replicated", 8),
+                                     (1, 8, "edge_sharded", 8)]:
+            mesh = make_serving_mesh(d, s)
+            srv = GraphServer(
+                g, pack, {"bfs": alg.bfs(0), "sssp": alg.sssp(0)},
+                slots=8, cfg=default_config(g), mesh=mesh,
+                placements={a: Placement(kind, n_shards)
+                            for a in ("bfs", "sssp")},
+                telemetry=True)
+            for src in (0, 7, 63, 150):
+                srv.submit("bfs", src)
+                srv.submit("sssp", src)
+            srv.drain()
+            for name, pool in srv.pools.items():
+                tele = np.asarray(pool.state.tele)
+                assert tele.shape == (TELE_LEN + n_shards,), (kind, name)
+                plane = shard_plane(tele)
+                named = tele_dict(tele)
+                total = (named["push_edges_scanned"]
+                         + named["pull_edges_scanned"])
+                assert plane.sum() == total, (kind, name, plane, named)
+                assert total > 0, (kind, name)
+                assert skew_ratio(plane) >= 1.0, (kind, name, plane)
+                # stats() exposes the same plane per pool
+                imb = srv.stats()["pools"][name]["imbalance"]
+                assert imb["shard_edges"] == [int(x) for x in plane]
+            print(kind, "plane identity OK")
+    """), devices=8)

@@ -445,8 +445,19 @@ def test_residual_correct_keeps_parallel_edge_multiplicity():
             f"inc={np.asarray(inc['rank'])[v, 0]:.9f} "
             f"resid_inc={np.asarray(inc['resid'])[v, 0]:.3e}"
             for v in top if diff_v[v] > 0)
+        # flight-record timeline next to the .npz (DESIGN.md §14): when the
+        # process ring is armed (REPRO_FLIGHT_RECORD, set by flake_hunt.sh)
+        # this captures what the streaming/refresh path did before the
+        # divergence; unarmed it writes an empty file
+        from repro.obs import recorder as flight
+
+        events = "/tmp/repro_flake_residual_events.jsonl"
+        flight.record_global("flake_dump", test="residual_multiplicity",
+                             max_diff=diff, dump=dump)
+        n_ev = flight.dump_global(events)
         pytest.fail(f"multiplicity lost in correction: max|diff|={diff:.3e} "
-                    f"[{detail}] — state dumped to {dump}")
+                    f"[{detail}] — state dumped to {dump}, "
+                    f"{n_ev} flight events -> {events}")
     _check_invariant(inc)
 
 
