@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-obs smoke-slo smoke-flight bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-obs bench-slo bench-schema bench-check flake-hunt
+.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-catalog smoke-obs smoke-slo smoke-flight bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-catalog bench-obs bench-slo bench-schema bench-check flake-hunt
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -35,6 +35,17 @@ smoke-ppr:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
 		python -m repro.launch.serve_graph --requests 6 --slots 8 \
 		--scale 8 --mesh 8x1 --algos ppr_delta
+
+# whole-catalog smoke (DESIGN.md §15): wcc/kcore/mis/pagerank_delta through
+# the batched server, then wcc+kcore through an edge-partitioned forced
+# 8-device mesh with streamed insert+delete batches, completions verified
+smoke-catalog:
+	PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 \
+		--slots 4 --scale 8 --algos wcc,kcore,mis,pagerank_delta
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+		python -m repro.launch.stream_graph --requests 9 --slots 3 \
+		--scale 8 --update-every 4 --mesh 1x8 --placement edge_sharded \
+		--algos wcc,kcore --verify
 
 # observability smoke: serve with --trace on a small RMAT, then validate
 # the emitted per-request spans against the trace schema (DESIGN.md §12)
@@ -82,6 +93,12 @@ bench-sharded2:
 # streaming incremental-vs-full benchmark (writes BENCH_streaming.json)
 bench-streaming:
 	PYTHONPATH=src python benchmarks/streaming_bench.py
+
+# catalog streaming benchmark: declared-regime refresh (monotone / cascade /
+# reelect / residual) vs full recompute per update kind (writes
+# BENCH_catalog.json)
+bench-catalog:
+	PYTHONPATH=src python benchmarks/catalog_bench.py
 
 # closed-loop latency-percentile baseline: p50/p95/p99 breakdowns + goodput
 # per algo x placement (writes BENCH_obs.json)

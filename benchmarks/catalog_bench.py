@@ -1,0 +1,166 @@
+"""Catalog streaming benchmark: declared-regime refresh vs full recompute.
+
+One cell per catalog addition (wcc / kcore / mis / pagerank_delta) per
+update regime, on a SYMMETRIZED RMAT graph (wcc components and MIS are
+undirected-graph notions; symmetric bases apply both edge directions per
+update):
+
+  * insert-only batch: monotone re-seed (wcc), re-election (mis), residual
+    resume (pagerank_delta) — and the k-core CASCADE contract correctly
+    refusing inserts (falls back to full recompute, recorded as such);
+  * delete-only batch: every program takes its declared regime, including
+    the k-core deletion cascade resuming from the swept affected region;
+  * each cell: full `run_batch` on the updated overlay vs
+    `incremental_batch` resuming the pre-update fixpoints, the regime mode
+    actually taken, and a match flag (bit-identical for idempotent/integer
+    programs, FP-tolerance for the sum-monoid ranks).
+
+Emits BENCH_catalog.json (linted by scripts/bench_schema.py).
+
+  PYTHONPATH=src python benchmarks/catalog_bench.py [--small] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.graph import generators
+from repro.launch.catalog import make_catalog
+from repro.serving import default_config, run_batch
+from repro.streaming import StreamingGraph, incremental_batch
+from repro.streaming.incremental import incremental_contract
+
+
+CATALOG_ALGOS = ("wcc", "kcore", "mis", "pagerank_delta")
+
+# the regime each program's declared contract must take per batch kind
+EXPECTED = {
+    "wcc": {"insert": "monotone-incremental", "delete": "monotone-incremental"},
+    "kcore": {"insert": "full-recompute", "delete": "cascade-resume"},
+    "mis": {"insert": "reelect-resume", "delete": "reelect-resume"},
+    "pagerank_delta": {"insert": "residual-resume", "delete": "residual-resume"},
+}
+
+
+def _median(fn, repeats):
+    fn()                                   # warmup (compile)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def _matches(program, m_full, m_inc):
+    field = program.param("result", program.primary)
+    a = np.asarray(m_full[field])
+    b = np.asarray(m_inc[field])
+    if program.combiner.name == "sum":
+        return bool(np.allclose(a, b, rtol=1e-5, atol=1e-4))
+    return bool(np.array_equal(a, b))
+
+
+def bench_regime(programs, sg, cfg, sources, prev, report, regime, repeats):
+    rows = {}
+    for name, program in programs.items():
+        full_s, m_full = _median(
+            lambda: run_batch(program, sg.graph, sg.pack, cfg, sources,
+                              delta=sg.delta)[0], repeats)
+        inc_s, _ = _median(
+            lambda: incremental_batch(program, sg, cfg, sources, prev[name],
+                                      report)[0], repeats)
+        m_inc, info = incremental_batch(program, sg, cfg, sources,
+                                        prev[name], report)
+        rows[name] = {
+            "contract": incremental_contract(program),
+            "mode": info["mode"],
+            "full_seconds": full_s,
+            "incremental_seconds": inc_s,
+            "speedup": full_s / max(inc_s, 1e-9),
+            "pass_match": _matches(program, m_full, m_inc),
+            "pass_declared_regime": info["mode"] == EXPECTED[name][regime],
+        }
+        print(f"[catalog_bench] {regime}/{name}: full {full_s:.3f}s vs "
+              f"incremental {inc_s:.3f}s -> {rows[name]['speedup']:.2f}x "
+              f"({info['mode']}, match={rows[name]['pass_match']})")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="smoke size (scale 9) instead of the committed 13")
+    ap.add_argument("--scale", type=int, default=None)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", default="BENCH_catalog.json")
+    args = ap.parse_args(argv)
+    scale = args.scale or (9 if args.small else 13)
+    edge_factor = 8
+
+    g = generators.rmat(scale, edge_factor, seed=7, directed=False)
+    cfg = default_config(g, max_iters=512)
+    catalog = make_catalog()
+    programs = {a: catalog[a] for a in CATALOG_ALGOS}
+    sources = [0, g.n_nodes // 2]
+    rng = np.random.default_rng(0)
+    print(f"[catalog_bench] rmat scale={scale} symmetrized: "
+          f"{g.n_nodes} nodes, {g.n_edges} directed edges")
+
+    sg = StreamingGraph(g, delta_cap=256)
+
+    def fixpoints():
+        return {a: run_batch(p, sg.graph, sg.pack, cfg, sources,
+                             delta=sg.delta)[0]
+                for a, p in programs.items()}
+
+    prev = fixpoints()
+    ins = [(int(rng.integers(0, g.n_nodes)), int(rng.integers(0, g.n_nodes)))
+           for _ in range(16)]
+    rep_ins = sg.apply(inserts=ins)
+    insert_rows = bench_regime(programs, sg, cfg, sources, prev, rep_ins,
+                               "insert", args.repeats)
+
+    prev = fixpoints()                     # pre-delete fixpoints
+    live = np.nonzero(~sg._dead_out)[0]
+    dels = [(int(sg._base_src_host()[e]), int(sg._out_ci[e]))
+            for e in rng.choice(live, size=16, replace=False)]
+    rep_del = sg.apply(deletes=dels)
+    delete_rows = bench_regime(programs, sg, cfg, sources, prev, rep_del,
+                               "delete", args.repeats)
+
+    record = {
+        "bench": "catalog_streaming",
+        "graph": {
+            "family": "rmat", "scale": scale, "directed": False,
+            "edge_factor": edge_factor,
+            "n_nodes": int(g.n_nodes), "n_edges": int(g.n_edges),
+        },
+        "batch_q": len(sources),
+        "update_edges": 16,
+        "insert_regime": insert_rows,
+        "delete_regime": delete_rows,
+        "pass_all_matched": all(
+            r["pass_match"]
+            for rows in (insert_rows, delete_rows) for r in rows.values()),
+        "pass_all_declared_regimes": all(
+            r["pass_declared_regime"]
+            for rows in (insert_rows, delete_rows) for r in rows.values()),
+    }
+    assert record["pass_all_matched"], "incremental diverged from full"
+    assert record["pass_all_declared_regimes"], "a regime dodged its contract"
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    print(f"[catalog_bench] wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

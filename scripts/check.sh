@@ -71,6 +71,21 @@ assert ship["edge_shards_shipped"] == 0, ship     # insert-only: base resident
 print("[check] single-shard delta short-circuit + touched shipping OK")
 PY
 
+echo "== catalog smoke: whole-catalog batched + edge-sharded streamed =="
+# the ACC catalog beyond the traversal trio, dispatched purely on program
+# metadata (DESIGN.md §15): source-free wcc/kcore/mis/pagerank_delta
+# through the batched server...
+python -m repro.launch.serve_graph --requests 8 --slots 4 --scale 8 \
+    --algos wcc,kcore,mis,pagerank_delta
+# ...and wcc+kcore through an edge-partitioned forced 8-device mesh with
+# streamed insert+delete batches, every completion verified against a
+# from-scratch run on its graph version (monotone re-seed + the k-core
+# deletion cascade through sharded pools)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m repro.launch.stream_graph --requests 9 --slots 3 --scale 8 \
+    --update-every 4 --mesh 1x8 --placement edge_sharded \
+    --algos wcc,kcore --verify
+
 echo "== ppr residual smoke (solo + batched + sharded 8-device mesh) =="
 python - <<'PY'
 # solo vs batched ppr_delta agreement + residual invariant on a small graph

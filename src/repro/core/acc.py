@@ -159,14 +159,40 @@ class ACCProgram:
     #: fixed iteration budget (None = run to empty frontier)
     fixed_iters: Optional[int] = None
     #: declarative key/value pairs engine layers consult (tuple of pairs so
-    #: the program stays hashable for jit static args). Known keys:
+    #: the program stays hashable for jit static args). The full generality
+    #: contract — what a program must declare to serve on each engine path —
+    #: is documented in DESIGN.md §15. Known keys:
     #:   'kind' = 'residual' — residual-push program: metadata carries an
     #:     (estimate, residual) split, Active thresholds the residual, and
     #:     the streaming layer resumes the fixpoint from corrected residuals
     #:     (Maiter-style) instead of re-running dirty sources;
     #:   'damping', 'tol' — the scalars that refresh math needs;
-    #:   'estimate', 'residual' — metadata field names of the split.
+    #:   'estimate', 'residual' — metadata field names of the split;
+    #:   'threshold' = 'degree' | 'absolute' — how a residual program's
+    #:     Active thresholds: `tol * deg` (ppr_delta) vs `tol / n`
+    #:     (pagerank_delta); the streaming residual correction recomputes
+    #:     the thresholded `send` plane under the same rule;
+    #:   'settle' — the fraction of absorbed residual a residual program
+    #:     settles into its estimate per activation; the pushed mass per
+    #:     out-edge is then `damping * estimate / settle / deg`, which is
+    #:     what the Maiter correction retracts/replays per changed column;
+    #:   'incremental' = 'cascade' | 'reelect' — non-monotone streaming
+    #:     contract (repro.streaming.incremental): 'cascade' resumes
+    #:     deletion-only batches from the previous fixpoint's survivor set
+    #:     (k-core: deletions only kill, so the cascade re-runs from the
+    #:     re-derived sub-threshold set), 'reelect' re-decides only the
+    #:     update-reachable region against frozen outside decisions (MIS).
+    #:     Programs declaring neither (and not monotone/residual) fall back
+    #:     to full recomputation;
+    #:   'result' — the metadata field served/cached by default (pools fall
+    #:     back to `primary` when absent; e.g. kcore serves 'alive', not its
+    #:     push-plane primary 'dead_now').
     params: tuple = ()
+    #: tolerance-rebuild contract: `with_tol(t)` returns THIS program rebuilt
+    #: with convergence tolerance `t` (same source/damping/budget). Residual
+    #: programs declare it so SLO degradation (`serving.slo.degraded_variant`)
+    #: can loosen ANY residual-form program without name-based dispatch.
+    with_tol: Optional[Callable[[float], "ACCProgram"]] = None
 
     def param(self, key: str, default=None):
         for k, v in self.params:

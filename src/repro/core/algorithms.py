@@ -23,10 +23,10 @@ import jax.numpy as jnp
 
 from repro.core.acc import (
     ACCProgram,
+    MAX_VOTE,
     MIN_AGG,
     MIN_VOTE,
     SUM_AGG,
-    Combiner,
     Meta,
 )
 
@@ -104,7 +104,7 @@ def wcc() -> ACCProgram:
 
     return ACCProgram(
         name="wcc", combiner=MIN_VOTE, init=init, compute=compute,
-        active=active, primary="comp",
+        active=active, primary="comp", params=(("result", "comp"),),
     )
 
 
@@ -148,7 +148,7 @@ def pagerank(damping: float = 0.85, tol: float = 1e-4, max_iters: int = 64) -> A
     return ACCProgram(
         name="pagerank", combiner=SUM_AGG, init=init, compute=compute,
         active=active, apply=apply, primary="contrib", modes="pull",
-        fixed_iters=max_iters,
+        fixed_iters=max_iters, params=(("result", "rank"),),
     )
 
 
@@ -192,7 +192,7 @@ def ppr(src: int = 0, damping: float = 0.85, tol: float = 1e-5,
     return ACCProgram(
         name="ppr", combiner=SUM_AGG, init=init, compute=compute,
         active=active, apply=apply, primary="contrib", modes="pull",
-        fixed_iters=max_iters,
+        fixed_iters=max_iters, params=(("result", "rank"),),
     )
 
 
@@ -262,14 +262,27 @@ def ppr_delta(src: int = 0, damping: float = 0.85, tol: float = 1e-5,
         active=active, apply=apply, primary="send", fixed_iters=max_iters,
         params=(("kind", "residual"), ("damping", float(damping)),
                 ("tol", float(tol)), ("estimate", "rank"),
-                ("residual", "resid")),
+                ("residual", "resid"), ("threshold", "degree"),
+                ("settle", 1.0 - float(damping)), ("result", "rank")),
+        with_tol=lambda t: ppr_delta(src, damping=damping, tol=t,
+                                     max_iters=max_iters),
     )
 
 
 def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 128) -> ACCProgram:
     """Delta/residual PageRank: the push phase the paper switches to "at the
     end ... because the majority of the vertices are stable".  Metadata keeps
-    (rank, resid); active vertices push damped residual to neighbors."""
+    (rank, resid); active vertices push damped residual to neighbors.
+
+    Same residual-form contract as `ppr_delta` but source-free (global
+    teleport, one lane fits all queries), with threshold='absolute'
+    (tol/n, size-independent convergence depth) and settle=1.0 (the FULL
+    residual settles into rank, no (1-damping) factor — the fixpoint is
+    rank = (I - dM)^T^{-1} (1/n · 1), i.e. standard PageRank scaled by
+    1/(1-d)). Residuals go negative only under the streaming retraction
+    path, hence |·| in the thresholds; cold runs keep resid ≥ 0 so the
+    abs is inert there.
+    """
 
     # absolute threshold scales with 1/n so convergence depth is
     # size-independent (residual mass starts at 1/n per vertex); n is
@@ -282,7 +295,8 @@ def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 12
         resid = jnp.full((n + 1,), 1.0 / n, jnp.float32).at[n].set(0.0)
         safe = jnp.maximum(deg, 1).astype(jnp.float32)
         degf = jnp.concatenate([safe, jnp.ones((1,), jnp.float32)])
-        send = jnp.where(resid > _tol_abs(resid), damping * resid / degf, 0.0)
+        send = jnp.where(jnp.abs(resid) > _tol_abs(resid),
+                         damping * resid / degf, 0.0)
         return (
             {"rank": rank, "resid": resid, "send": send, "deg": degf},
             jnp.arange(n),
@@ -297,21 +311,27 @@ def pagerank_delta(damping: float = 0.85, tol: float = 1e-5, max_iters: int = 12
         ta = _tol_abs(m["resid"])
         # active vertices absorbed their residual into rank and pushed it;
         # inactive keep theirs (their `send` was zero, see below).
-        act = m["resid"] > ta
+        act = jnp.abs(m["resid"]) > ta
         rank = m["rank"] + jnp.where(act, m["resid"], 0.0)
         resid = jnp.where(act, 0.0, m["resid"]) + seg
         # zero send for sub-threshold vertices so pull-mode gathers stay
         # consistent with the push-mode frontier semantics
-        send = jnp.where(resid > ta, damping * resid / m["deg"], 0.0)
+        send = jnp.where(jnp.abs(resid) > ta, damping * resid / m["deg"], 0.0)
         return {"rank": rank, "resid": resid, "send": send, "deg": m["deg"]}
 
     def active(new: Meta, old: Meta, it):
         del it
-        return new["resid"] > _tol_abs(new["resid"])
+        return jnp.abs(new["resid"]) > _tol_abs(new["resid"])
 
     return ACCProgram(
         name="pagerank_delta", combiner=SUM_AGG, init=init, compute=compute,
         active=active, apply=apply, primary="send", fixed_iters=max_iters,
+        params=(("kind", "residual"), ("damping", float(damping)),
+                ("tol", float(tol)), ("estimate", "rank"),
+                ("residual", "resid"), ("threshold", "absolute"),
+                ("settle", 1.0), ("result", "rank")),
+        with_tol=lambda t: pagerank_delta(damping=damping, tol=t,
+                                          max_iters=max_iters),
     )
 
 
@@ -365,6 +385,8 @@ def kcore(k: int = 16, max_iters: int = 512) -> ACCProgram:
     return ACCProgram(
         name="kcore", combiner=SUM_AGG, init=init, compute=compute,
         active=active, apply=apply, primary="dead_now", fixed_iters=max_iters,
+        params=(("incremental", "cascade"), ("k", float(k)),
+                ("result", "alive"), ("resume_fields", ("alive",))),
     )
 
 
@@ -401,7 +423,7 @@ def belief_propagation(n_iters: int = 16, damping: float = 0.5) -> ACCProgram:
     return ACCProgram(
         name="bp", combiner=SUM_AGG, init=init, compute=compute,
         active=active, apply=apply, primary="belief", modes="pull",
-        fixed_iters=n_iters,
+        fixed_iters=n_iters, params=(("result", "belief"),),
     )
 
 
@@ -449,9 +471,11 @@ def mis(seed: int = 0, max_iters: int = 128) -> ACCProgram:
         return (new["state"] == 0) | (new["state"] != old["state"])
 
     return ACCProgram(
-        name="mis", combiner=Combiner("max", "vote"), init=init,
+        name="mis", combiner=MAX_VOTE, init=init,
         compute=compute, active=active, apply=apply, primary="sig",
         modes="pull", fixed_iters=max_iters,
+        params=(("incremental", "reelect"), ("result", "state"),
+                ("resume_fields", ("sig", "pri", "state"))),
     )
 
 

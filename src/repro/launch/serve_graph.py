@@ -23,8 +23,8 @@ import time
 
 import numpy as np
 
-from repro.core import algorithms as alg
 from repro.graph import generators, pack_ell
+from repro.launch.catalog import algos_argtype, make_catalog
 from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
 from repro.serving import (
     GraphServer,
@@ -47,12 +47,16 @@ def build_graph(kind: str, scale: int, edge_factor: int, seed: int):
 
 
 def main(argv=None):
+    catalog = make_catalog()
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--graph", default="rmat", choices=("rmat", "uniform", "road"))
     ap.add_argument("--scale", type=int, default=10,
                     help="log2 node count (rmat/uniform)")
     ap.add_argument("--edge-factor", type=int, default=8)
-    ap.add_argument("--algos", default="bfs,sssp,ppr")
+    ap.add_argument("--algos", default="bfs,sssp,ppr",
+                    type=algos_argtype(catalog),
+                    help=f"comma list from the registered catalog: "
+                         f"{', '.join(sorted(catalog))}")
     ap.add_argument("--slots", type=int, default=4, help="query slots per algorithm")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--queue-cap", type=int, default=256)
@@ -80,14 +84,8 @@ def main(argv=None):
     print(f"[serve_graph] {args.graph} scale={args.scale}: "
           f"{n} nodes, {g.n_edges} directed edges")
 
-    factories = {"bfs": alg.bfs(0), "sssp": alg.sssp(0), "ppr": alg.ppr(0),
-                 "ppr_delta": alg.ppr_delta(0)}
-    algos = [a.strip() for a in args.algos.split(",") if a.strip()]
-    unknown = [a for a in algos if a not in factories]
-    if unknown or not algos:
-        ap.error(f"--algos must name algorithms from {sorted(factories)}; "
-                 f"got {unknown or args.algos!r}")
-    programs = {a: factories[a] for a in algos}
+    algos = args.algos                       # validated at argparse time
+    programs = {a: catalog[a] for a in algos}
 
     mesh = None
     placements = None
@@ -108,7 +106,8 @@ def main(argv=None):
     srv = GraphServer(
         g, pack, programs, slots=args.slots, cfg=default_config(g),
         queue_cap=args.queue_cap, cache_capacity=args.cache_cap,
-        result_fields={"ppr": "rank", "ppr_delta": "rank"},
+        # pools default each algo's served field from its declared
+        # 'result' param — no per-name table needed
         mesh=mesh, placements=placements,
         obs=obs_from_cli(args),
         slo=SLOPolicy() if deadline_ms is not None else None,

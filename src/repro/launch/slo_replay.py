@@ -3,8 +3,9 @@
 Expands a seeded `repro.slo.Workload` (Poisson or bursty MMPP arrivals,
 paid/batch tenant mix with per-class deadlines, optional interleaved
 streaming update batches) and fires it open-loop at a server running the
-full SLO policy stack (DESIGN.md §13): deadline drops, degraded ppr_delta
-shadow pool, lane preemption, consensus cohorts.
+full SLO policy stack (DESIGN.md §13): deadline drops, degraded shadow
+pools for any residual program with a tolerance-rebuild contract, lane
+preemption, consensus cohorts.
 
   PYTHONPATH=src python -m repro.launch.slo_replay --arrival mmpp \\
       --rate 80 --duration 10 --deadline-ms 400
@@ -24,19 +25,27 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.core import algorithms as alg
 from repro.graph import pack_ell
+from repro.launch.catalog import algos_argtype, make_catalog
 from repro.launch.serve_graph import build_graph
+from repro.streaming.incremental import is_residual
 from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
 from repro.serving import GraphServer, Placement, default_config, make_serving_mesh
 from repro.slo import SLOPolicy, TenantClass, Workload, generate, replay, warmup
 
 
 def main(argv=None):
+    catalog = make_catalog()
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--graph", default="rmat", choices=("rmat", "uniform", "road"))
     ap.add_argument("--scale", type=int, default=10)
     ap.add_argument("--edge-factor", type=int, default=8)
+    ap.add_argument("--algos", default="bfs,sssp,ppr_delta",
+                    type=algos_argtype(catalog),
+                    help=f"comma list from the registered catalog: "
+                         f"{', '.join(sorted(catalog))}; idempotent-combiner "
+                         f"algos serve the paid tenant, the rest the batch "
+                         f"tenant")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--arrival", default="mmpp", choices=("poisson", "mmpp"))
     ap.add_argument("--rate", type=float, default=60.0,
@@ -72,16 +81,23 @@ def main(argv=None):
     print(f"[slo_replay] {args.graph} scale={args.scale}: {g.n_nodes} nodes, "
           f"{g.n_edges} edges")
 
-    programs = {"bfs": alg.bfs(0), "sssp": alg.sssp(0),
-                "ppr_delta": alg.ppr_delta(0)}
+    programs = {a: catalog[a] for a in args.algos}
+    # Tenant mix from combiner metadata, not names: cheap idempotent
+    # traversals (min/max combiners) are the latency-sensitive paid class,
+    # sum-aggregation programs (residual PR family, BP-like) the batch
+    # class. Either side empty -> both tenants share the whole set.
+    paid = tuple(a for a, p in programs.items() if p.combiner.idempotent)
+    batch = tuple(a for a in programs if a not in paid)
+    paid = paid or tuple(programs)
+    batch = batch or tuple(programs)
     w = Workload(
         arrival=args.arrival, rate_qps=args.rate, duration_s=args.duration,
         burst_factor=args.burst_factor, seed=args.seed,
         update_every_s=args.update_every,
         tenants=(
-            TenantClass("paid", 2.0, (("bfs", 2.0), ("sssp", 1.0)),
+            TenantClass("paid", 2.0, tuple((a, 1.0) for a in paid),
                         deadline_ms=args.deadline_ms, hot_frac=0.3),
-            TenantClass("batch", 1.0, (("ppr_delta", 1.0),),
+            TenantClass("batch", 1.0, tuple((a, 1.0) for a in batch),
                         deadline_ms=4 * args.deadline_ms),
         ),
     )
@@ -100,9 +116,13 @@ def main(argv=None):
     policy = None
     if not args.no_policy:
         # degraded/preempt pools are single-device machinery; on a mesh run
-        # the policy keeps its drop half only
+        # the policy keeps its drop half only. Degradation is offered to
+        # every program that declares a tolerance-rebuild contract
+        # (residual kind + with_tol), not to hard-coded names.
+        degradable = tuple(a for a, p in programs.items()
+                           if is_residual(p) and p.with_tol is not None)
         policy = SLOPolicy(
-            degrade_algos=() if mesh is not None else ("ppr_delta",),
+            degrade_algos=() if mesh is not None else degradable,
             degrade_queue_depth=max(2, args.slots // 2),
             degrade_slots=max(2, args.slots // 4),
             preempt=mesh is None,
@@ -112,7 +132,7 @@ def main(argv=None):
     srv = GraphServer(
         g, pack, programs, slots=args.slots, cfg=default_config(g),
         queue_cap=args.queue_cap,
-        result_fields={"ppr_delta": "rank"},
+        # pools default served fields from each program's 'result' param
         tenant_weights={"paid": 2.0, "batch": 1.0},
         delta_cap=256 if args.update_every > 0 else 0,
         mesh=mesh, placements=placements,

@@ -28,8 +28,9 @@ import time
 
 import numpy as np
 
-from repro.core import algorithms as alg
+from repro.launch.catalog import algos_argtype, make_catalog, result_fields
 from repro.obs.trace import add_obs_cli_args, finish_obs_cli, obs_from_cli
+from repro.streaming.incremental import is_residual
 from repro.serving import (
     GraphServer,
     Placement,
@@ -55,11 +56,15 @@ def random_update_batch(rng, sg, n_ins, n_del):
 
 
 def main(argv=None):
+    catalog = make_catalog()
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--graph", default="rmat", choices=("rmat", "uniform", "road"))
     ap.add_argument("--scale", type=int, default=10)
     ap.add_argument("--edge-factor", type=int, default=8)
-    ap.add_argument("--algos", default="bfs,sssp,ppr")
+    ap.add_argument("--algos", default="bfs,sssp,ppr",
+                    type=algos_argtype(catalog),
+                    help=f"comma list from the registered catalog: "
+                         f"{', '.join(sorted(catalog))}")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--update-every", type=int, default=8,
@@ -91,14 +96,8 @@ def main(argv=None):
     print(f"[stream_graph] {args.graph} scale={args.scale}: "
           f"{n} nodes, {g.n_edges} directed edges, delta_cap={args.delta_cap}")
 
-    factories = {"bfs": alg.bfs, "sssp": alg.sssp, "ppr": alg.ppr,
-                 "ppr_delta": alg.ppr_delta}
-    algos = [a.strip() for a in args.algos.split(",") if a.strip()]
-    unknown = [a for a in algos if a not in factories]
-    if unknown or not algos:
-        ap.error(f"--algos must name algorithms from {sorted(factories)}; "
-                 f"got {unknown or args.algos!r}")
-    programs = {a: factories[a](0) for a in algos}
+    algos = args.algos                       # validated at argparse time
+    programs = {a: catalog[a] for a in algos}
 
     mesh = None
     placements = None
@@ -118,7 +117,8 @@ def main(argv=None):
     srv = GraphServer(
         g, None, programs, slots=args.slots, cfg=default_config(g),
         cache_capacity=args.cache_cap, delta_cap=args.delta_cap,
-        result_fields={"ppr": "rank", "ppr_delta": "rank"},
+        # pools default each algo's served field from its declared
+        # 'result' param
         mesh=mesh, placements=placements,
         obs=obs_from_cli(args),
     )
@@ -170,8 +170,7 @@ def main(argv=None):
           f"misses (hit rate {cache['hit_rate']:.0%}), size {cache['size']}")
 
     if args.verify:
-        fields = {"bfs": "dist", "sssp": "dist", "ppr": "rank",
-                  "ppr_delta": "rank"}
+        fields = result_fields(programs)
         bad = 0
         for c in comps:
             ver = c.graph_version
@@ -179,9 +178,10 @@ def main(argv=None):
             ref, _ = run_batch(programs[c.algo], gv, pv,
                                default_config(g), [c.source], delta=dv)
             want = np.asarray(query_result(ref, fields[c.algo], 0))
-            if c.algo == "ppr_delta":
+            if is_residual(programs[c.algo]):
                 # residual lanes RESUMED across an update are tol-accurate
-                # (mid-run Maiter correction, DESIGN.md §10), not bitwise
+                # (mid-run Maiter correction, DESIGN.md §10), not bitwise —
+                # metadata dispatch: ANY residual-form program, by contract
                 ok = np.abs(c.result - want).max() < 1e-3
             else:
                 ok = np.array_equal(c.result, want)

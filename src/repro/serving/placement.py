@@ -99,7 +99,10 @@ class ShardedAlgoPool(_LanePool):
         self.placement.check_mesh(mesh)
         self.name = name
         self.program = program
-        self.result_field = result_field or program.primary
+        # served field defaults to the program's declared 'result' param
+        # (see scheduler.AlgoPool)
+        self.result_field = result_field or program.param(
+            "result", program.primary)
         self.cfg = cfg
         self.slots = slots
         self.n_query_shards = int(mesh.shape[DATA_AXIS])
@@ -124,10 +127,12 @@ class ShardedAlgoPool(_LanePool):
             if (self.placement.kind == "edge_sharded"
                 and program.combiner.name == "sum")
             else ())
-        # residual-push pools cache (rank, resid) so dirty entries can
-        # refresh incrementally instead of dropping (streaming 3(e))
-        if program.param("kind") == "residual":
-            self.cache_extra_fields = (program.param("residual", "resid"),)
+        # pools with a declared streaming-resume contract cache its
+        # `resume_fields` beyond the result plane (see scheduler.AlgoPool)
+        from repro.streaming.incremental import resume_fields
+
+        self.cache_extra_fields = tuple(
+            f for f in resume_fields(program) if f != self.result_field)
         self.engine_queries = 0
         self.steps = 0
         self._init_obs(telemetry)

@@ -473,7 +473,11 @@ class AlgoPool(_LanePool):
         assert slots >= 1
         self.name = name
         self.program = program
-        self.result_field = result_field or program.primary
+        # served field defaults to the program's declared 'result' param
+        # (kcore serves 'alive', mis 'state' — not their push-plane
+        # primaries), falling back to the primary
+        self.result_field = result_field or program.param(
+            "result", program.primary)
         self.g = g
         self.pack = pack
         self.delta = delta
@@ -508,10 +512,15 @@ class AlgoPool(_LanePool):
         #: extra cache-key params; single-device results are the bitwise
         #: reference, so no distinguishing params (see serving/placement.py)
         self.cache_params: tuple = ()
-        # residual-push pools cache (rank, resid) so dirty entries can
-        # refresh incrementally instead of dropping (streaming 3(e))
-        if program.param("kind") == "residual":
-            self.cache_extra_fields = (program.param("residual", "resid"),)
+        # pools whose program declares a streaming-resume contract cache its
+        # `resume_fields` beyond the result plane, so dirty entries refresh
+        # incrementally instead of dropping (streaming 3(e)): residual pools
+        # carry (rank, resid), reelect pools (sig, pri); cascade rebuilds
+        # from the served 'alive' plane alone, so nothing extra
+        from repro.streaming.incremental import resume_fields
+
+        self.cache_extra_fields = tuple(
+            f for f in resume_fields(program) if f != self.result_field)
 
     # -- scheduling interface: free_lanes/live/admit/harvest/readmit from
     # _LanePool ---------------------------------------------------------------
@@ -1392,12 +1401,21 @@ class GraphServer:
             self.cache.pop(key)
             del self._preempt_saved[rid]
 
-        # (3) selective cache invalidation / refresh
+        # (3) selective cache invalidation / refresh. dirty_src gating is
+        # only meaningful for SOURCE-parameterized programs (the cached
+        # result is a function of one source's reachable region); a
+        # source-free program's result (wcc/kcore/mis/global pagerank)
+        # depends on the whole graph, so any non-empty batch dirties it.
+        changed = (report.n_inserted + report.n_deleted) > 0
         retained = dropped = refreshed = 0
         dirty_entries: Dict[str, list] = {name: [] for name in self.pools}
         for key, value in self.cache.take_version(old_version):
             _v, algo, source, params = key
-            if algo in self.pools and not report.dirty_src[source]:
+            source_gated = (algo in self.pools
+                            and B._accepts_source(self.pools[algo].program))
+            clean = ((not report.dirty_src[source]) if source_gated
+                     else not changed)
+            if algo in self.pools and clean:
                 self.cache.put(
                     make_key(self.graph_version, algo, source, params), value)
                 retained += 1
@@ -1429,11 +1447,15 @@ class GraphServer:
                 if pool.live():
                     resumed_inflight += pool.resume_residual(self.sg, report)
                 continue
+            source_gated = B._accepts_source(pool.program)
             for lane, rid in enumerate(pool.lane_rid):
                 if rid is None:
                     continue
                 source = self._inflight_sources[rid]
-                if report.dirty_src[source]:
+                # source-free lanes see the whole graph — any non-empty
+                # batch dirties them (mid-run non-monotone state is not a
+                # fixpoint, so contract resumes don't apply; restart)
+                if report.dirty_src[source] if source_gated else changed:
                     pool.readmit(lane, source)
                     re_enqueued_rids.append(rid)
 
@@ -1468,15 +1490,22 @@ class GraphServer:
         """Incrementally recompute dirty cached fixpoints instead of
         dropping them, per program regime:
 
-          * monotone single-field programs (BFS/SSSP): the cached (n,)
+          * monotone single-field programs (BFS/SSSP/WCC): the cached (n,)
             primary IS the full metadata, so the previous fixpoint is
             reconstructible and resumes bit-identically;
-          * residual-push programs (`ppr_delta`): cached entries carry the
-            (rank, resid) split (`CachedEntry`), so the refresh
-            Maiter-corrects the residuals and RESUMES the fixpoint via
-            `reseed_from_residuals` — a bare rank would not be resumable
-            and used to drop (ROADMAP streaming 3(e));
-          * everything else is dropped.
+          * residual-push programs (`ppr_delta`, `pagerank_delta`): cached
+            entries carry the (estimate, residual) split (`CachedEntry`),
+            so the refresh Maiter-corrects the residuals and RESUMES the
+            fixpoint via `reseed_from_residuals` — a bare rank would not be
+            resumable and used to drop (ROADMAP streaming 3(e));
+          * declared-contract programs (params incremental='cascade' |
+            'reelect'): the cached result plane plus the declared
+            `resume_fields` extras reconstruct the previous fixpoint, and
+            `incremental_batch` resumes it (k-core deletion cascade, MIS
+            region re-election) — falling back internally to full recompute
+            when the contract cannot cover the batch (cascade + inserts);
+          * everything else is dropped (recompute-on-demand IS the full
+            fallback, paid lazily only for entries actually re-requested).
 
         Refreshed entries re-key under their pool's cache tag (the
         edge-sharded placement tag included): the refresh itself runs on
@@ -1485,7 +1514,11 @@ class GraphServer:
         is that the bit-exact () key never serves a foreign bit pattern.
         """
         from repro.streaming import incremental_batch, is_monotone
-        from repro.streaming.incremental import is_residual
+        from repro.streaming.incremental import (
+            incremental_contract,
+            is_residual,
+            resume_fields,
+        )
 
         refreshed = dropped = 0
         n = self.sg.n
@@ -1523,6 +1556,45 @@ class GraphServer:
                                      pool.cache_params),
                             CachedEntry(rank[:n, j],
                                         {res_f: resid[:n, j]}))
+                    refreshed += len(part)
+                continue
+            contract = incremental_contract(program)
+            if (contract in ("cascade", "reelect")
+                    and pool.result_field == program.param(
+                        "result", program.primary)):
+                needed = [f for f in resume_fields(program)
+                          if f != pool.result_field]
+                ok = [(s, v) for s, v in entries
+                      if not needed
+                      or (isinstance(v, CachedEntry)
+                          and all(f in v.extras for f in needed))]
+                dropped += len(entries) - len(ok)
+                zrow = np.zeros((1,), np.float32)
+
+                def _col(v, f):
+                    if f == pool.result_field:
+                        arr = v.result if isinstance(v, CachedEntry) else v
+                    else:
+                        arr = v.extras[f]
+                    return np.concatenate([arr, zrow])
+
+                fields = sorted({pool.result_field, *needed})
+                for i in range(0, len(ok), chunk):
+                    part = ok[i:i + chunk]
+                    sources = np.asarray([s for s, _v in part], np.int64)
+                    prev_m = {f: np.stack([_col(v, f) for _s, v in part],
+                                          axis=1) for f in fields}
+                    m, _info = incremental_batch(
+                        program, self.sg, self.cfg, sources, prev_m)
+                    res = np.asarray(m[pool.result_field])
+                    ext = {f: np.asarray(m[f]) for f in needed}
+                    for j, s in enumerate(sources):
+                        value = (CachedEntry(
+                            res[:n, j], {f: ext[f][:n, j] for f in needed})
+                            if needed else res[:n, j])
+                        self.cache.put(
+                            make_key(self.graph_version, algo, int(s),
+                                     pool.cache_params), value)
                     refreshed += len(part)
                 continue
             reconstructible = (

@@ -114,21 +114,19 @@ class SLOPolicy:
 def degraded_variant(program: ACCProgram, factor: float) -> ACCProgram:
     """Loosened-tolerance variant of a residual-push program.
 
-    The degraded pool's program converges when `|resid| <= factor*tol*deg`
-    instead of `tol*deg` — by the residual invariant the served rank is
-    within `factor*tol` per unit of degree-weighted residual mass of the
-    exact answer, reached in strictly fewer push iterations. Only residual
-    programs degrade this way (min/max programs have nothing to loosen)."""
+    The degraded pool's program converges when the residual clears
+    `factor*tol` times its declared threshold rule instead of `tol` — by the
+    residual invariant the served estimate is within `factor*tol` per unit
+    of threshold-weighted residual mass of the exact answer, reached in
+    strictly fewer push iterations. Only residual programs degrade this way
+    (min/max programs have nothing to loosen), and the rebuild goes through
+    the program's OWN declared `with_tol` contract — metadata dispatch, no
+    name matching, so any residual-form program in the catalog degrades."""
     assert factor > 1.0, factor
     assert program.param("kind") == "residual", (
         f"{program.name} is not a residual-push program — nothing to loosen")
-    if program.name == "ppr_delta":
-        from repro.core import algorithms as alg
-
-        return alg.ppr_delta(
-            0,
-            damping=float(program.param("damping")),
-            tol=float(program.param("tol")) * float(factor),
-            max_iters=program.fixed_iters,
-        )
-    raise ValueError(f"no degraded variant registered for {program.name!r}")
+    if program.with_tol is None:
+        raise ValueError(
+            f"{program.name!r} declares no tolerance-rebuild contract "
+            "(ACCProgram.with_tol) — cannot build a degraded variant")
+    return program.with_tol(float(program.param("tol")) * float(factor))

@@ -622,6 +622,21 @@ class StreamingGraph:
             deg += np.bincount(xs, minlength=self.n)[:self.n]
         return deg
 
+    def live_edges_coo(self) -> tuple:
+        """(src, dst) int64 COO of ALL live directed edges of the current
+        overlaid graph — base minus deletion-neutralized slots plus pending
+        insertions, parallel-edge multiplicity preserved. Host-side input
+        for the non-monotone streaming reconstructions (k-core cascade
+        reseeding counts dead in-neighbors over exactly these edges)."""
+        live = ~self._dead_out
+        src = self._base_src_host()[live]
+        dst = self._out_ci[live].astype(np.int64)
+        xsrc, xdst = self._ins_coo()
+        if xsrc.size:
+            src = np.concatenate([src, xsrc])
+            dst = np.concatenate([dst, xdst])
+        return src, dst
+
     def live_out_neighbors(self, u: int) -> np.ndarray:
         """Live out-neighbor ids of `u` in the current overlaid graph."""
         lo, hi = int(self._out_rp[u]), int(self._out_rp[u + 1])

@@ -1,34 +1,55 @@
-"""Incremental recomputation over a streaming delta overlay (DESIGN.md §8, §10).
+"""Incremental recomputation over a streaming delta overlay (DESIGN.md §8,
+§10, §15).
 
-Three regimes, chosen per program:
+Regimes, chosen per program from its declared METADATA (`incremental_contract`
+— never from the program's name):
 
   * **Monotone** programs (min/max combiner, default apply — BFS, SSSP, WCC):
     the previous fixpoint is a valid state to resume from. Insertions can
     only improve values, so the batched engine is re-entered with the OLD
     metadata and a frontier seeded at just the inserted edges' sources;
     deletions first reset the (conservatively swept) affected region to its
-    init values and additionally seed the region's clean boundary, which
-    re-pushes final values inward. Monotone fixpoints are unique, and every
-    realized value is the same left-to-right path sum a from-scratch run
-    produces, so the result is BIT-IDENTICAL to full recomputation on the
-    updated graph.
+    init values and additionally seed the region's clean boundary PLUS the
+    program's own init frontier restricted to the region (bfs/sssp: the
+    lane's source row; wcc: every reset vertex, whose min-label restarts
+    from itself), which re-pushes final values inward. Monotone fixpoints
+    are unique, and every realized value is the same left-to-right path sum
+    a from-scratch run produces, so the result is BIT-IDENTICAL to full
+    recomputation on the updated graph.
 
-  * **Residual-push** programs (`ppr_delta`, params kind='residual'): the
-    (estimate, residual) invariant holds at every iteration, so an update is
-    absorbed by correcting residuals along the changed adjacency columns
-    (Maiter-style, `residual_correct`) and RESUMING the fixpoint from the
-    surviving residuals — no source re-runs at all; clean lanes' corrections
-    are identically zero and they start converged (DESIGN.md §10).
+  * **Residual-push** programs (params kind='residual' — `ppr_delta`,
+    `pagerank_delta`): the (estimate, residual) invariant holds at every
+    iteration, so an update is absorbed by correcting residuals along the
+    changed adjacency columns (Maiter-style, `residual_correct`,
+    generalized over the declared 'settle' factor and 'threshold' rule) and
+    RESUMING the fixpoint from the surviving residuals — no source re-runs
+    at all; clean lanes' corrections are identically zero and they start
+    converged (DESIGN.md §10).
 
-  * **Non-monotone** programs (PPR/PageRank power iteration): restarting the
-    iteration from a perturbed state computes a different (wrong) trajectory,
-    so the unit of reuse is the whole QUERY: a source that cannot reach any
-    touched endpoint (`report.dirty_src`) is bitwise unaffected and keeps its
-    previous result; only dirty sources re-run, batched, from scratch.
+  * **Non-monotone with a declared contract** (params incremental=...):
+    'cascade' (k-core) resumes deletion-only batches from the previous
+    survivor set — deletions only shrink effective degrees, so previous
+    deaths stay dead and the cascade re-runs from the re-derived
+    sub-threshold survivors (`_cascade_seed_state`); insert-containing
+    batches fall back to full recompute. 'reelect' (MIS) re-decides only
+    the update-reachable region against frozen outside decisions
+    (`_reelect_seed_state`). Both are bit-identical to a cold run on the
+    updated graph (unique fixpoints; see the seed-state docstrings).
 
-Both paths run against the SAME overlaid (graph, pack, delta) views, so
+  * **Non-monotone, source-parameterized, no contract** (PPR power
+    iteration): restarting the iteration from a perturbed state computes a
+    different (wrong) trajectory, so the unit of reuse is the whole QUERY:
+    a source that cannot reach any touched endpoint (`report.dirty_src`) is
+    bitwise unaffected and keeps its previous result; only dirty sources
+    re-run, batched, from scratch.
+
+  * **Everything else** (source-free, no contract — global PageRank, BP):
+    full recompute on the updated graph. The fallback is always safe.
+
+All paths run against the SAME overlaid (graph, pack, delta) views, so
 "full recompute on the updated graph" is a well-defined bitwise reference
-(tests/test_streaming.py pins it for BFS/SSSP/PPR).
+(tests/test_streaming.py pins it for BFS/SSSP/PPR, tests/test_catalog.py
+for wcc/kcore/mis/pagerank_delta).
 """
 
 from __future__ import annotations
@@ -56,20 +77,53 @@ def is_monotone(program: ACCProgram) -> bool:
 def is_residual(program: ACCProgram) -> bool:
     """Residual-push program (params kind='residual', e.g. `ppr_delta`):
     metadata carries an (estimate, residual) split whose invariant
-    `final = estimate + (1-d)(I - dM)^{-1} residual` holds at EVERY
+    `final = estimate + settle·(I - dM)^{-1} residual` holds at EVERY
     iteration, so an edge update is absorbed by correcting residuals along
     the changed adjacency columns and resuming the fixpoint — no re-run."""
     return program.param("kind") == "residual"
+
+
+def incremental_contract(program: ACCProgram) -> str:
+    """Classify the streaming-refresh regime for `program` from its declared
+    metadata: 'residual' | 'monotone' | 'cascade' | 'reelect' | 'selective'
+    (source-parameterized query-granular rerun) | 'full' (recompute — the
+    always-safe fallback for programs declaring nothing)."""
+    if is_residual(program):
+        return "residual"
+    if is_monotone(program):
+        return "monotone"
+    declared = program.param("incremental")
+    if declared in ("cascade", "reelect"):
+        return declared
+    return "selective" if B._accepts_source(program) else "full"
+
+
+def resume_fields(program: ACCProgram) -> tuple:
+    """Metadata planes the streaming resume needs beyond the served result
+    field — the serving cache stores these alongside results so
+    `GraphServer._refresh_cached` can refresh entries in place instead of
+    dropping them. Residual programs need their (estimate, residual) split;
+    contract programs declare theirs via params 'resume_fields' (k-core's
+    cascade rebuilds everything from 'alive' alone; MIS re-election blends
+    all three planes)."""
+    if is_residual(program):
+        return (program.param("estimate", "rank"),
+                program.param("residual", "resid"))
+    if program.param("incremental") is not None:
+        return tuple(program.param("resume_fields", ()))
+    return ()
 
 
 def residual_correct(program: ACCProgram, sg: StreamingGraph, prev_m: dict,
                      report: UpdateReport) -> dict:
     """Maiter-style residual correction for one applied update batch.
 
-    The settled estimate x = rank/(1-d) was accumulated by pushing
-    d·x(u)/deg(u) along each of u's out-edges. An update batch replaces
-    column u of the push operator M (out-neighbor set and/or degree), so the
-    residual field absorbs the difference:
+    The settled estimate x = rank/settle (settle = the declared fraction of
+    absorbed residual settled per activation: 1−d for `ppr_delta`, 1.0 for
+    `pagerank_delta`) was accumulated by pushing d·x(u)/deg(u) along each of
+    u's out-edges. An update batch replaces column u of the push operator M
+    (out-neighbor set and/or degree), so the residual field absorbs the
+    difference:
 
         resid += d * (M' - M) x      (nonzero only for changed sources u,
                                       at u's old/new out-neighbors)
@@ -80,22 +134,35 @@ def residual_correct(program: ACCProgram, sg: StreamingGraph, prev_m: dict,
     residuals may go negative; `ppr_delta.active` thresholds |resid|.
 
     The degree metadata and the thresholded `send` plane are recomputed from
-    the new live degrees — the next frontier must be derived from the FULL
-    corrected residual field (program.active), not from the update
-    endpoints: a deletion that lowers deg(u) lowers u's threshold
-    tol·deg(u), re-activating a surviving sub-threshold residual at u even
-    though no correction term touches u itself (the targeted deletion test
-    in tests/test_ppr_delta.py pins this).
+    the new live degrees under the program's declared 'threshold' rule
+    (degree-scaled tol·deg or absolute tol/n) — the next frontier must be
+    derived from the FULL corrected residual field (program.active), not
+    from the update endpoints: a deletion that lowers deg(u) lowers u's
+    degree-scaled threshold tol·deg(u), re-activating a surviving
+    sub-threshold residual at u even though no correction term touches u
+    itself (the targeted deletion test in tests/test_ppr_delta.py pins
+    this).
 
     Returns a fresh {field: (n+1, Q) float32 numpy} dict; `prev_m` is not
     modified. Clean lanes (source cannot reach a touched endpoint) have
     rank == 0 at every changed source, so their corrections vanish
     identically and they stay converged.
+
+    Accumulation order is PINNED (the `Combiner.reduce_axis_tree` doctrine,
+    applied host-side): every correction term is materialized as a
+    (target, (Q,) delta) row in a deterministic sequence — changed sources
+    ascending, each source's old-multiset retractions before its
+    new-multiset additions, targets ascending within each — then summed per
+    target via one `np.add.reduceat` over a stable target sort. The float
+    association order is thus a pure function of the update batch, never of
+    thread count, array layout, or how many sources share a target.
     """
     d = float(program.param("damping"))
     tol = float(program.param("tol"))
     est = program.param("estimate", "rank")
     res = program.param("residual", "resid")
+    settle = float(program.param("settle", 1.0 - d))
+    threshold = program.param("threshold", "degree")
     n = sg.n
     m = {k: np.array(v, dtype=np.float32) for k, v in prev_m.items()}
     rank, resid = m[est], m[res]
@@ -107,6 +174,8 @@ def residual_correct(program: ACCProgram, sg: StreamingGraph, prev_m: dict,
     for (u, v) in report.del_edges:
         del_by_src.setdefault(int(u), []).append(int(v))
 
+    term_tgt: list = []
+    term_val: list = []
     for u in sorted(set(ins_by_src) | set(del_by_src)):
         # neighbor MULTISETS: parallel edges (from_edges dedupe=False) each
         # carried one push of d·x/deg, so multiplicity weights the terms —
@@ -121,24 +190,48 @@ def residual_correct(program: ACCProgram, sg: StreamingGraph, prev_m: dict,
         for v in del_by_src.get(u, ()):
             old_cnt[v] += 1
         old_deg = int(old_cnt.sum())
-        x_u = rank[u] / (1.0 - d)                            # (Q,)
+        x_u = rank[u] / settle                               # (Q,)
         if old_deg > 0:
             idx = np.nonzero(old_cnt)[0]                     # unique targets
             w = old_cnt[idx].astype(np.float32)[:, None]
-            resid[idx] -= w * (d * x_u[None, :] / old_deg)
+            term_tgt.append(idx)
+            term_val.append(-w * (d * x_u[None, :] / old_deg))
         if new_deg > 0:
             idx = np.nonzero(cnt)[0]
             w = cnt[idx].astype(np.float32)[:, None]
-            resid[idx] += w * (d * x_u[None, :] / new_deg)
+            term_tgt.append(idx)
+            term_val.append(w * (d * x_u[None, :] / new_deg))
+    if term_tgt:
+        tgt = np.concatenate(term_tgt)
+        val = np.concatenate(term_val, axis=0).astype(np.float32)  # (T, Q)
+        order = np.argsort(tgt, kind="stable")
+        tgt, val = tgt[order], val[order]
+        uniq, starts = np.unique(tgt, return_index=True)
+        resid[uniq] += np.add.reduceat(val, starts, axis=0)
 
     degf = np.maximum(sg.live_out_degrees(), 1).astype(np.float32)
     degf = np.concatenate([degf, np.ones((1,), np.float32)])
     m["deg"] = np.broadcast_to(degf[:, None], rank.shape).copy()
-    send = np.where(np.abs(resid) > tol * m["deg"],
+    ta = tol * m["deg"] if threshold == "degree" else tol / n
+    send = np.where(np.abs(resid) > ta,
                     d * resid / m["deg"], 0.0).astype(np.float32)
     send[-1] = 0.0
     m["send"] = send
     return m
+
+
+def _finish_seed(program, g, cfg, st: B.BatchState, m: dict,
+                 active) -> B.BatchState:
+    """Common tail of the resume seed-state builders: install metadata and
+    frontier, recount, and re-run the consensus controller (done lanes keep
+    their recorded mode)."""
+    count = jnp.sum(active, axis=0).astype(jnp.int32)
+    union_fe, overflow = B._union_volume(g.out, cfg, active)
+    st = st._replace(m=m, active=active, count=count, union_fe=union_fe,
+                     overflow=overflow, done=count == 0)
+    gmode = B._consensus_mode(program, cfg, g.n_edges, st)
+    return st._replace(gmode=gmode,
+                       mode=jnp.where(st.done, st.mode, gmode))
 
 
 def _seed_state(program, sg, cfg, sources, prev_m, report) -> B.BatchState:
@@ -159,23 +252,109 @@ def _seed_state(program, sg, cfg, sources, prev_m, report) -> B.BatchState:
     seeds = np.unique(np.concatenate(
         [report.ins_src, report.boundary]).astype(np.int64))
     active = F.mask_from_ids(jnp.asarray(seeds, jnp.int32), n, q=q)
-    # lanes whose source sits inside the affected region restart from it
-    lanes = jnp.arange(q)
-    lane_src_reset = aff[sources]                                 # (Q,)
-    active = active.at[sources, lanes].set(
-        active[sources, lanes] | lane_src_reset)
+    # the program's own init frontier, restricted to the reset region, also
+    # re-seeds: reset rows hold init values that must re-propagate exactly
+    # as a cold run's would. For source-parameterized programs (bfs/sssp,
+    # init frontier = the lane's source) this is the "reset source restarts
+    # its lane" rule; for all-vertex init frontiers (wcc) every reset
+    # vertex re-enters, so labels INTERNAL to the region (not just boundary
+    # pushes) re-propagate — without it two reset vertices joined by an
+    # edge keep their init self-labels.
+    active = active | (st.active & aff[:, None])
+    return _finish_seed(program, g, cfg, st, m, active)
 
-    count = jnp.sum(active, axis=0).astype(jnp.int32)
-    union_fe, overflow = B._union_volume(g.out, cfg, active)
-    st = st._replace(
-        m=m, active=active, count=count, union_fe=union_fe,
-        overflow=overflow, done=count == 0,
-    )
-    return st._replace(
-        gmode=B._consensus_mode(program, cfg, g.n_edges, st),
-        mode=jnp.where(st.done, st.mode,
-                       B._consensus_mode(program, cfg, g.n_edges, st)),
-    )
+
+def _cascade_seed_state(program, sg, cfg, sources, prev_m,
+                        report) -> B.BatchState:
+    """Resume a deletion cascade (params incremental='cascade', k-core) from
+    the previous fixpoint's survivor set. Deletion-only batches ONLY —
+    `incremental_batch` falls back to full recompute when the batch inserts.
+
+    Deletions only shrink effective degrees, so the k-core of the updated
+    graph is a subset of the previous one: every previously-dead vertex
+    stays dead, and the previous survivors form a valid mid-cascade state
+    of a cold run on the updated graph. That state is reconstructed
+    host-side from the previous `alive` plane alone (all the cache stores):
+
+        deg(x) = live_out_deg'(x) − #{live edges w→x : w previously dead}
+
+    — the same value the cold run reaches by unit decrements from each
+    death (integer sums are exact in fp32, and the max(·,0) clip in apply
+    only engages on vertices that die anyway). The resume frontier is the
+    survivor set the deletions pushed below k, i.e. `init`'s own seeding
+    rule applied to the reconstructed state; deaths are confluent (the
+    k-core is unique), so the resumed cascade's fixpoint is BIT-IDENTICAL
+    to a cold run on the updated graph.
+    """
+    k = float(program.param("k"))
+    g = sg.graph
+    n = sg.n
+    st = B.init_batch(program, g, cfg, jnp.asarray(sources, jnp.int32),
+                      pack=sg.pack, delta=sg.delta)
+    q = int(st.active.shape[1])
+    alive_prev = np.asarray(prev_m["alive"], np.float32)[:n] > 0   # (n, Q)
+    src, dst = sg.live_edges_coo()
+    dead_in = np.zeros((n, q), np.float32)
+    np.add.at(dead_in, dst, (~alive_prev[src]).astype(np.float32))
+    live_out = sg.live_out_degrees().astype(np.float32)[:, None]   # (n, 1)
+    deg = np.where(alive_prev, np.maximum(live_out - dead_in, 0.0), 0.0)
+    dead_now = alive_prev & (deg < k)
+    alive = alive_prev & ~dead_now
+    deg = np.where(dead_now, 0.0, deg)
+
+    def plane(body, scratch):
+        row = np.full((1, q), scratch, np.float32)
+        return jnp.asarray(np.concatenate(
+            [body.astype(np.float32), row], axis=0))
+
+    # scratch rows mirror init: alive=1 (sentinel gathers stay inert),
+    # dead_now/deg = 0
+    m = {"dead_now": plane(dead_now, 0.0), "alive": plane(alive, 1.0),
+         "deg": plane(deg, 0.0)}
+    active = jnp.asarray(np.concatenate(
+        [dead_now, np.zeros((1, q), bool)], axis=0))
+    return _finish_seed(program, g, cfg, st, m, active)
+
+
+def _reelect_seed_state(program, sg, cfg, sources, prev_m,
+                        report) -> B.BatchState:
+    """Re-decide (params incremental='reelect', MIS) only the
+    update-reachable region, against frozen outside decisions.
+
+    The region is the forward sweep from every touched endpoint over the
+    union graph: a vertex outside it has NO in-path from any changed edge,
+    so the entire subgraph feeding its decision is unchanged and its
+    previous state is exactly what a cold run on the updated graph decides.
+    Region rows reset to their INIT planes (undecided, sig=pri); outside
+    rows keep their previous planes (the declared 'resume_fields'), whose
+    frozen signals the re-election reads through pull-mode boundary
+    gathers. With unique fixed priorities on symmetric adjacency the
+    dynamics converge to the unique greedy (lexicographically-first) MIS,
+    which is timing-independent — so frozen final boundary signals yield
+    the same region decisions a cold run reaches, bit-identically. MIS is
+    an undirected-graph algorithm; 'reelect' accordingly assumes symmetric
+    adjacency (on directed graphs decision TIMING can leak across the
+    boundary, and `incremental_contract` callers wanting directed semantics
+    should force the 'full' fallback).
+    """
+    g = sg.graph
+    n = sg.n
+    st = B.init_batch(program, g, cfg, jnp.asarray(sources, jnp.int32),
+                      pack=sg.pack, delta=sg.delta)
+    q = int(st.active.shape[1])
+    region = sg._sweep("forward", np.asarray(report.touched, np.int64))
+    # scratch row always from init (True): cached prev planes may carry an
+    # arbitrary scratch value, but the sentinel slot must stay at the init
+    # identity encoding for padded gathers to stay inert
+    reg = jnp.asarray(np.concatenate([region, [True]]))[:, None]   # (n+1, 1)
+    m = {kf: jnp.where(reg, st.m[kf],
+                       jnp.asarray(np.asarray(prev_m[kf], np.float32)))
+         for kf in st.m}
+    # frontier = the undecided region (init frontier ∩ region): outside
+    # vertices are final and their Active() is False against themselves;
+    # st.active never holds the scratch row, so reg's scratch-True is inert
+    active = st.active & reg
+    return _finish_seed(program, g, cfg, st, m, active)
 
 
 def reseed_from_residuals(program, cfg, g, st: B.BatchState,
@@ -228,15 +407,67 @@ def incremental_batch(
     `prev_m` is the vertex-major metadata dict {field: (n+1, Q)} a previous
     `run_batch`/`incremental_batch` over the SAME `sources` returned (for
     min programs a {primary: ...} dict reconstructed from cached results is
-    enough). Returns (metadata, info): bit-identical to
+    enough; contract programs need their declared `resume_fields`). Returns
+    (metadata, info): bit-identical to
     `run_batch(program, sg.graph, sg.pack, cfg, sources, delta=sg.delta)`.
+
+    The regime comes from `incremental_contract(program)` — declared program
+    metadata, never the name — and every regime that cannot honor its
+    contract for THIS batch (a cascade batch containing inserts) falls back
+    to full recompute, which is always safe.
     """
     report = report if report is not None else sg.last_report
     assert report is not None, "apply an update batch before recomputing"
     sources_np = np.asarray(sources, dtype=np.int64)
     q = int(sources_np.shape[0])
+    contract = incremental_contract(program)
 
-    if is_residual(program):
+    def _full(reason: str):
+        m, stats = B.run_batch(program, sg.graph, sg.pack, cfg, sources_np,
+                               fusion=fusion, delta=sg.delta)
+        info = {"mode": "full-recompute", "reason": reason, "reran": q,
+                "iterations": int(stats["iterations"]),
+                "per_query_iters": stats["per_query_iters"]}
+        record_global("incremental", mode=info["mode"], reason=reason,
+                      reran=q, iterations=info["iterations"])
+        return m, info
+
+    if contract == "full":
+        return _full("no-incremental-contract")
+
+    if contract == "cascade":
+        if report.n_inserted > 0:
+            # insertions can resurrect vertices; the cascade contract only
+            # covers monotone-downward (deletion) batches
+            return _full("cascade-saw-inserts")
+        st0 = _cascade_seed_state(program, sg, cfg, sources_np, prev_m,
+                                  report)
+        resumed = int(jnp.sum(st0.count > 0))
+        m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
+                               delta=sg.delta, fusion=fusion)
+        info = {"mode": "cascade-resume", "resumed": resumed,
+                "retained": q - resumed,
+                "iterations": int(stats["iterations"]),
+                "per_query_iters": stats["per_query_iters"]}
+        record_global("incremental", mode=info["mode"], resumed=resumed,
+                      iterations=info["iterations"])
+        return m, info
+
+    if contract == "reelect":
+        st0 = _reelect_seed_state(program, sg, cfg, sources_np, prev_m,
+                                  report)
+        resumed = int(jnp.sum(st0.count > 0))
+        m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
+                               delta=sg.delta, fusion=fusion)
+        info = {"mode": "reelect-resume", "resumed": resumed,
+                "retained": q - resumed,
+                "iterations": int(stats["iterations"]),
+                "per_query_iters": stats["per_query_iters"]}
+        record_global("incremental", mode=info["mode"], resumed=resumed,
+                      iterations=info["iterations"])
+        return m, info
+
+    if contract == "residual":
         # residual resume (Maiter-style): correct the residual planes along
         # the changed adjacency columns and re-enter the fixpoint from the
         # corrected state. The frontier comes from the FULL corrected
@@ -256,7 +487,7 @@ def incremental_batch(
                       iterations=info["iterations"])
         return m, info
 
-    if is_monotone(program):
+    if contract == "monotone":
         st0 = _seed_state(program, sg, cfg, sources_np, prev_m, report)
         m, stats = B.run_state(program, sg.graph, sg.pack, cfg, st0,
                                delta=sg.delta, fusion=fusion)

@@ -1,0 +1,408 @@
+"""Catalog generality differential suite (DESIGN.md §15).
+
+The serving/streaming stack must serve ANY registered ACC program purely
+from its declared metadata — combiner monoid, `param("kind")`, declared
+incremental contract — with zero name-based special cases. Contracts:
+
+  (a) the launch catalog classifies every program's streaming regime from
+      metadata alone (residual / monotone / cascade / reelect / selective /
+      full) and declares the resume planes each regime needs;
+  (b) cold results for wcc / kcore / mis / pagerank_delta match independent
+      numpy oracles (min-label fixpoint, peeling, power iteration, MIS
+      independence+maximality);
+  (c) all four serve identically through every engine path — solo, batched,
+      query-sharded (replicated), edge-partitioned — bit-identical for
+      idempotent/integer programs, FP-tolerance for sum programs;
+  (d) all four survive streaming insert AND delete batches: the
+      metadata-dispatched `incremental_batch` regime equals a from-scratch
+      run on the updated overlay, including the k-core deletion CASCADE
+      (one edge delete unravels a whole cycle while an untouched triangle
+      survives) and MIS RE-ELECTION (an insert between two set members
+      re-elects only the dirtied neighborhood);
+  (e) the GraphServer cache refreshes cascade/reelect/residual/monotone
+      entries in place across an update and the refreshed entries equal
+      fresh recomputes.
+
+Graphs stay small (scale-7 RMAT, 12-cycle + triangle, path) — the heavy
+multi-device catalog paths run in `scripts/check.sh`'s forced-host smoke.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core.engine import run as solo_run
+from repro.graph import generators, pack_ell
+from repro.graph.csr import from_edges
+from repro.launch.catalog import make_catalog, result_fields
+from repro.serving import (
+    GraphServer,
+    default_config,
+    make_serving_mesh,
+    query_result,
+    run_batch,
+    run_sharded,
+)
+from repro.streaming import StreamingGraph
+from repro.streaming.incremental import (
+    incremental_batch,
+    incremental_contract,
+    is_residual,
+    resume_fields,
+)
+
+
+# the four catalog additions under test: field + exactness come from the
+# declared metadata, not from this table (it only names the cases)
+CATALOG_ALGOS = ["wcc", "kcore", "mis", "pagerank_delta"]
+
+
+def _tolerance(program):
+    """Sum-aggregation float programs admit one reassociation's FP noise
+    across engine paths; everything else (min/max monoids, 0/1 integer
+    planes like k-core's alive) must be bit-identical."""
+    return 1e-4 if program.combiner.name == "sum" else 0.0
+
+
+def _close(a, b, tol):
+    a, b = np.asarray(a), np.asarray(b)
+    if tol == 0.0:
+        return np.array_equal(a, b)
+    return np.allclose(a, b, rtol=1e-5, atol=tol)
+
+
+@pytest.fixture(scope="module")
+def catalog():
+    return make_catalog()
+
+
+@pytest.fixture(scope="module")
+def rmat_u():
+    g = generators.rmat(7, 8, seed=3, directed=False)   # symmetrized
+    return g, pack_ell(g.inc)
+
+
+@pytest.fixture(scope="module")
+def rmat_d():
+    g = generators.rmat(7, 8, seed=5, directed=True)
+    return g, pack_ell(g.inc)
+
+
+@pytest.fixture(scope="module")
+def broom_path():
+    """The consensus-divergence regression shape (test_sharded): chained
+    hubs fanning leaves force PULL while a long path wants PUSH — the
+    catalog programs must agree across engine paths on it too."""
+    broom = []
+    for i in range(5):
+        broom.append((i, i + 1))
+        broom += [(i, 500 + 50 * i + j) for j in range(50)]
+    path = [(200 + i, 201 + i) for i in range(100)]
+    e = np.asarray(broom + path, dtype=np.int64)
+    g = from_edges(e[:, 0], e[:, 1], 800, directed=True)
+    return g, pack_ell(g.inc)
+
+
+# ---------------------------------------------------------------------------
+# (a) metadata classification: regimes and resume planes, no names anywhere
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_contracts_come_from_metadata(catalog):
+    expected = {
+        "bfs": "monotone", "sssp": "monotone", "ppr": "selective",
+        "wcc": "monotone",
+        "ppr_delta": "residual", "pagerank_delta": "residual",
+        "kcore": "cascade", "mis": "reelect",
+        "pagerank": "full",          # declares nothing -> always-safe
+    }
+    for name, want in expected.items():
+        assert incremental_contract(catalog[name]) == want, name
+    # a name-stripped clone classifies identically: dispatch reads params,
+    # never program.name
+    import dataclasses as dc
+    for name in CATALOG_ALGOS:
+        clone = dc.replace(catalog[name], name="anonymous")
+        assert incremental_contract(clone) == expected[name], name
+
+
+def test_resume_fields_and_result_fields_declared(catalog):
+    assert resume_fields(catalog["kcore"]) == ("alive",)
+    assert resume_fields(catalog["mis"]) == ("sig", "pri", "state")
+    assert resume_fields(catalog["pagerank_delta"]) == ("rank", "resid")
+    assert resume_fields(catalog["wcc"]) == ()          # monotone: result only
+    fields = result_fields(catalog)
+    assert fields["wcc"] == "comp" and fields["kcore"] == "alive"
+    assert fields["mis"] == "state" and fields["pagerank_delta"] == "rank"
+    assert is_residual(catalog["pagerank_delta"])
+    assert catalog["pagerank_delta"].with_tol is not None
+
+
+# ---------------------------------------------------------------------------
+# (b) numpy oracles for the cold solo runs
+# ---------------------------------------------------------------------------
+
+
+def _coo(g):
+    src = np.asarray(g.out.src_idx, np.int64)
+    dst = np.asarray(g.out.col_idx, np.int64)
+    return src, dst
+
+
+def np_minlabel(src, dst, n):
+    """Least fixpoint of c[v] = min(c[v], min over in-edges c[u]) — on a
+    symmetrized graph these are the connected components."""
+    c = np.arange(n, dtype=np.float32)
+    while True:
+        nc = c.copy()
+        np.minimum.at(nc, dst, c[src])
+        if np.array_equal(nc, c):
+            return c
+        c = nc
+
+
+def np_kcore_coo(src, dst, n, k):
+    """Round-synchronous peeling over out-degree (order-independent)."""
+    deg = np.bincount(src, minlength=n).astype(np.float64)
+    alive = np.ones(n, bool)
+    while True:
+        kill = alive & (deg < k)
+        if not kill.any():
+            return alive
+        alive = alive & ~kill
+        dec = np.zeros(n)
+        m = kill[src] & alive[dst]
+        np.add.at(dec, dst[m], 1.0)
+        deg = np.where(alive, np.maximum(deg - dec, 0.0), 0.0)
+
+
+def np_pagerank_coo(src, dst, n, d=0.85, iters=300):
+    deg = np.bincount(src, minlength=n).astype(np.float64)
+    r = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = d * r / np.maximum(deg, 1.0)
+        nxt = np.zeros(n)
+        np.add.at(nxt, dst, contrib[src])
+        r = (1 - d) / n + nxt
+    return r
+
+
+def assert_valid_mis(state, src, dst):
+    """Independence + maximality + totality on a SYMMETRIC edge set."""
+    state = np.asarray(state)
+    assert set(np.unique(state)) <= {1.0, 2.0}, "every vertex decided"
+    inset = state == 1.0
+    assert not (inset[src] & inset[dst]).any(), "independence"
+    covered = np.zeros(state.shape[0], bool)
+    covered[dst[inset[src]]] = True
+    assert (inset | covered).all(), "maximality"
+
+
+def test_cold_solo_runs_match_numpy_oracles(catalog, rmat_u):
+    g, pack = rmat_u
+    src, dst = _coo(g)
+    n = g.n_nodes
+    cfg = default_config(g, max_iters=256)
+
+    m, _ = solo_run(catalog["wcc"], g, pack, cfg)
+    assert np.array_equal(np.asarray(m["comp"][:-1]), np_minlabel(src, dst, n))
+
+    m, _ = solo_run(catalog["kcore"], g, pack, cfg)
+    k = catalog["kcore"].param("k")
+    assert np.array_equal(np.asarray(m["alive"][:-1]) > 0,
+                          np_kcore_coo(src, dst, n, k))
+
+    m, _ = solo_run(catalog["pagerank_delta"], g, pack, cfg)
+    d = catalog["pagerank_delta"].param("damping")
+    # delta-PR ranks carry a 1/(1-d) scale (see algorithms.pagerank_delta)
+    assert np.allclose(np.asarray(m["rank"][:-1]) * (1 - d),
+                       np_pagerank_coo(src, dst, n, d=d), atol=2e-4)
+
+    m, _ = solo_run(catalog["mis"], g, pack, cfg)
+    assert_valid_mis(np.asarray(m["state"][:-1]), src, dst)
+
+
+# ---------------------------------------------------------------------------
+# (c) every engine path serves the same answer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gname", ["rmat_u", "rmat_d", "broom_path"])
+@pytest.mark.parametrize("name", CATALOG_ALGOS)
+def test_engine_paths_agree(catalog, rmat_u, rmat_d, broom_path, gname, name):
+    """solo == batched == replicated-sharded == edge-sharded, on directed
+    and undirected RMAT plus the broom/path consensus-divergence regression
+    shape, to the tolerance the combiner monoid implies."""
+    g, pack = {"rmat_u": rmat_u, "rmat_d": rmat_d,
+               "broom_path": broom_path}[gname]
+    program = catalog[name]
+    field = program.param("result", program.primary)
+    tol = _tolerance(program)
+    cfg = default_config(g, max_iters=256)
+    sources = [0, g.n_nodes // 2, g.n_nodes - 1]
+
+    m_solo, _ = solo_run(program, g, pack, cfg)
+    ref = np.asarray(m_solo[field][:-1])
+
+    m_b, _ = run_batch(program, g, pack, cfg, sources)
+    for lane in range(len(sources)):     # source-free lanes all replicate
+        assert _close(query_result(m_b, field, lane), ref, tol), (name, lane)
+
+    mesh = make_serving_mesh(1, 1)
+    m_r, _ = run_sharded(program, g, pack, cfg, mesh, sources,
+                         placement="replicated")
+    assert _close(query_result(m_r, field, 0), ref, tol), (name, "replicated")
+
+    m_e, _ = run_sharded(program, g, pack, cfg, mesh, sources,
+                         placement="edge_sharded")
+    assert _close(query_result(m_e, field, 0), ref, tol), (name, "edge")
+
+
+# ---------------------------------------------------------------------------
+# (d) streaming: insert + delete batches through the declared regimes
+# ---------------------------------------------------------------------------
+
+
+# the regime each batch must take, from each program's declared contract:
+# (insert-batch mode, delete-batch mode)
+EXPECTED_MODES = {
+    "wcc": ("monotone-incremental", "monotone-incremental"),
+    "kcore": ("full-recompute", "cascade-resume"),   # inserts resurrect
+    "mis": ("reelect-resume", "reelect-resume"),
+    "pagerank_delta": ("residual-resume", "residual-resume"),
+}
+
+
+@pytest.mark.parametrize("name", CATALOG_ALGOS)
+def test_streaming_insert_and_delete_match_cold(catalog, rmat_u, name):
+    g, _ = rmat_u
+    program = catalog[name]
+    field = program.param("result", program.primary)
+    tol = _tolerance(program)
+    cfg = default_config(g, max_iters=256)
+    sources = [0, g.n_nodes // 2]
+    sg = StreamingGraph(g, delta_cap=64)
+
+    prev, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                        delta=sg.delta)
+
+    rep = sg.apply(inserts=[(1, 100), (9, 40), (77, 3)])
+    m_inc, info = incremental_batch(program, sg, cfg, sources, prev, rep)
+    assert info["mode"] == EXPECTED_MODES[name][0], info
+    m_ref, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                         delta=sg.delta)
+    assert _close(m_inc[field], m_ref[field], tol), (name, "insert")
+
+    # delete live base edges (symmetric base: both directions retract)
+    dels = [(int(g.out.src_idx[i]), int(g.out.col_idx[i])) for i in (0, 5)]
+    rep = sg.apply(deletes=dels)
+    m_inc2, info2 = incremental_batch(program, sg, cfg, sources, m_inc, rep)
+    assert info2["mode"] == EXPECTED_MODES[name][1], info2
+    m_ref2, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                          delta=sg.delta)
+    assert _close(m_inc2[field], m_ref2[field], tol), (name, "delete")
+
+
+def _cycle_triangle():
+    """12-cycle (every vertex out-degree 2 after symmetrization) plus a
+    disjoint triangle: both sit exactly AT the 2-core threshold."""
+    cyc = [(i, (i + 1) % 12) for i in range(12)]
+    tri = [(12, 13), (13, 14), (14, 12)]
+    e = np.asarray(cyc + tri, dtype=np.int64)
+    return from_edges(e[:, 0], e[:, 1], 15, directed=False)
+
+
+def test_kcore_deletion_cascade_unravels_cycle():
+    """One edge delete drops both endpoints below k=2, whose deaths drop
+    their neighbors, and so on around the cycle — the cascade-resume must
+    replay the whole unraveling from the swept affected region while the
+    untouched triangle keeps its survivors, bit-identical to a cold run."""
+    g = _cycle_triangle()
+    program = alg.kcore(k=2)
+    cfg = default_config(g, max_iters=64)
+    sg = StreamingGraph(g, delta_cap=16)
+    sources = [0]
+
+    prev, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                        delta=sg.delta)
+    assert np.asarray(prev["alive"][:-1, 0]).all(), "everything starts at core"
+
+    rep = sg.apply(deletes=[(0, 1)])
+    m_inc, info = incremental_batch(program, sg, cfg, sources, prev, rep)
+    assert info["mode"] == "cascade-resume", info
+    m_ref, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                         delta=sg.delta)
+    assert np.array_equal(np.asarray(m_inc["alive"]),
+                          np.asarray(m_ref["alive"]))
+    alive = np.asarray(m_inc["alive"][:-1, 0]) > 0
+    assert not alive[:12].any(), "the whole cycle must cascade away"
+    assert alive[12:].all(), "the disjoint triangle must survive"
+
+
+def test_mis_reelection_after_insert_between_members(rmat_u):
+    """Insert an edge between two current set members: re-election from the
+    dirtied neighborhood must equal a cold run on the updated graph (unique
+    priorities -> the greedy MIS is unique), and stay a valid MIS."""
+    g, _ = rmat_u
+    program = alg.mis()
+    cfg = default_config(g, max_iters=256)
+    sg = StreamingGraph(g, delta_cap=16)
+    sources = [0]
+
+    prev, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                        delta=sg.delta)
+    inset = np.nonzero(np.asarray(prev["state"][:-1, 0]) == 1.0)[0]
+    assert inset.size >= 2, "need two members to wire together"
+    u, v = int(inset[0]), int(inset[-1])
+
+    rep = sg.apply(inserts=[(u, v)])
+    m_inc, info = incremental_batch(program, sg, cfg, sources, prev, rep)
+    assert info["mode"] == "reelect-resume", info
+    m_ref, _ = run_batch(program, sg.graph, sg.pack, cfg, sources,
+                         delta=sg.delta)
+    assert np.array_equal(np.asarray(m_inc["state"]),
+                          np.asarray(m_ref["state"]))
+    state = np.asarray(m_inc["state"][:-1, 0])
+    assert not (state[u] == 1.0 and state[v] == 1.0), "members now adjacent"
+    src, dst = sg.live_edges_coo()
+    assert_valid_mis(state, src, dst)
+
+
+# ---------------------------------------------------------------------------
+# (e) server round-trip: cache entries refresh in place through an update
+# ---------------------------------------------------------------------------
+
+
+def test_server_refreshes_whole_catalog_across_update(catalog, rmat_u):
+    g, pack = rmat_u
+    cfg = default_config(g, max_iters=256)
+    programs = {a: catalog[a] for a in CATALOG_ALGOS}
+    srv = GraphServer(g, pack, programs, slots=2, cfg=cfg,
+                      cache_capacity=16, delta_cap=16)
+    # pools derive served + resume planes from metadata, never a name table
+    for a, p in programs.items():
+        pool = srv.pools[a]
+        assert pool.result_field == p.param("result", p.primary), a
+        assert pool.cache_extra_fields == tuple(
+            f for f in resume_fields(p) if f != pool.result_field), a
+
+    for a in CATALOG_ALGOS:
+        assert srv.submit(a, 3) is not None
+    srv.drain()
+
+    dels = [(int(g.out.src_idx[i]), int(g.out.col_idx[i])) for i in (0, 7)]
+    st = srv.apply_updates(deletes=dels)      # delete-only: cascade-safe
+    assert st["cache_refreshed"] == len(CATALOG_ALGOS), st
+    assert st["cache_dropped"] == 0, st
+
+    sg = srv.sg
+    for a in CATALOG_ALGOS:
+        rid = srv.submit(a, 3)
+        comp = [c for c in srv.drain() if c.rid == rid][0]
+        assert comp.from_cache, a            # refreshed entry, not recompute
+        p = programs[a]
+        field = p.param("result", p.primary)
+        ref, _ = run_batch(p, sg.graph, sg.pack, cfg, [3], delta=sg.delta)
+        assert _close(comp.result, query_result(ref, field, 0),
+                      _tolerance(p)), a
