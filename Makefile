@@ -1,4 +1,4 @@
-.PHONY: check test smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-catalog smoke-obs smoke-slo smoke-flight bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-catalog bench-obs bench-slo bench-schema bench-check flake-hunt
+.PHONY: check test lint-acc smoke smoke-streaming smoke-sharded smoke-sharded2 smoke-ppr smoke-catalog smoke-obs smoke-slo smoke-flight bench-serving bench-streaming bench-sharded bench-sharded2 bench-ppr bench-catalog bench-obs bench-slo bench-schema bench-check flake-hunt
 
 # tier-1 tests + serving/streaming smokes + bench-record lint (scripts/check.sh)
 check:
@@ -6,6 +6,15 @@ check:
 
 test:
 	PYTHONPATH=src python -m pytest -x -q
+
+# static analysis gate (DESIGN.md §16): acclint over the whole catalog +
+# src/repro/ + registered combiners, then the ruff generic-lint floor
+# (skipped with a notice when the container doesn't ship ruff)
+lint-acc:
+	PYTHONPATH=src python -m repro.launch.acclint
+	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
+	elif python -c "import ruff" >/dev/null 2>&1; then python -m ruff check .; \
+	else echo "[lint-acc] ruff not installed — skipping generic lint floor"; fi
 
 smoke:
 	PYTHONPATH=src python -m repro.launch.serve_graph --requests 8 --slots 4

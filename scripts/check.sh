@@ -20,6 +20,30 @@ echo "== tier-1: pytest =="
 # their runtime budget
 python -m pytest -x -q --durations=10
 
+echo "== acclint: ACC contracts / collective schedules / determinism =="
+# static gate (DESIGN.md §16): jaxpr analyzer over every catalog program x
+# engine entry point (§9 deadlock rule, §12 transfer-free, §8 static
+# shapes), AST conventions + program metadata over src/repro/, and the
+# combiner-algebra probes. Non-baselined findings fail the check
+# (suppressions: ACCLINT_BASELINE.json); the seeded per-rule violations
+# must keep firing (--fixtures exits non-zero by design).
+python -m repro.launch.acclint
+if python -m repro.launch.acclint --fixtures >/dev/null 2>&1; then
+    echo "acclint --fixtures exited zero: seeded violations no longer fire" >&2
+    exit 1
+fi
+
+echo "== ruff: generic lint floor (pyflakes + isort) =="
+# gated: the container may not ship ruff — skip with a notice, never fail
+# on absence (the repo carries the [tool.ruff] config either way)
+if command -v ruff >/dev/null 2>&1; then
+    ruff check .
+elif python -c "import ruff" >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "[check] ruff not installed — skipping generic lint floor"
+fi
+
 echo "== serving smoke =="
 python -m repro.launch.serve_graph --requests 8 --slots 4
 

@@ -1,0 +1,19 @@
+"""repro.analysis — acclint: static checking of ACC contracts, collective
+schedules, and determinism discipline (DESIGN.md §16).
+
+Three backends over one findings/baseline pipeline:
+
+  * `jaxpr_check` — traces every catalog program through the real engine
+    entry points and walks the IR for divergent-barrier collectives (§9),
+    host transfers (§12), and shape-discipline breaks (§8);
+  * `ast_lint` + `meta_check` — convention rules over src/repro/ source
+    and the registered programs' declared metadata (§15);
+  * `combiner_check` — bit-exact property probes of every registered
+    Combiner's monoid algebra.
+
+CLI: `python -m repro.launch.acclint` (wired into scripts/check.sh and
+`make lint-acc`). Suppressions live in ACCLINT_BASELINE.json at the repo
+root; deliberate per-rule violations in `fixtures` (run via --fixtures).
+"""
+
+from .findings import RULES, Finding, apply_baseline, load_baseline  # noqa: F401

@@ -1,0 +1,161 @@
+"""AST backend: convention rules over `src/repro/` source (ACC-A201..A203
+— DESIGN.md §16). Each rule bans a defect class a previous PR fixed by
+hand; the linter keeps it out.
+
+The walker works on parsed source, so strings/comments can't trip rules,
+and every finding anchors to a real file:line.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, Optional
+
+from .findings import Finding
+
+#: catalog algorithm names — the string literals whose `.name ==` comparison
+#: constitutes program dispatch (combiner dispatch, `comb.name == 'sum'`,
+#: compares monoid names and stays legal: the monoid IS the declared
+#: metadata)
+ALGO_NAMES = frozenset({
+    "bfs", "sssp", "wcc", "ppr", "ppr_delta", "pagerank", "pagerank_delta",
+    "kcore", "mis", "bp",
+})
+
+#: numpy ufuncs whose unordered `.at` scatter the determinism doctrine bans
+#: in core/ + streaming/ (PR 9's residual flake: `np.add.at` association
+#: order depends on duplicate layout; `np.add.reduceat` over a stable sort
+#: is the pinned replacement)
+UFUNC_NAMES = frozenset({
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "logical_or", "logical_and", "bitwise_or", "bitwise_and", "fmax", "fmin",
+})
+
+#: directories (relative to the scan root) where ACC-A202 applies
+SCATTER_SCOPES = ("core", "streaming")
+#: directory whose files ARE the §12 device->host chokepoint (ACC-A203 exempt)
+FETCH_CHOKEPOINT = "obs"
+#: files the linter never scans (deliberate violations live here)
+EXCLUDED_BASENAMES = ("fixtures.py",)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """`np.add.at` -> 'np.add.at'; None for non-trivial expressions."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _str_consts(node: ast.AST) -> Iterable[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        yield node.value
+    elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        for e in node.elts:
+            yield from _str_consts(e)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.findings: list[Finding] = []
+        top = relpath.replace(os.sep, "/").split("/", 1)[0]
+        self.in_scatter_scope = top in SCATTER_SCOPES
+        self.in_chokepoint = top == FETCH_CHOKEPOINT
+
+    def _flag(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(
+            Finding(rule, self.relpath, getattr(node, "lineno", 0), msg))
+
+    # -- ACC-A201: program-name string dispatch ------------------------------
+
+    def visit_Compare(self, node: ast.Compare) -> None:
+        left_is_name = (isinstance(node.left, ast.Attribute)
+                        and node.left.attr == "name")
+        for op, comp in zip(node.ops, node.comparators):
+            algos = ()
+            if left_is_name and isinstance(op, (ast.Eq, ast.NotEq, ast.In,
+                                                ast.NotIn)):
+                algos = [s for s in _str_consts(comp) if s in ALGO_NAMES]
+            if algos:
+                self._flag(
+                    "ACC-A201", node,
+                    f"dispatch on program name {algos!r} — consult declared "
+                    "program metadata (`program.param(...)`, combiner kind, "
+                    "incremental contract) instead (DESIGN.md §15)")
+        self.generic_visit(node)
+
+    # -- ACC-A202 / ACC-A203: calls ------------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = _dotted(node.func)
+        if dotted:
+            parts = dotted.split(".")
+            # np.<ufunc>.at(...) — unordered scatter accumulation
+            if (self.in_scatter_scope and len(parts) == 3
+                    and parts[0] in ("np", "numpy")
+                    and parts[1] in UFUNC_NAMES and parts[2] == "at"):
+                self._flag(
+                    "ACC-A202", node,
+                    f"`{dotted}` scatter: association order depends on the "
+                    "duplicate layout of the index batch — pin it with "
+                    f"`np.{parts[1]}.reduceat` over a stable argsort "
+                    "(the PR 9 residual-flake fix idiom)")
+            # jax.device_get(...) outside the obs chokepoint
+            if (not self.in_chokepoint and len(parts) == 2
+                    and parts[0] == "jax" and parts[1] == "device_get"):
+                self._flag(
+                    "ACC-A203", node,
+                    "`jax.device_get` outside `repro.obs` — all telemetry "
+                    "device->host fetches go through `obs.device_fetch` so "
+                    "TRANSFER_COUNT accounts for them (DESIGN.md §12)")
+        # x.block_until_ready() outside the obs chokepoint
+        if (not self.in_chokepoint and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "block_until_ready"):
+            self._flag(
+                "ACC-A203", node,
+                "`.block_until_ready()` outside `repro.obs` — host syncs "
+                "are the obs layer's job (`obs.device_fetch`); engine code "
+                "must stay async (DESIGN.md §12)")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, relpath: str) -> list[Finding]:
+    """Lint one file's source. `relpath` is relative to the scan root
+    (`src/repro/`) — scope rules key off its first path component."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("ACC-A201", relpath, e.lineno or 0,
+                        f"unparseable source: {e.msg}")]
+    v = _Visitor(relpath)
+    v.visit(tree)
+    return v.findings
+
+
+def lint_tree(root: str):
+    """Lint every .py under `root` (the src/repro/ package directory).
+    Returns (findings, n_files)."""
+    findings: list[Finding] = []
+    n = 0
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames.sort()
+        for fn in sorted(filenames):
+            if not fn.endswith(".py") or fn in EXCLUDED_BASENAMES:
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root)
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            for fd in lint_source(src, rel):
+                # re-anchor to a path usable from the repo root
+                findings.append(Finding(fd.rule,
+                                        os.path.join("src/repro", rel),
+                                        fd.line, fd.message))
+            n += 1
+    return findings, n

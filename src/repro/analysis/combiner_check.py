@@ -1,0 +1,173 @@
+"""Combiner backend: ACC-C401..C403 — property-probe every registered
+Combiner for the algebra its engine contracts assume (DESIGN.md §16).
+
+Everything downstream leans on the monoid laws: the keyed segment combine
+is only order-free if ⊕ is commutative+associative with a true identity
+(the sentinel scratch slot IS the identity); the §9 edge-shard merge
+psums/pmins partial combines across 'model' assuming the same; the serving
+cache's bit-exactness and the batched-vs-solo agreement tests assume the
+pinned reduction tree commutes with batching. `vote` dedup-free
+re-expansion additionally needs idempotency.
+
+The probes are bit-exact, not approximate: sample values are dyadic
+rationals (k/8) well inside float32's 24-bit mantissa, so even `sum` is
+associative on them EXACTLY — a law failure is a real algebra bug, never
+float noise.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, Optional
+
+import numpy as np
+
+from .findings import Finding
+
+#: dyadic-rational float32 samples: closed under + (within range), so every
+#: monoid law below holds bit-exactly for min/max/sum
+_SAMPLES = np.asarray([-2.5, -0.375, 0.0, 0.125, 1.0, 3.75], np.float32)
+
+
+def _path(comb) -> str:
+    return f"combiner:{comb.name}/{comb.kind}"
+
+
+def _eq(a, b) -> bool:
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def check_combiner(comb) -> list[Finding]:
+    import jax.numpy as jnp
+
+    path = _path(comb)
+    out: list[Finding] = []
+
+    def flag(rule: str, msg: str) -> None:
+        out.append(Finding(rule, path, 0, msg))
+
+    try:
+        ident = np.asarray(comb.identity(jnp.float32))
+    except Exception as e:                              # noqa: BLE001
+        flag("ACC-C401", f"identity() raised {type(e).__name__}: {e}")
+        return out
+
+    xs = [jnp.asarray(v) for v in _SAMPLES]
+    iv = jnp.asarray(ident)
+
+    # -- C401: monoid laws ---------------------------------------------------
+    for x in xs:
+        if not (_eq(comb.pair(iv, x), x) and _eq(comb.pair(x, iv), x)):
+            flag("ACC-C401",
+                 f"identity law fails: pair(identity, {float(x)}) != "
+                 f"{float(x)} — the sentinel scratch slot would leak into "
+                 "segment combines")
+            break
+    for a, b, c in itertools.product(xs, repeat=3):
+        if not _eq(comb.pair(comb.pair(a, b), c),
+                   comb.pair(a, comb.pair(b, c))):
+            flag("ACC-C401",
+                 f"associativity fails on ({float(a)}, {float(b)}, "
+                 f"{float(c)}) — segment/tree reductions are order-"
+                 "dependent")
+            break
+    for a, b in itertools.product(xs, repeat=2):
+        if not _eq(comb.pair(a, b), comb.pair(b, a)):
+            flag("ACC-C401",
+                 f"commutativity fails on ({float(a)}, {float(b)}) — "
+                 "edge order would leak into combines")
+            break
+
+    # -- C402: idempotency declaration ---------------------------------------
+    idem_holds = all(_eq(comb.pair(x, x), x) for x in xs)
+    if comb.idempotent and not idem_holds:
+        flag("ACC-C402",
+             "declared idempotent but pair(x, x) != x — frontier "
+             "duplicates would double-apply")
+    if comb.kind == "vote" and not idem_holds:
+        flag("ACC-C402",
+             "'vote' kind on a non-idempotent monoid — vote semantics skip "
+             "dedup before re-expansion (paper §3.2)")
+
+    # -- C403: segment vs pairwise fold vs pinned tree -----------------------
+    rng = np.random.default_rng(7)
+    e, n, q = 23, 5, 3
+    vals = jnp.asarray(rng.choice(_SAMPLES, size=(e,)))
+    ids = jnp.asarray(rng.integers(0, n, size=(e,)), jnp.int32)
+    try:
+        seg = np.asarray(comb.segment(vals, ids, n))
+    except Exception as ex:                             # noqa: BLE001
+        flag("ACC-C403", f"segment() raised {type(ex).__name__}: {ex}")
+        return out
+    ref = np.full((n,), ident, np.float32)
+    vn, idn = np.asarray(vals), np.asarray(ids)
+    for i in range(e):                      # sequential left fold, lane order
+        ref[idn[i]] = np.asarray(comb.pair(jnp.asarray(ref[idn[i]]),
+                                           jnp.asarray(vn[i])))
+    if not _eq(seg, ref):
+        flag("ACC-C403",
+             "segment() disagrees with the sequential lane-order pair() "
+             "fold on dyadic samples — the keyed combine is not the "
+             "monoid it claims")
+    # batched stack: every row of segment_stacked must equal its own
+    # unbatched segment() bit-for-bit (the serving engine's layout
+    # independence)
+    vq = jnp.asarray(rng.choice(_SAMPLES, size=(q, e)))
+    iq = jnp.asarray(rng.integers(0, n, size=(q, e)), jnp.int32)
+    try:
+        stacked = np.asarray(comb.segment_stacked(vq, iq, n))
+        rows = np.stack([np.asarray(comb.segment(vq[r], iq[r], n))
+                         for r in range(q)])
+        if not _eq(stacked, rows):
+            flag("ACC-C403",
+                 "segment_stacked() row differs bitwise from the unbatched "
+                 "segment() — batching changed the combine")
+    except Exception as ex:                             # noqa: BLE001
+        flag("ACC-C403",
+             f"segment_stacked() raised {type(ex).__name__}: {ex}")
+    # the pinned halving tree must commute with a trailing batch axis
+    # (reduce_axis_tree is the engine's batched-vs-solo bit-identity pin)
+    try:
+        stack = jnp.asarray(rng.choice(_SAMPLES, size=(6, n, q)))
+        tree_b = np.asarray(comb.reduce_axis_tree(stack, 0))
+        cols = np.stack([np.asarray(comb.reduce_axis_tree(stack[:, :, c], 0))
+                         for c in range(q)], axis=-1)
+        if not _eq(tree_b, cols):
+            flag("ACC-C403",
+                 "reduce_axis_tree() result depends on the trailing batch "
+                 "axis — the pinned association tree is not layout-"
+                 "independent")
+    except Exception as ex:                             # noqa: BLE001
+        flag("ACC-C403",
+             f"reduce_axis_tree() raised {type(ex).__name__}: {ex}")
+    return out
+
+
+def registered_combiners(programs: Optional[dict] = None) -> list:
+    """The module-level combiners plus every one a catalog program uses,
+    deduped by (name, kind, type)."""
+    from repro.core import acc
+
+    if programs is None:
+        from repro.launch.catalog import make_catalog
+        programs = make_catalog()
+    combs = [acc.MIN_VOTE, acc.MIN_AGG, acc.SUM_AGG, acc.MAX_VOTE]
+    combs += [p.combiner for p in programs.values()]
+    seen, out = set(), []
+    for c in combs:
+        key = (type(c).__name__, c.name, c.kind)
+        if key not in seen:
+            seen.add(key)
+            out.append(c)
+    return out
+
+
+def check_registered(programs: Optional[dict] = None,
+                     extra: Iterable = ()) -> tuple:
+    """ACC-C401..C403 over every registered combiner (+ `extra` for
+    fixtures). Returns (findings, n)."""
+    combs = registered_combiners(programs) + list(extra)
+    findings: list[Finding] = []
+    for c in combs:
+        findings.extend(check_combiner(c))
+    return findings, len(combs)

@@ -1,0 +1,158 @@
+"""Finding/rule plumbing for `repro.analysis` (acclint — DESIGN.md §16).
+
+A finding is one violation of one rule at one anchor (file:line for AST
+rules, an entry-point pseudo-path like `jaxpr:bfs/sharded_edge/run` for IR
+rules, `combiner:min/vote` for algebra probes). The committed baseline file
+(`ACCLINT_BASELINE.json` at the repo root) suppresses known findings by
+(rule, path) with a mandatory human-written reason, so the gate starts
+green and ratchets: new findings fail, baselined ones are reported but
+don't, and stale suppressions are surfaced for deletion.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Optional
+
+#: rule catalog: id -> one-line contract statement. The long-form catalog
+#: (what each rule guards, how to fix, how to suppress) is DESIGN.md §16.
+RULES = {
+    # -- jaxpr backend (IR-level contracts) ---------------------------------
+    "ACC-J101": (
+        "collective primitive inside a while_loop/cond whose trip count or "
+        "predicate can vary per shard (deadlock-free global barrier, §9)"),
+    "ACC-J102": (
+        "host callback / device transfer primitive reachable from an engine "
+        "jaxpr (telemetry-off paths must be transfer-free, §12)"),
+    "ACC-J103": (
+        "engine entry point failed abstract tracing or produced a "
+        "non-static output shape (streaming static-shape discipline, §8)"),
+    # -- AST / convention backend -------------------------------------------
+    "ACC-A201": (
+        "program-name string dispatch (`<x>.name == '<algo>'`) — serving "
+        "layers must dispatch on declared program metadata (§15)"),
+    "ACC-A202": (
+        "unordered scatter accumulation (`np.<ufunc>.at`) in core/ or "
+        "streaming/ — association order must be pinned (reduceat over a "
+        "stable sort; the PR 9 residual-flake mechanism class)"),
+    "ACC-A203": (
+        "direct device->host fetch (`jax.device_get` / "
+        "`.block_until_ready()`) outside the `obs.device_fetch` chokepoint "
+        "(§12 TRANSFER_COUNT accounting)"),
+    "ACC-M301": (
+        "registered ACC program missing required metadata (declared "
+        "'result'; residual block incl. with_tol where kind='residual'; "
+        "'resume_fields' where an incremental contract is declared, §15)"),
+    # -- combiner algebra backend -------------------------------------------
+    "ACC-C401": (
+        "combiner violates the monoid laws (identity / associativity / "
+        "commutativity) its segment combine and cache keys rely on"),
+    "ACC-C402": (
+        "combiner idempotency declaration mismatch (declared idempotent "
+        "but pair(a,a) != a, or 'vote' kind on a non-idempotent monoid)"),
+    "ACC-C403": (
+        "combiner segment/pairwise/tree reductions disagree (the pinned "
+        "reduction-tree doctrine behind batched bit-identity, §7/§9)"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str        # file path, or pseudo-path (jaxpr:<entry>, combiner:<name>)
+    line: int        # 1-based; 0 when not anchored to a source line
+    message: str
+
+    def anchor(self) -> str:
+        return f"{self.path}:{self.line}" if self.line else self.path
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+# ---------------------------------------------------------------------------
+# baseline / suppression file
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Optional[str]) -> list[dict]:
+    """Parse the suppression file. Each entry must carry rule, path and a
+    non-empty reason; malformed entries raise (the gate must not silently
+    widen)."""
+    if path is None:
+        return []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return []
+    entries = doc.get("suppressions", [])
+    out = []
+    for i, e in enumerate(entries):
+        if not isinstance(e, dict) or not e.get("rule") or not e.get("path") \
+                or not str(e.get("reason", "")).strip():
+            raise ValueError(
+                f"{path}: suppression #{i} must be an object with non-empty "
+                f"'rule', 'path' and 'reason' fields, got {e!r}")
+        if e["rule"] not in RULES:
+            raise ValueError(
+                f"{path}: suppression #{i} names unknown rule {e['rule']!r}")
+        out.append(e)
+    return out
+
+
+def apply_baseline(findings: Iterable[Finding], baseline: list[dict]):
+    """Split findings into (active, suppressed) and report stale suppression
+    entries (matched nothing — delete them)."""
+    active: list[Finding] = []
+    suppressed: list[Finding] = []
+    hits = [0] * len(baseline)
+    for f in findings:
+        idx = next((i for i, e in enumerate(baseline)
+                    if e["rule"] == f.rule and e["path"] == f.path), None)
+        if idx is None:
+            active.append(f)
+        else:
+            hits[idx] += 1
+            suppressed.append(f)
+    stale = [e for e, h in zip(baseline, hits) if h == 0]
+    return active, suppressed, stale
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+
+def render(active: list[Finding], suppressed: list[Finding],
+           stale: list[dict], checked: dict) -> str:
+    lines = []
+    for scope, n in sorted(checked.items()):
+        lines.append(f"[acclint] checked {scope}: {n}")
+    for f in sorted(active, key=lambda f: (f.rule, f.path, f.line)):
+        lines.append(f"[acclint] {f.rule} {f.anchor()}: {f.message}")
+    if suppressed:
+        lines.append(f"[acclint] {len(suppressed)} finding(s) suppressed by "
+                     "baseline")
+    for e in stale:
+        lines.append(f"[acclint] WARNING stale suppression (matched "
+                     f"nothing, delete it): {e['rule']} {e['path']}")
+    verdict = ("OK" if not active
+               else f"{len(active)} non-baselined finding(s)")
+    lines.append(f"[acclint] {verdict}")
+    return "\n".join(lines)
+
+
+def to_json(active: list[Finding], suppressed: list[Finding],
+            stale: list[dict], checked: dict) -> dict:
+    return {
+        "tool": "acclint",
+        "rules": dict(RULES),
+        "checked": checked,
+        "findings": [f.to_dict() for f in active],
+        "suppressed": [f.to_dict() for f in suppressed],
+        "stale_suppressions": stale,
+        "ok": not active,
+    }

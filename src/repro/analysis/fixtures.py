@@ -1,0 +1,224 @@
+"""Seeded violations — one per acclint rule ID (DESIGN.md §16).
+
+Every rule ships with a fixture that deliberately violates it, so the
+gate's failure path is itself tested: `python -m repro.launch.acclint
+--fixtures` must exit non-zero with every rule ID present, and
+tests/test_analysis.py pins each fixture to its rule. This file is
+excluded from the AST scan (ast_lint.EXCLUDED_BASENAMES) — the violations
+below are the point.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# jaxpr fixtures (ACC-J101/J102/J103)
+# ---------------------------------------------------------------------------
+
+
+def deadlock_jaxpr():
+    """§9 violation: a shard_map'd while_loop whose trip count depends on
+    the shard's OWN slice of the data (shard-varying cond) with a psum over
+    the same axis inside the body — one shard exits, its peer blocks at
+    the barrier forever."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    def shard_fn(x):
+        def cond(c):
+            # local sum of the shard's slice: varies per shard along 'data'
+            return c[1] < jnp.sum(c[0]).astype(jnp.int32)
+
+        def body(c):
+            s, i = c
+            s = s - jax.lax.psum(jnp.max(s), "data") * 0.125
+            return (s, i + 1)
+
+        s, _ = jax.lax.while_loop(cond, body, (x, jnp.int32(0)))
+        return s
+
+    f = compat.shard_map(shard_fn, mesh=mesh, in_specs=(P("data"),),
+                         out_specs=P("data"))
+    x = jnp.arange(jax.device_count() * 4, dtype=jnp.float32)
+    return jax.make_jaxpr(f)(x)
+
+
+def conformant_loop_jaxpr():
+    """§9-conformant counterpart: the loop carries the psum'd global live
+    count (the replicated-global discipline of serving/sharded.py), so the
+    cond is uniform along 'data' and the in-loop psum is safe."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    mesh = compat.make_mesh((jax.device_count(),), ("data",))
+
+    def shard_fn(x):
+        def live(s):
+            return jax.lax.psum(jnp.sum(s > 0).astype(jnp.int32), "data")
+
+        def cond(c):
+            return c[1] > 0                 # psum'd carry: uniform
+
+        def body(c):
+            s, _ = c
+            s = s - 0.125
+            return (s, live(s))
+
+        s, _ = jax.lax.while_loop(cond, body, (x, live(x)))
+        return s
+
+    f = compat.shard_map(shard_fn, mesh=mesh, in_specs=(P("data"),),
+                         out_specs=P("data"))
+    x = jnp.arange(jax.device_count() * 4, dtype=jnp.float32)
+    return jax.make_jaxpr(f)(x)
+
+
+def callback_jaxpr():
+    """§12 violation: a host callback buried in an otherwise-pure step."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def f(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * np.float32(2),
+            jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1.0
+
+    return jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+
+
+def dynamic_shape_thunk():
+    """§8 violation: boolean-mask indexing gives a data-dependent output
+    shape — it cannot trace abstractly (ACC-J103 via trace failure)."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        return x[x > 0]
+
+    return jax.make_jaxpr(f)(jnp.arange(8, dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# AST fixtures (ACC-A201/A202/A203): (relpath-under-src/repro, source)
+# ---------------------------------------------------------------------------
+
+AST_FIXTURES = (
+    ("ACC-A201", "serving/fixture_dispatch.py",
+     'def route(program, pool):\n'
+     '    if program.name == "bfs":\n'
+     '        return pool.traversal\n'
+     '    return pool.generic\n'),
+    ("ACC-A202", "streaming/fixture_scatter.py",
+     'import numpy as np\n\n'
+     'def seed(dead_in, dst, contrib):\n'
+     '    np.add.at(dead_in, dst, contrib)\n'
+     '    return dead_in\n'),
+    ("ACC-A203", "serving/fixture_fetch.py",
+     'import jax\n\n'
+     'def harvest(st):\n'
+     '    st.tele.block_until_ready()\n'
+     '    return jax.device_get(st.tele)\n'),
+)
+
+
+# ---------------------------------------------------------------------------
+# metadata fixture (ACC-M301)
+# ---------------------------------------------------------------------------
+
+
+def bad_meta_program():
+    """A syntactically valid ACCProgram whose declarations are broken three
+    ways: 'vote' on a non-idempotent monoid, kind='residual' without the
+    refresh-math block or with_tol, and no declared result field."""
+    from repro.core import acc
+
+    def init(n, deg, source=None):
+        raise NotImplementedError("metadata fixture — never run")
+
+    return acc.ACCProgram(
+        name="bad_meta",
+        combiner=acc.Combiner("sum", "vote"),
+        init=init,
+        compute=lambda s, w, r: s["val"],
+        active=lambda new, old, it: new["val"] != old["val"],
+        params=(("kind", "residual"), ("incremental", "sometimes")),
+    )
+
+
+# ---------------------------------------------------------------------------
+# combiner fixtures (ACC-C401/C402/C403)
+# ---------------------------------------------------------------------------
+
+
+def broken_combiners():
+    """[(combiner, expected_rule)] — each breaks exactly one algebra rule."""
+    import jax.numpy as jnp
+
+    from repro.core import acc
+
+    class _MeanPair(acc.Combiner):
+        """'sum' whose pair() averages: no identity, not associative."""
+
+        def pair(self, a, b):
+            return (a + b) * jnp.asarray(0.5, a.dtype)
+
+    class _LyingIdempotent(acc.Combiner):
+        """'sum' that CLAIMS idempotency (pair(x,x) = 2x != x)."""
+
+        @property
+        def idempotent(self):
+            return True
+
+    class _ShiftedSegment(acc.Combiner):
+        """min whose segment() output is biased by an eighth — the keyed
+        combine disagrees with the sequential pair() fold on every lane."""
+
+        def segment(self, vals, ids, num):
+            out = super().segment(vals, ids, num)
+            return out + jnp.asarray(0.125, out.dtype)
+
+    return [
+        (_MeanPair("sum", "aggregation"), "ACC-C401"),
+        (_LyingIdempotent("sum", "aggregation"), "ACC-C402"),
+        (_ShiftedSegment("min", "vote"), "ACC-C403"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def run_all():
+    """Run every backend over its seeded violations. Returns (findings,
+    checked) — the CLI's --fixtures mode; must produce every rule ID."""
+    from . import ast_lint, combiner_check, jaxpr_check, meta_check
+
+    findings = []
+    findings.extend(jaxpr_check.check_entry(
+        "fixture:jaxpr/deadlock", deadlock_jaxpr))
+    findings.extend(jaxpr_check.check_entry(
+        "fixture:jaxpr/conformant", conformant_loop_jaxpr))
+    findings.extend(jaxpr_check.check_entry(
+        "fixture:jaxpr/callback", callback_jaxpr))
+    findings.extend(jaxpr_check.check_entry(
+        "fixture:jaxpr/dynamic_shape", dynamic_shape_thunk))
+    for rule, rel, src in AST_FIXTURES:
+        for f in ast_lint.lint_source(src, rel):
+            findings.append(f.__class__(f.rule, f"fixture:{rel}", f.line,
+                                        f.message))
+    findings.extend(meta_check.check_program("bad_meta", bad_meta_program()))
+    for comb, _rule in broken_combiners():
+        findings.extend(combiner_check.check_combiner(comb))
+    checked = {"fixture_entries": 4 + len(AST_FIXTURES) + 1
+               + len(broken_combiners())}
+    return findings, checked

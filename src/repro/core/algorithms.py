@@ -55,7 +55,7 @@ def bfs(src: int) -> ACCProgram:
 
     return ACCProgram(
         name="bfs", combiner=MIN_VOTE, init=init, compute=compute,
-        active=active, primary="dist",
+        active=active, primary="dist", params=(("result", "dist"),),
     )
 
 
@@ -80,7 +80,7 @@ def sssp(src: int) -> ACCProgram:
 
     return ACCProgram(
         name="sssp", combiner=MIN_AGG, init=init, compute=compute,
-        active=active, primary="dist",
+        active=active, primary="dist", params=(("result", "dist"),),
     )
 
 

@@ -1,0 +1,147 @@
+"""acclint — the repro.analysis CLI (DESIGN.md §16).
+
+    python -m repro.launch.acclint                # all backends, full tree
+    python -m repro.launch.acclint --json report.json
+    python -m repro.launch.acclint --backends jaxpr --programs bfs,kcore
+    python -m repro.launch.acclint --fixtures     # seeded violations: must
+                                                  # exit non-zero, every rule
+
+Exit codes follow scripts/bench_schema.py: 0 = clean (baselined findings
+reported but not fatal), 1 = non-baselined findings, 2 = usage/config
+error (e.g. malformed baseline). Suppressions: ACCLINT_BASELINE.json at
+the repo root — entries are {rule, path, reason}, reason mandatory.
+
+The jaxpr backend traces sharded entry points, so the CLI forces an
+8-device host platform BEFORE jax loads (same trick as the sharded
+smokes); under pytest the library entry points instead adapt to whatever
+device count the suite runs with.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: mesh extents the forced host platform gives the sharded traces
+_FORCED_DEVICES = 8
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="acclint",
+        description="static checks of ACC contracts, collective schedules, "
+                    "and determinism discipline (DESIGN.md §16)")
+    ap.add_argument("--backends", default="jaxpr,ast,combiner",
+                    help="comma list of: jaxpr, ast (includes the metadata "
+                         "rules), combiner [default: all]")
+    ap.add_argument("--programs", default=None,
+                    help="comma list of catalog programs for the jaxpr/meta "
+                         "backends [default: the whole catalog]")
+    ap.add_argument("--baseline", default="ACCLINT_BASELINE.json",
+                    help="suppression file [default: %(default)s]")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="write the machine-readable report to PATH "
+                         "('-' = stdout)")
+    ap.add_argument("--fixtures", action="store_true",
+                    help="run the seeded per-rule violations instead of the "
+                         "tree (self-test: exits non-zero, every rule ID)")
+    ap.add_argument("--scale", type=int, default=6,
+                    help="RMAT scale of the trace graph [default: 6]")
+    ap.add_argument("--no-sharded", action="store_true",
+                    help="skip the sharded entry points (fast dev loop)")
+    return ap.parse_args(argv)
+
+
+def run(argv=None) -> int:
+    args = _parse_args(argv if argv is not None else sys.argv[1:])
+    from repro.analysis import apply_baseline, load_baseline
+    from repro.analysis.findings import RULES, render, to_json
+
+    backends = [b.strip() for b in args.backends.split(",") if b.strip()]
+    unknown = [b for b in backends if b not in ("jaxpr", "ast", "combiner")]
+    if unknown:
+        print(f"[acclint] unknown backend(s): {unknown}", file=sys.stderr)
+        return 2
+
+    findings: list = []
+    checked: dict = {}
+
+    if args.fixtures:
+        from repro.analysis import fixtures
+        findings, checked = fixtures.run_all()
+        fired = {f.rule for f in findings}
+        missing = sorted(set(RULES) - fired)
+        checked["rules_fired"] = len(fired)
+        if missing:
+            # a rule whose seeded violation no longer fires is a DEAD rule
+            print(f"[acclint] FIXTURE GAP: rules {missing} produced no "
+                  "finding on their seeded violations", file=sys.stderr)
+        baseline: list = []          # fixtures are never baselined
+    else:
+        try:
+            baseline = load_baseline(args.baseline)
+        except ValueError as e:
+            print(f"[acclint] bad baseline: {e}", file=sys.stderr)
+            return 2
+        programs = None
+        if args.programs is not None:
+            from repro.launch.catalog import make_catalog
+            cat = make_catalog()
+            names = [p.strip() for p in args.programs.split(",") if p.strip()]
+            bad = [p for p in names if p not in cat]
+            if bad:
+                print(f"[acclint] unknown program(s): {bad} "
+                      f"(catalog: {sorted(cat)})", file=sys.stderr)
+                return 2
+            programs = {k: cat[k] for k in names}
+        if "jaxpr" in backends:
+            from repro.analysis import jaxpr_check
+            fs, n = jaxpr_check.check_catalog(
+                programs, scale=args.scale, sharded=not args.no_sharded)
+            findings.extend(fs)
+            checked["jaxpr_entries"] = n
+        if "ast" in backends:
+            import repro
+            from repro.analysis import ast_lint, meta_check
+            root = os.path.dirname(os.path.abspath(repro.__file__))
+            fs, n = ast_lint.lint_tree(root)
+            findings.extend(fs)
+            checked["ast_files"] = n
+            fs, n = meta_check.check_catalog(programs)
+            findings.extend(fs)
+            checked["meta_programs"] = n
+        if "combiner" in backends:
+            from repro.analysis import combiner_check
+            fs, n = combiner_check.check_registered(programs)
+            findings.extend(fs)
+            checked["combiners"] = n
+
+    active, suppressed, stale = apply_baseline(findings, baseline)
+    report = to_json(active, suppressed, stale, checked)
+    if args.json == "-":
+        print(json.dumps(report, indent=2))
+    else:
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(report, f, indent=2)
+        print(render(active, suppressed, stale, checked))
+    if args.fixtures and missing:
+        return 1
+    return 1 if active else 0
+
+
+def main() -> int:
+    # the sharded traces need >1 device per axis to be interesting; force a
+    # host mesh like the check.sh smokes do — only effective if jax is not
+    # yet loaded, so do it before anything imports it
+    if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_FORCED_DEVICES}")
+    return run()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

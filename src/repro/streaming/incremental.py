@@ -294,8 +294,17 @@ def _cascade_seed_state(program, sg, cfg, sources, prev_m,
     q = int(st.active.shape[1])
     alive_prev = np.asarray(prev_m["alive"], np.float32)[:n] > 0   # (n, Q)
     src, dst = sg.live_edges_coo()
+    # per-target dead-predecessor counts, association pinned like the
+    # residual correction above: stable sort by target, one reduceat per
+    # unique target — never np.add.at (whose order follows the duplicate
+    # layout of the batch). Integer counts, so the fp32 plane is exact.
+    dead = (~alive_prev[src]).astype(np.int64)                     # (E, Q)
     dead_in = np.zeros((n, q), np.float32)
-    np.add.at(dead_in, dst, (~alive_prev[src]).astype(np.float32))
+    if dst.size:
+        order = np.argsort(dst, kind="stable")
+        sd, sv = dst[order], dead[order]
+        uniq, starts = np.unique(sd, return_index=True)
+        dead_in[uniq] = np.add.reduceat(sv, starts, axis=0).astype(np.float32)
     live_out = sg.live_out_degrees().astype(np.float32)[:, None]   # (n, 1)
     deg = np.where(alive_prev, np.maximum(live_out - dead_in, 0.0), 0.0)
     dead_now = alive_prev & (deg < k)

@@ -1,0 +1,263 @@
+"""repro.analysis (acclint) — rule catalog, fixtures, and in-tree paths.
+
+The two headline contracts each get a passing in-tree path AND a failing
+fixture (ISSUE acceptance): §9 deadlock rule — the synthetic shard-varying
+loop is flagged, the real edge-sharded engine loop passes; §12 transfer
+rule — the callback fixture is flagged, the real batched telemetry-off
+trace is clean.
+"""
+
+import json
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import ast_lint, combiner_check, fixtures, jaxpr_check, \
+    meta_check
+from repro.analysis.findings import (RULES, Finding, apply_baseline,
+                                     load_baseline)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# §9 deadlock rule (ACC-J101)
+# ---------------------------------------------------------------------------
+
+
+def test_deadlock_fixture_flagged():
+    fs = jaxpr_check.check_entry("fixture:deadlock",
+                                 fixtures.deadlock_jaxpr)
+    assert "ACC-J101" in _rules(fs), fs
+    f, = [x for x in fs if x.rule == "ACC-J101"]
+    assert "psum" in f.message and "data" in f.message
+
+
+def test_conformant_loop_passes():
+    fs = jaxpr_check.check_entry("fixture:conformant",
+                                 fixtures.conformant_loop_jaxpr)
+    assert fs == [], fs
+
+
+def test_edge_sharded_engine_loop_passes():
+    """The real §9-conformant in-tree path: the edge-sharded fused run loop
+    (shard-local cond over 'data', in-loop collectives over 'model' only)
+    and the replicated-global loop (psum'd live-count cond) both trace
+    clean through the deadlock rule."""
+    entries = dict(jaxpr_check.catalog_entries(scale=6))
+    for entry in ("jaxpr:bfs/sharded_edge_sharded_run",
+                  "jaxpr:bfs/sharded_replicated_run"):
+        fs = jaxpr_check.check_entry(entry, entries[entry])
+        assert fs == [], (entry, fs)
+
+
+def test_edge_sharded_telemetry_loop_passes():
+    """Telemetry ON keeps the in-loop tele collectives on 'model' only
+    (serving/sharded.py tele_axes) — still conformant."""
+    entries = dict(jaxpr_check.catalog_entries(scale=6))
+    entry = "jaxpr:bfs/sharded_edge_sharded_tele_run"
+    fs = jaxpr_check.check_entry(entry, entries[entry])
+    assert fs == [], fs
+
+
+# ---------------------------------------------------------------------------
+# §12 transfer-free rule (ACC-J102)
+# ---------------------------------------------------------------------------
+
+
+def test_callback_fixture_flagged():
+    fs = jaxpr_check.check_entry("fixture:callback", fixtures.callback_jaxpr)
+    assert "ACC-J102" in _rules(fs), fs
+
+
+def test_batched_engine_transfer_free():
+    """The real in-tree path: the batched fused loop (telemetry off) must
+    contain no host-transfer primitive at the IR level."""
+    entries = dict(jaxpr_check.catalog_entries(scale=6))
+    fs = jaxpr_check.check_entry("jaxpr:bfs/batched_fused",
+                                 entries["jaxpr:bfs/batched_fused"])
+    assert fs == [], fs
+
+
+def test_dynamic_shape_fixture_flagged():
+    fs = jaxpr_check.check_entry("fixture:dyn", fixtures.dynamic_shape_thunk)
+    assert _rules(fs) == {"ACC-J103"}, fs
+
+
+# ---------------------------------------------------------------------------
+# uniformity dataflow unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_uniformity_psum_uniform_cond_no_flag():
+    """psum INSIDE the loop is fine when the cond reads only psum'd
+    (uniform) carries — the exact replicated-global discipline."""
+    fs = jaxpr_check.check_entry("fixture:conformant",
+                                 fixtures.conformant_loop_jaxpr)
+    assert not [f for f in fs if f.rule == "ACC-J101"]
+
+
+def test_collect_collectives_sees_nested():
+    closed = fixtures.deadlock_jaxpr()
+    names = {n for n, _ in
+             jaxpr_check.collect_collectives(closed.jaxpr)}
+    assert "psum" in names
+
+
+# ---------------------------------------------------------------------------
+# AST rules
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule,rel,src", fixtures.AST_FIXTURES)
+def test_ast_fixture_flagged(rule, rel, src):
+    fs = ast_lint.lint_source(src, rel)
+    assert rule in _rules(fs), (rule, fs)
+    assert all(f.line > 0 for f in fs)
+
+
+def test_ast_combiner_name_dispatch_legal():
+    """`comb.name == 'sum'` is monoid dispatch, not program dispatch."""
+    src = 'def f(comb):\n    return comb.name == "sum"\n'
+    assert ast_lint.lint_source(src, "serving/x.py") == []
+
+
+def test_ast_reduceat_legal_and_scope():
+    """reduceat over a stable sort (the pinned idiom) passes; np.add.at
+    outside core/+streaming/ is out of scope for A202."""
+    ok = ('import numpy as np\n'
+          'def f(v, s, n):\n'
+          '    o = np.argsort(s, kind="stable")\n'
+          '    u, st = np.unique(s[o], return_index=True)\n'
+          '    return np.add.reduceat(v[o], st, axis=0)\n')
+    assert ast_lint.lint_source(ok, "streaming/x.py") == []
+    scatter = ('import numpy as np\n'
+               'def f(a, i, v):\n'
+               '    np.add.at(a, i, v)\n')
+    assert ast_lint.lint_source(scatter, "launch/x.py") == []
+    assert _rules(ast_lint.lint_source(scatter, "core/x.py")) == {"ACC-A202"}
+
+
+def test_ast_obs_chokepoint_exempt():
+    src = 'import jax\ndef fetch(x):\n    return jax.device_get(x)\n'
+    assert ast_lint.lint_source(src, "obs/__init__.py") == []
+    assert _rules(ast_lint.lint_source(src, "serving/x.py")) == {"ACC-A203"}
+
+
+def test_ast_tree_clean():
+    import repro
+    import os
+    root = os.path.dirname(os.path.abspath(repro.__file__))
+    fs, n = ast_lint.lint_tree(root)
+    assert n > 50
+    assert fs == [], fs
+
+
+# ---------------------------------------------------------------------------
+# metadata + combiner rules
+# ---------------------------------------------------------------------------
+
+
+def test_meta_bad_fixture_flagged():
+    fs = meta_check.check_program("bad_meta", fixtures.bad_meta_program())
+    assert _rules(fs) == {"ACC-M301"}
+    assert len(fs) >= 4          # result, vote-idempotency, residual, inc
+
+
+def test_meta_catalog_clean():
+    fs, n = meta_check.check_catalog()
+    assert n >= 9
+    assert fs == [], fs
+
+
+def test_combiner_fixtures_flagged():
+    for comb, rule in fixtures.broken_combiners():
+        fs = combiner_check.check_combiner(comb)
+        assert rule in _rules(fs), (rule, fs)
+
+
+def test_combiner_registered_clean():
+    fs, n = combiner_check.check_registered()
+    assert n >= 4
+    assert fs == [], fs
+
+
+# ---------------------------------------------------------------------------
+# findings / baseline plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding("ACC-A202", "src/repro/streaming/x.py", 12, "m")
+    f2 = Finding("ACC-A203", "src/repro/serving/y.py", 3, "m")
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"version": 1, "suppressions": [
+        {"rule": "ACC-A202", "path": "src/repro/streaming/x.py",
+         "reason": "known, tracked"},
+        {"rule": "ACC-J101", "path": "jaxpr:gone/entry",
+         "reason": "stale entry"},
+    ]}))
+    active, suppressed, stale = apply_baseline([f1, f2],
+                                               load_baseline(str(bl)))
+    assert active == [f2] and suppressed == [f1]
+    assert [e["rule"] for e in stale] == ["ACC-J101"]
+
+
+def test_baseline_requires_reason(tmp_path):
+    bl = tmp_path / "bl.json"
+    bl.write_text(json.dumps({"suppressions": [
+        {"rule": "ACC-A202", "path": "x.py", "reason": "  "}]}))
+    with pytest.raises(ValueError):
+        load_baseline(str(bl))
+
+
+def test_committed_baseline_loads():
+    load_baseline("ACCLINT_BASELINE.json")
+
+
+def test_every_rule_has_fixture():
+    fs, _ = fixtures.run_all()
+    assert _rules(fs) == set(RULES)
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (subprocess, bench_schema.py-style behavior)
+# ---------------------------------------------------------------------------
+
+
+def _cli(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.acclint", *args],
+        capture_output=True, text=True, timeout=600)
+
+
+def test_cli_clean_tree_exits_zero():
+    p = _cli("--backends", "ast,combiner")
+    assert p.returncode == 0, p.stdout + p.stderr
+    assert "[acclint] OK" in p.stdout
+
+
+def test_cli_fixtures_exit_nonzero_all_rules():
+    p = _cli("--fixtures", "--json", "-")
+    assert p.returncode == 1, p.stdout + p.stderr
+    report = json.loads(p.stdout)
+    assert {f["rule"] for f in report["findings"]} == set(RULES)
+    assert report["ok"] is False
+
+
+def test_cli_bad_backend_exits_two():
+    p = _cli("--backends", "nope")
+    assert p.returncode == 2
+
+
+def test_cli_jaxpr_single_program_clean():
+    """One program through every engine entry point, IR-clean (the full-
+    catalog run is check.sh's job — one program keeps the suite fast)."""
+    p = _cli("--backends", "jaxpr", "--programs", "bfs", "--json", "-")
+    assert p.returncode == 0, p.stdout + p.stderr
+    report = json.loads(p.stdout)
+    assert report["checked"]["jaxpr_entries"] >= 8
+    assert report["findings"] == []

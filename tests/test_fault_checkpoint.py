@@ -1,0 +1,141 @@
+"""Smoke tests for the seed's fault-tolerance and checkpoint utilities.
+
+`distributed/fault.py` and `checkpoint/manager.py` shipped with the seed
+unused by the serving stack; the ROADMAP 2-D-placement / fault-tolerance
+work will build on them, so they start from tested code (import + basic
+round-trip per class).
+"""
+
+import json
+import os
+import signal
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.distributed.fault import (Heartbeat, PreemptionGuard,
+                                     SkippableIterator, StepWatchdog)
+
+
+# ---------------------------------------------------------------------------
+# distributed/fault.py
+# ---------------------------------------------------------------------------
+
+
+def test_watchdog_counts_stragglers(monkeypatch):
+    t = iter([0.0, 1.0,            # step 1: 1s -> seeds EMA
+              10.0, 11.0,          # step 2: 1s -> smooth
+              20.0, 30.0,          # step 3: 10s > 3x EMA -> straggler
+              40.0, 41.0])         # step 4: normal again
+    monkeypatch.setattr("repro.distributed.fault.time.monotonic", lambda: next(t))
+    wd = StepWatchdog(straggler_factor=3.0, ema=0.9)
+    flags = []
+    for _ in range(4):
+        wd.start()
+        flags.append(wd.stop())
+    assert flags == [False, False, True, False]
+    s = wd.summary()
+    assert s["steps"] == 4 and s["stragglers"] == 1
+    # the straggler must not poison the EMA
+    assert s["ema_step_time_s"] == pytest.approx(1.0)
+
+
+def test_heartbeat_writes_atomic_json(tmp_path):
+    hb_path = str(tmp_path / "hb.json")
+    hb = Heartbeat(hb_path, interval_s=0.0)
+    hb.beat(7, rank=3)
+    with open(hb_path) as f:
+        doc = json.load(f)
+    assert doc["step"] == 7 and doc["rank"] == 3 and "wall" in doc
+    assert not os.path.exists(hb_path + ".tmp")
+    # a second beat replaces, never appends
+    hb._last = 0.0
+    hb.beat(8)
+    with open(hb_path) as f:
+        assert json.load(f)["step"] == 8
+
+
+def test_heartbeat_respects_interval(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"), interval_s=9999.0)
+    hb.beat(1)
+    mtime = os.path.getmtime(hb.path)
+    hb.beat(2)                       # inside the interval: no rewrite
+    assert os.path.getmtime(hb.path) == mtime
+    with open(hb.path) as f:
+        assert json.load(f)["step"] == 1
+
+
+def test_preemption_guard_sets_flag_and_restores():
+    orig = signal.getsignal(signal.SIGTERM)
+    guard = PreemptionGuard().install()
+    try:
+        assert not guard.preempted
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert guard.preempted
+    finally:
+        guard.uninstall()
+    assert signal.getsignal(signal.SIGTERM) is orig
+
+
+def test_skippable_iterator_skips_failed_shard():
+    def make(shard):
+        if shard == 1:
+            raise RuntimeError("dead host")
+        return iter([f"s{shard}a", f"s{shard}b"])
+
+    it = SkippableIterator(make, n_shards=3)
+    got = [next(it) for _ in range(4)]
+    assert got == ["s0a", "s0b", "s2a", "s2b"]
+    assert 1 in it.skipped
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/manager.py
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"m": {"dist": jnp.arange(8, dtype=jnp.float32),
+                  "rank": jnp.ones((4, 2), jnp.float32)},
+            "step_count": jnp.asarray(3, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = _tree()
+    ckpt.save(path, tree, step=11, extra={"graph_version": 5})
+    man = ckpt.manifest(path)
+    assert man["step"] == 11 and man["extra"]["graph_version"] == 5
+    restored = ckpt.restore(path, _tree())
+    for k in ("dist", "rank"):
+        np.testing.assert_array_equal(np.asarray(restored["m"][k]),
+                                      np.asarray(tree["m"][k]))
+    assert int(restored["step_count"]) == 3
+    assert not any(d.startswith(".tmp") for d in os.listdir(str(tmp_path)))
+
+
+def test_manager_rotation_and_restore_latest(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    assert mgr.latest_step() is None
+    assert mgr.restore_latest(_tree()) == (None, None)
+    for step in (1, 2, 3):
+        t = _tree()
+        t["step_count"] = jnp.asarray(step, jnp.int32)
+        mgr.save(step, t, extra={"s": step})
+    assert mgr.latest_step() == 3
+    kept = sorted(d for d in os.listdir(str(tmp_path))
+                  if d.startswith("step_"))
+    assert kept == ["step_2", "step_3"]          # keep-N rotation
+    restored, man = mgr.restore_latest(_tree())
+    assert man["step"] == 3 and int(restored["step_count"]) == 3
+
+
+def test_manager_async_save_waits(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), keep_n=3, async_save=True)
+    mgr.save(5, _tree())
+    mgr.wait()
+    assert mgr.latest_step() == 5
+    restored, man = mgr.restore_latest(_tree())
+    assert man["step"] == 5 and int(restored["step_count"]) == 3
